@@ -1,0 +1,33 @@
+"""Fig. 10 proxy: bitwidth sensitivity — fix W sweep A, fix A sweep W.
+
+Paper claims: RTN degrades sharply below A5/W5; VersaQ stays stable down
+to A4 and W3.
+"""
+import jax.numpy as jnp
+
+from benchmarks import common
+from repro.core import versaq as V
+
+
+def _err(policy):
+    tot = 0.0
+    for seed in range(3):
+        x, w = common.premise_tensors(seed)
+        ql = V.prepare_linear(w, policy, rotate_input_online=True)
+        tot += float(jnp.linalg.norm(V.apply_linear(ql, x) - x @ w) / jnp.linalg.norm(x @ w))
+    return tot / 3
+
+
+def main():
+    for a in (8, 6, 5, 4, 3):
+        r = _err(V.QuantPolicy(4, a, "rtn"))
+        v = _err(V.QuantPolicy(4, a, "versaq"))
+        common.emit(f"fig10.sweepA.w4a{a}", 0.0, f"rtn={r:.4f} versaq={v:.4f} gain=x{r/v:.2f}")
+    for w in (8, 6, 5, 4, 3):
+        r = _err(V.QuantPolicy(w, 8, "rtn"))
+        v = _err(V.QuantPolicy(w, 8, "versaq"))
+        common.emit(f"fig10.sweepW.w{w}a8", 0.0, f"rtn={r:.4f} versaq={v:.4f} gain=x{r/v:.2f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,58 @@
+"""Fig. 11 proxy: step-wise ablation RTN -> +WHT -> +WHT+DCT at W4A4.
+
+The paper reports 29% / 35% average stepwise gains; we check each step
+reduces the error on the paper-premise tensors and report the ratios.
+"""
+import jax.numpy as jnp
+
+from benchmarks import common
+from repro.core import versaq as V
+
+
+def _werr(w, use_dct, bits=4):
+    from repro.core.quantize import quantize_weight
+    from repro.core import transforms as T
+    w2 = V.dct_cols(w) if use_dct else w
+    q = quantize_weight(w2, bits)
+    deq = q.dequantize()
+    if use_dct:
+        deq = T.apply_blocked(deq, T.dct_matrix(64), 64)
+    return float(jnp.linalg.norm(deq - w) / jnp.linalg.norm(w))
+
+
+def main():
+    errs = {}
+    for m in ("rtn", "quarot", "versaq"):
+        tot = 0.0
+        for seed in range(4):
+            x, w = common.premise_tensors(seed)
+            ql = V.prepare_linear(w, V.QuantPolicy(4, 4, m), rotate_input_online=True)
+            tot += float(jnp.linalg.norm(V.apply_linear(ql, x) - x @ w) / jnp.linalg.norm(x @ w))
+        errs[m] = tot / 4
+    step1 = (errs["rtn"] - errs["quarot"]) / errs["rtn"] * 100
+    step2 = (errs["quarot"] - errs["versaq"]) / errs["quarot"] * 100
+    common.emit(
+        "fig11.ablation.w4a4", 0.0,
+        f"rtn={errs['rtn']:.4f} +WHT={errs['quarot']:.4f} (-{step1:.0f}%) "
+        f"+DCT={errs['versaq']:.4f} (-{step2:.0f}%)",
+    )
+    # DCT standalone (weight-only, no WHT row-mixing): the structural-
+    # preservation claim in isolation — heavy-tailed weights
+    import numpy as np
+    import jax.numpy as _j
+    tot_n = tot_d = 0.0
+    for seed in range(4):
+        _, w = common.premise_tensors(seed)
+        tot_n += _werr(w, False)
+        tot_d += _werr(w, True)
+    common.emit(
+        "fig11.dct_standalone.w4", 0.0,
+        f"no_dct={tot_n/4:.4f} dct={tot_d/4:.4f} gain=x{tot_n/tot_d:.2f} "
+        "(NOTE: with the input-side WHT already Gaussianizing weight columns, "
+        "the incremental DCT gain shrinks — deviation from paper Fig. 11 "
+        "magnitude recorded in EXPERIMENTS.md)",
+    )
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,29 @@
+"""Fig. 14 proxy: speedup vs frame count S.
+
+Paper: VersaQ-3D speedup over the bf16 edge baseline is largest at S=1
+(weight-load/memory-bound) and decreases as compute (quadratic attention)
+grows with S."""
+from benchmarks import common
+from benchmarks.fig3_profile import vggt_terms, BW, FLOPS
+from repro.configs import get_config
+
+
+def main():
+    cfg = get_config("vggt-1b")
+    bw = BW["jetson_onx_lpddr5"]
+    load_bw = 1.0e9
+    prev = None
+    for s in (1, 2, 4, 8, 16, 32):
+        wb_b, fl, ab = vggt_terms(cfg, s, bytes_per_param=2.0)
+        wb_q, _, _ = vggt_terms(cfg, s, bytes_per_param=0.5)
+        t_base = wb_b / load_bw + max(fl / 3.76e12, (wb_b + ab) / bw)
+        t_q = wb_q / load_bw + max(fl / 7.5e12, (wb_q + ab * 0.5) / bw)
+        speed = t_base / t_q
+        common.emit(f"fig14.S{s}", t_q * 1e6, f"speedup_vs_bf16=x{speed:.2f}")
+        if prev is not None:
+            assert speed <= prev + 1e-6, "speedup must shrink with S"
+        prev = speed
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,51 @@
+"""Fig. 3 proxy: inference runtime breakdown (weight load / AA / other)
+across memory systems, from the bytes/bandwidth roofline model.
+
+Reproduces the paper's observation: on LPDDR-class bandwidth (Jetson,
+102.4 GB/s) the weight-loading stage dominates a single feed-forward
+pass; on HBM-class parts it does not.  Also sweeps frame count S for the
+quadratic global-attention growth (Fig. 3b).
+"""
+from benchmarks import common
+from repro.configs import get_config
+
+BW = {"jetson_onx_lpddr5": 102.4e9, "a100_hbm2e": 1.55e12, "tpu_v5e_hbm": 819e9}
+FLOPS = {"jetson_onx_lpddr5": 3.76e12, "a100_hbm2e": 77.9e12, "tpu_v5e_hbm": 197e12}
+# cold-start weight ingest (storage/host link) — the paper's Fig. 3 "model
+# weight loading" stage, which dominates on edge parts
+LOAD_BW = {"jetson_onx_lpddr5": 1.0e9, "a100_hbm2e": 25e9, "tpu_v5e_hbm": 25e9}
+P = 1024  # patches/frame
+
+
+def vggt_terms(cfg, s_frames, bytes_per_param=2.0):
+    n, _ = cfg.param_counts()
+    weight_bytes = n * bytes_per_param
+    t = s_frames * (P + cfg.n_special_tokens)
+    d = cfg.d_model
+    # AA module: 2 blocks per layer (frame + global), each attn+mlp
+    lin_flops = cfg.n_layers * 2 * (8 * d * d + 4 * d * cfg.d_ff) * t
+    attn_flops = cfg.n_layers * (s_frames * (P + 5) ** 2 + t * t) * 2 * d
+    act_bytes = cfg.n_layers * 2 * 6 * t * d * 2.0
+    return weight_bytes, lin_flops + attn_flops, act_bytes
+
+
+def main():
+    cfg = get_config("vggt-1b")
+    for dev, bw in BW.items():
+        for s in (3,):
+            wb, fl, ab = vggt_terms(cfg, s)
+            t_load = wb / LOAD_BW[dev]  # cold-start ingest (paper Fig. 3)
+            t_aa = max(fl / FLOPS[dev], (ab + wb) / bw)
+            frac = t_load / (t_load + t_aa) * 100
+            common.emit(
+                f"fig3a.{dev}.S{s}", (t_load + t_aa) * 1e6,
+                f"load={t_load*1e3:.1f}ms aa={t_aa*1e3:.1f}ms load_frac={frac:.0f}%",
+            )
+    for s in (1, 2, 4, 8, 16, 32):
+        wb, fl, ab = vggt_terms(cfg, s)
+        t = max(fl / FLOPS["jetson_onx_lpddr5"], (ab + wb) / BW["jetson_onx_lpddr5"])
+        common.emit(f"fig3b.onx.S{s}", t * 1e6, f"flops={fl:.3g} attn_quadratic_term")
+
+
+if __name__ == "__main__":
+    main()

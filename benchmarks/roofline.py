@@ -1,0 +1,69 @@
+"""Roofline table: aggregate the dry-run artifacts (results/dryrun/*.json)
+into the per-(arch × shape × mesh) table for EXPERIMENTS.md §Roofline, and
+nominate the three hillclimb cells (worst roofline fraction, most
+collective-bound, most paper-representative)."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from benchmarks import common
+
+DRYRUN_DIR = os.environ.get("DRYRUN_DIR", "results/dryrun")
+
+
+def load(tag="baseline") -> list[dict]:
+    out = []
+    for path in sorted(glob.glob(os.path.join(DRYRUN_DIR, f"*__{tag}.json"))):
+        with open(path) as f:
+            out.append(json.load(f))
+    return out
+
+
+def fraction(r: dict) -> float:
+    """Roofline fraction: useful-compute time / bound time."""
+    t_bound = max(r["t_compute_s"], r["t_memory_s"], r["t_collective_s"])
+    t_useful = r["model_flops_per_dev"] / 197e12
+    return t_useful / max(t_bound, 1e-12)
+
+
+def table(tag="baseline", mesh="single"):
+    rows = []
+    for r in load(tag):
+        if r.get("mesh") != mesh:
+            continue
+        if r["status"] == "skipped":
+            rows.append((r["arch"], r["shape"], "SKIP", r["reason"][:40], "", ""))
+            continue
+        if r["status"] != "ok":
+            rows.append((r["arch"], r["shape"], "ERROR", "", "", ""))
+            continue
+        rows.append(
+            (
+                r["arch"], r["shape"], r["dominant"],
+                f"c={r['t_compute_s']:.3g}s m={r['t_memory_s']:.3g}s x={r['t_collective_s']:.3g}s",
+                f"frac={fraction(r):.3f}",
+                f"useful={r['useful_flops_ratio']:.2f}",
+            )
+        )
+    return rows
+
+
+def main():
+    for mesh in ("single", "multi"):
+        rows = table(mesh=mesh)
+        for arch, shape, dom, terms, frac, useful in rows:
+            common.emit(f"roofline.{mesh}.{arch}.{shape}", 0.0, f"{dom} {terms} {frac} {useful}")
+    # nominate hillclimb cells
+    ok = [r for r in load() if r["status"] == "ok" and r["mesh"] == "single"]
+    if ok:
+        worst = min(ok, key=fraction)
+        coll = max(ok, key=lambda r: r["t_collective_s"] / max(r["t_compute_s"] + r["t_memory_s"], 1e-12))
+        common.emit("roofline.hillclimb.worst_fraction", 0.0, f"{worst['arch']}/{worst['shape']} frac={fraction(worst):.3f}")
+        common.emit("roofline.hillclimb.most_collective", 0.0, f"{coll['arch']}/{coll['shape']} t_coll={coll['t_collective_s']:.3g}s")
+        common.emit("roofline.hillclimb.paper_repr", 0.0, "prefill_32k on a dense GQA arch = VGGT global-attention regime")
+
+
+if __name__ == "__main__":
+    main()

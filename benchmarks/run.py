@@ -1,0 +1,53 @@
+"""Benchmark driver: one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV lines.  Accuracy benchmarks are
+structured proxies (no pretrained VGGT/Co3Dv2 offline — see DESIGN.md §6);
+runtime benchmarks are roofline-model numbers plus interpret-mode kernel
+timings (CPU container; TPU v5e is the target).
+"""
+import sys
+import time
+import traceback
+
+from benchmarks import (
+    fig3_profile,
+    fig10_bitwidth,
+    fig11_ablation,
+    fig13_runtime,
+    fig14_frames,
+    kernels_micro,
+    roofline,
+    table1_quant_accuracy,
+)
+
+MODULES = [
+    ("table1+2 (quant accuracy)", table1_quant_accuracy),
+    ("fig10 (bitwidth sensitivity)", fig10_bitwidth),
+    ("fig11 (ablation)", fig11_ablation),
+    ("fig3 (profile breakdown)", fig3_profile),
+    ("fig13 (runtime reduction)", fig13_runtime),
+    ("fig14 (speedup vs S)", fig14_frames),
+    ("kernels (micro)", kernels_micro),
+    ("roofline (dry-run table)", roofline),
+]
+
+
+def main() -> None:
+    print("name,us_per_call,derived")
+    failures = []
+    for title, mod in MODULES:
+        t0 = time.time()
+        print(f"# --- {title} ---")
+        try:
+            mod.main()
+        except Exception:
+            failures.append(title)
+            traceback.print_exc()
+        print(f"# ({title}: {time.time()-t0:.1f}s)")
+    if failures:
+        print("# FAILED:", failures)
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

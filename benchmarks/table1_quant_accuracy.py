@@ -1,0 +1,67 @@
+"""Table I + II proxy: quantization accuracy across methods/bit-widths.
+
+(a) mechanism level — relative output error on paper-premise tensors for
+    RTN / QuaRot / VersaQ at W4A8 and W4A4 (expect the paper's ordering:
+    VersaQ < QuaRot < RTN, with the biggest gaps at W4A4);
+(b) model level — trained VGGT-mini: camera-pose AUC proxy (Table I) and
+    point-map accuracy (Table II) per method, vs the full-precision model.
+"""
+import jax.numpy as jnp
+
+from benchmarks import common
+from repro.core import versaq as V
+from repro.core.model_quant import quantize_vggt
+from repro.models import vggt
+
+METHODS = ("rtn", "quarot", "versaq")
+
+
+def micro():
+    rows = []
+    for wb, ab in ((4, 8), (4, 4)):
+        errs = {}
+        for m in METHODS:
+            tot = 0.0
+            for seed in range(3):
+                x, w = common.premise_tensors(seed)
+                ql = V.prepare_linear(w, V.QuantPolicy(wb, ab, m), rotate_input_online=True)
+                out = V.apply_linear(ql, x)
+                ref = x @ w
+                tot += float(jnp.linalg.norm(out - ref) / jnp.linalg.norm(ref))
+            errs[m] = tot / 3
+        rows.append((f"w{wb}a{ab}", errs))
+        common.emit(
+            f"table1.micro.w{wb}a{ab}", 0.0,
+            f"rtn={errs['rtn']:.4f} quarot={errs['quarot']:.4f} versaq={errs['versaq']:.4f} "
+            f"versaq_vs_rtn=x{errs['rtn']/errs['versaq']:.2f}",
+        )
+    return rows
+
+
+def model():
+    cfg, params = common.trained_vggt_mini()
+    scenes = common.eval_scenes(cfg)
+    ref = vggt.forward(cfg, params, scenes["patches"])
+    auc_fp = common.pose_auc(ref["pose"], scenes["pose"])
+    pm_fp = common.pointmap_metrics(ref["points"], scenes["points"])
+    common.emit("table1.model.fp", 0.0, f"pose_auc={auc_fp:.4f} acc_mean={pm_fp['acc_mean']:.4f}")
+    for wb, ab in ((4, 8), (4, 4)):
+        for m in METHODS:
+            qp = quantize_vggt(cfg, params, V.QuantPolicy(wb, ab, m))
+            out = vggt.forward(cfg, qp, scenes["patches"])
+            auc = common.pose_auc(out["pose"], scenes["pose"])
+            pm = common.pointmap_metrics(out["points"], scenes["points"])
+            keep = auc / max(auc_fp, 1e-9)
+            common.emit(
+                f"table1.model.{m}.w{wb}a{ab}", 0.0,
+                f"pose_auc={auc:.4f} ({keep*100:.1f}% of fp) acc_mean={pm['acc_mean']:.4f}",
+            )
+
+
+def main():
+    micro()
+    model()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,45 @@
+"""Long-context decode with sub-quadratic architectures (rwkv6 / jamba).
+
+Demonstrates the O(1)-state property: decode latency and memory are flat
+in context length for RWKV6, while the int8 KV cache keeps jamba's four
+attention layers 2x smaller than bf16.
+
+Run:  PYTHONPATH=src python examples/long_context.py
+"""
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config
+from repro.models import lm
+
+
+def cache_bytes(c):
+    return sum(x.size * x.dtype.itemsize for x in jax.tree.leaves(c))
+
+
+def main():
+    key = jax.random.PRNGKey(0)
+    for arch in ("rwkv6-1.6b-smoke", "jamba-v0.1-52b-smoke"):
+        cfg = get_config(arch)
+        params = lm.init_params(cfg, key)
+        print(f"\n=== {arch} ===")
+        for ctx in (128, 512, 2048):
+            cache = lm.init_cache(cfg, 1, ctx)
+            prompt = jax.random.randint(key, (1, 64), 0, cfg.vocab_size)
+            _, cache = lm.forward(cfg, params, prompt, cache=cache, mode="prefill")
+            dec = jax.jit(lambda p, t, c: lm.decode_step(cfg, p, t, c))
+            tok = jnp.zeros((1,), jnp.int32)
+            _, cache = dec(params, tok, cache)  # compile
+            t0 = time.perf_counter()
+            for _ in range(16):
+                logits, cache = dec(params, tok, cache)
+                tok = jnp.argmax(logits[:, 0], -1).astype(jnp.int32)
+            dt = (time.perf_counter() - t0) / 16
+            print(f"  ctx={ctx:5d}: {dt*1e3:6.1f} ms/token, "
+                  f"cache {cache_bytes(cache)/1e6:.2f} MB (int8 KV + f32 states)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,80 @@
+"""End-to-end driver: feed-forward 3D reconstruction serving (the paper's
+deployment scenario).
+
+1. Train a VGGT-mini on synthetic multi-view scenes (a few hundred steps).
+2. Quantize it W4A8 with the calibration-free VersaQ pipeline.
+3. Serve batched multi-view requests: one forward pass per scene batch ->
+   camera poses + depth + point maps, comparing fp vs quantized fidelity
+   and model bytes.
+
+Run:  PYTHONPATH=src python examples/serve_vggt.py [--steps 200]
+"""
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config
+from repro.core.model_quant import quantize_vggt
+from repro.core.versaq import W4A8
+from repro.data.pipeline import scene_batch
+from repro.models import vggt
+from repro.optim import adamw
+from repro.serving.engine import vggt_serve
+
+
+def tree_bytes(t):
+    return sum(x.size * x.dtype.itemsize for x in jax.tree.leaves(t))
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--frames", type=int, default=4)
+    ap.add_argument("--patches", type=int, default=64)
+    args = ap.parse_args()
+
+    cfg = get_config("vggt-1b-smoke").with_(layerscale_init=0.2)
+    key = jax.random.PRNGKey(0)
+    params = vggt.init_params(cfg, key)
+    opt_cfg = adamw.AdamWConfig(lr=1e-3, warmup_steps=10, total_steps=args.steps)
+    opt = adamw.init(params)
+
+    @jax.jit
+    def step(p, o, b):
+        l, g = jax.value_and_grad(lambda pp: vggt.reconstruction_loss(cfg, pp, b))(p)
+        p, o, _ = adamw.apply(opt_cfg, o, p, g)
+        return p, o, l
+
+    print(f"training VGGT-mini for {args.steps} steps on synthetic scenes...")
+    for s in range(args.steps):
+        b = {k: jnp.asarray(v) for k, v in
+             scene_batch(4, args.frames, args.patches, cfg.d_model, s).items()}
+        params, opt, loss = step(params, opt, b)
+        if s % 50 == 0:
+            print(f"  step {s:4d} loss {float(loss):.4f}")
+    print(f"  final loss {float(loss):.4f}")
+
+    qp = quantize_vggt(cfg, params, W4A8)
+    print(f"model bytes: fp={tree_bytes(params)/1e6:.1f}MB "
+          f"quantized={tree_bytes(qp)/1e6:.1f}MB")
+
+    # serve batched requests
+    for req in range(3):
+        scenes = jnp.asarray(
+            scene_batch(8, args.frames, args.patches, cfg.d_model, 10_000 + req)["patches"])
+        t0 = time.perf_counter()
+        out = vggt_serve(cfg, qp, scenes)
+        out["points"].block_until_ready()
+        dt = time.perf_counter() - t0
+        ref = vggt_serve(cfg, params, scenes)
+        rel = float(jnp.linalg.norm(out["points"] - ref["points"])
+                    / jnp.linalg.norm(ref["points"]))
+        print(f"request {req}: {scenes.shape[0]} scenes x {args.frames} views "
+              f"-> poses{tuple(out['pose'].shape)} points{tuple(out['points'].shape)} "
+              f"in {dt*1e3:.0f}ms; quant-vs-fp rel err {rel:.4f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,40 @@
+"""Fault-tolerant LM training demo: checkpoint/restart + straggler
+watchdog + (optionally, with >1 fake device) compressed-DP gradients.
+
+Run:  PYTHONPATH=src python examples/train_lm.py --steps 300
+Kill it mid-run and re-run: it resumes from the last checkpoint and
+reproduces the exact uninterrupted loss curve (step-seeded data).
+"""
+import argparse
+
+from repro.configs import get_config
+from repro.data.pipeline import DataConfig
+from repro.optim import adamw
+from repro.runtime.trainer import Trainer, TrainerConfig
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--ckpt", default="/tmp/repro_train_lm")
+    args = ap.parse_args()
+
+    cfg = get_config("qwen3-14b-smoke").with_(
+        d_model=128, n_heads=4, n_kv_heads=2, head_dim=32, d_ff=256, vocab_size=256
+    )
+    t = Trainer(
+        cfg,
+        adamw.AdamWConfig(lr=3e-3, warmup_steps=20, total_steps=args.steps),
+        DataConfig(vocab_size=256, batch=8, seq_len=64),
+        TrainerConfig(total_steps=args.steps, checkpoint_every=50, log_every=20),
+        args.ckpt,
+    )
+    if t.start_step:
+        print(f"[resume] continuing from step {t.start_step}")
+    res = t.run()
+    print(f"done. final loss {res['history'][-1]['loss']:.4f}, "
+          f"{len(res['stragglers'])} straggler events")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,4 @@
+"""VersaQ-3D reproduction: calibration-free orthogonal-transform
+quantization + TPU-native accelerator mapping, as a deployable JAX
+training/serving framework."""
+__version__ = "1.0.0"

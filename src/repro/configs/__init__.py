@@ -1,0 +1,30 @@
+"""Architecture configs (assigned pool + the paper's VGGT)."""
+from repro.configs.base import ModelConfig, get_config, list_configs, register
+
+# import for registration side effects
+from repro.configs import (  # noqa: F401
+    jamba_v01_52b,
+    paligemma_3b,
+    deepseek_moe_16b,
+    deepseek_v2_lite_16b,
+    qwen3_14b,
+    internlm2_20b,
+    starcoder2_7b,
+    phi3_mini_38b,
+    rwkv6_16b,
+    musicgen_large,
+    vggt_1b,
+)
+
+ASSIGNED = [
+    "jamba-v0.1-52b",
+    "paligemma-3b",
+    "deepseek-moe-16b",
+    "deepseek-v2-lite-16b",
+    "qwen3-14b",
+    "internlm2-20b",
+    "starcoder2-7b",
+    "phi3-mini-3.8b",
+    "rwkv6-1.6b",
+    "musicgen-large",
+]

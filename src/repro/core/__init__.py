@@ -1,0 +1,13 @@
+"""Core VersaQ-3D library: orthogonal transforms + calibration-free PTQ."""
+from repro.core.quantize import QTensor, quantize, dequantize, pack_int4, unpack_int4
+from repro.core.transforms import apply_wht, fast_wht, hadamard_matrix, dct_matrix
+from repro.core.versaq import (
+    QuantPolicy,
+    QuantLinear,
+    FoldedNorm,
+    apply_linear,
+    apply_norm,
+    prepare_linear,
+    W4A8,
+    W4A4,
+)

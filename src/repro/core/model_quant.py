@@ -1,0 +1,369 @@
+"""Whole-model VersaQ quantization (the paper's offline pipeline, Fig. 6).
+
+Walks a full-precision parameter tree (models/lm.py or models/vggt.py
+structure) and produces the quantized tree:
+
+* the **residual stream is rotated once** at the embedding (E ← E·H, or the
+  frontend in_proj / patch_proj gets H fused on its output side; sinusoidal
+  position tables get an explicit rotation matrix) and *stays* rotated —
+  paper Stage 4's "activations remain in the rotated domain";
+* every pre-norm becomes a ``FoldedNorm`` (statistics-only, exact in the
+  rotated domain) with its γ/β folded into **every** consumer (q/k/v,
+  FFN up/gate, MoE router + shared + routed experts, Mamba in-proj);
+* projections are fused per Eq. 7 (``Hᵀ·γ·W·Dᵀ``) and quantized to
+  W4/W8 with per-channel scales;
+* V/O projections carry the per-head Hadamard pair; LayerScale (VGGT)
+  folds into the output projections (Eq. 6's "LayerScale handled
+  analogously");
+* hidden→down projections get the one mandatory **online** WHT
+  (Fig. 5's WHT box);
+* precision-sensitive islands stay bf16/f32: router logits, qk-norm,
+  RoPE, Mamba Δ/B/C/conv/scan, RWKV decay LoRA + recurrence, all heads.
+
+RWKV is the exception to stream rotation (token-shift lerp is
+elementwise in the unrotated basis — DESIGN.md §Arch-applicability):
+its stream stays unrotated and every projection uses the online-WHT path.
+
+Baselines: ``method="rtn"`` disables all transforms, ``"quarot"``
+disables only the DCT — same walker, same flow.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.core import transforms
+from repro.core.versaq import (
+    FoldedNorm,
+    Norm,
+    QuantPolicy,
+    make_folded_norm,
+    prepare_linear,
+    rotate_cols,
+)
+from repro.models import lm
+
+
+def _vmapped(fn, n_lead: int):
+    """vmap ``fn`` over ``n_lead`` stacked leading axes (scan groups,
+    experts)."""
+    for _ in range(n_lead):
+        fn = jax.vmap(fn)
+    return fn
+
+
+def _prep(w, policy, lead=0, **kw):
+    """prepare_linear, vmapped over ``lead`` leading stacked dims.
+
+    Array kwargs (gamma/beta/bias/out_scale) must carry the same leading
+    dims; None kwargs are closed over.
+    """
+    arr_keys = [k for k in ("gamma", "beta", "bias", "out_scale") if kw.get(k) is not None]
+    static_kw = {k: v for k, v in kw.items() if k not in arr_keys}
+
+    def go(w_, *arrs):
+        d = dict(zip(arr_keys, arrs))
+        return _prepare_with_scale(w_, policy, **static_kw, **d)
+
+    fn = _vmapped(go, lead)
+    return fn(w, *[kw[k] for k in arr_keys])
+
+
+def _prepare_with_scale(w, policy, *, out_scale=None, **kw):
+    if out_scale is not None:
+        w = w * out_scale[None, :]
+        if kw.get("bias") is not None:
+            kw["bias"] = kw["bias"] * out_scale
+    return prepare_linear(w, policy, **kw)
+
+
+def _fold_fp(w, gamma=None, beta=None, bias=None, rotate_in=False):
+    """Fold γ/β/H into a full-precision (non-quantized) consumer — used for
+    routers, heads, and the lm_head which stay fp but consume the rotated,
+    γ-less norm output."""
+    w = w.astype(jnp.float32)
+    b = jnp.zeros((w.shape[-1],), jnp.float32) if bias is None else bias.astype(jnp.float32)
+    has_b = bias is not None
+    if beta is not None:
+        b = b + beta.astype(jnp.float32) @ w
+        has_b = True
+    if gamma is not None:
+        w = w * gamma.astype(jnp.float32)[..., :, None]
+    if rotate_in:
+        blk = transforms.block_size_for(w.shape[-2])
+        h = transforms.hadamard_matrix(blk, dtype=jnp.float32)
+        d_in = w.shape[-2]
+        lead = w.shape[:-2]
+        w = w.reshape(lead + (d_in // blk, blk, w.shape[-1]))
+        w = jnp.einsum("cb,...bn->...cn", h, w).reshape(lead + (d_in, w.shape[-1]))
+    return {"w": w, "b": b if has_b else None}
+
+
+def _norm_g(n: Norm):
+    return n.g
+
+
+def _norm_b(n: Norm):
+    return n.b
+
+
+def quantize_lm(cfg: ModelConfig, params: dict, policy: QuantPolicy) -> dict:
+    """Quantize an lm.py parameter tree. Returns a new tree; the forward
+    code is unchanged (dispatch happens on leaf types)."""
+    rotated = policy.use_wht and "rwkv" not in cfg.pattern
+    q = dict(params)
+
+    # ---- stream entry: rotate the embedding / frontend output ----
+    if rotated:
+        emb = params["embed"]["w"].astype(jnp.float32)
+        q["embed"] = {"w": rotate_cols(emb)}
+        if cfg.embed_inputs and "in_proj" in params:
+            ip = params["in_proj"]
+            q["in_proj"] = {
+                "w": rotate_cols(ip["w"].astype(jnp.float32)),
+                "b": rotate_cols(ip["b"][None, :].astype(jnp.float32))[0]
+                if ip.get("b") is not None
+                else None,
+            }
+        if cfg.pos == "sincos":
+            q["pos_rot"] = transforms.blocked_hadamard_matrix(cfg.d_model, dtype=jnp.float32)
+
+    # ---- prefix layers (not stacked) + scanned groups (stacked) ----
+    q["prefix"] = [
+        _quantize_layer(cfg, lp, lm.mixer_kind(cfg, i), lm.ffn_kind(cfg, i), policy, rotated, lead=0)
+        for i, lp in enumerate(params["prefix"])
+    ]
+    period = len(cfg.pattern)
+    blocks = dict(params["blocks"])
+    for j in range(period):
+        gi = cfg.first_dense + j
+        blocks[f"l{j}"] = _quantize_layer(
+            cfg, params["blocks"][f"l{j}"], lm.mixer_kind(cfg, gi), lm.ffn_kind(cfg, gi),
+            policy, rotated, lead=1,
+        )
+    q["blocks"] = blocks
+
+    # ---- final norm + head ----
+    fn: Norm = params["final_norm"]
+    if rotated:
+        q["final_norm"] = make_folded_norm(fn.kind, cfg.d_model)
+        if "lm_head" in params:
+            q["lm_head"] = _fold_fp(
+                params["lm_head"]["w"], gamma=fn.g, beta=fn.b,
+                bias=params["lm_head"].get("b"), rotate_in=True,
+            )
+    return q
+
+
+def _quantize_layer(cfg, lp, kind, fk, policy, rotated, *, lead):
+    out = dict(lp)
+    mn: Norm = lp["mixer_norm"]
+    fnm: Norm = lp["ffn_norm"]
+    g1 = mn.g if rotated else None
+    b1 = mn.b if rotated else None
+    g2 = fnm.g if rotated else None
+    b2 = fnm.b if rotated else None
+    groups = int(mn.g.shape[0]) if lead else None
+    if rotated:
+        out["mixer_norm"] = _folded(mn.kind, cfg.d_model, groups)
+        out["ffn_norm"] = _folded(fnm.kind, cfg.d_model, groups)
+    ls1 = lp.get("ls1")
+    ls2 = lp.get("ls2")
+
+    common = dict(rotate_in_offline=rotated, rotate_input_online=not rotated)
+
+    if kind == "attn":
+        mx = dict(lp["mixer"])
+        if cfg.mla:
+            mx["wq"] = _prep(lp["mixer"]["wq"]["w"], policy, lead, gamma=g1, beta=b1,
+                             bias=lp["mixer"]["wq"].get("b"), **common)
+            # kv_down: rotate the lora columns so the cache lives rotated
+            wkv = lp["mixer"]["w_kv_down"]["w"]
+            rank = cfg.kv_lora_rank
+
+            def prep_kvdown(w_, *arrs):
+                d = dict(zip([k for k, v in (("gamma", g1), ("beta", b1)) if v is not None], arrs))
+                lora, rope = w_[:, :rank], w_[:, rank:]
+                if policy.use_wht:
+                    lora = rotate_cols(lora)
+                w2 = jnp.concatenate([lora, rope], axis=1)
+                return prepare_linear(w2, policy, bias=None, **common, **d)
+
+            arrs = [a for a in (g1, b1) if a is not None]
+            mx["w_kv_down"] = _vmapped(prep_kvdown, lead)(wkv, *arrs)
+            kvn: Norm = lp["mixer"]["kv_norm"]
+            gkv = kvn.g if policy.use_wht else None
+            if policy.use_wht:
+                mx["kv_norm"] = _folded("rms", rank, groups)
+            mx["w_k_up"] = _prep(lp["mixer"]["w_k_up"]["w"], policy, lead, gamma=gkv,
+                                 rotate_in_offline=policy.use_wht, rotate_input_online=False)
+            mx["w_v_up"] = _prep(lp["mixer"]["w_v_up"]["w"], policy, lead, gamma=gkv,
+                                 rotate_in_offline=policy.use_wht, rotate_input_online=False,
+                                 head_rot_out=(cfg.n_heads, cfg.v_head_dim))
+            mx["wo"] = _prep(lp["mixer"]["wo"]["w"], policy, lead,
+                             bias=lp["mixer"]["wo"].get("b"), out_scale=ls1,
+                             head_rot_in=(cfg.n_heads, cfg.v_head_dim),
+                             rotate_out_offline=rotated)
+        else:
+            dh = cfg.head_dim
+            for name in ("wq", "wk"):
+                mx[name] = _prep(lp["mixer"][name]["w"], policy, lead, gamma=g1, beta=b1,
+                                 bias=lp["mixer"][name].get("b"), **common)
+            mx["wv"] = _prep(lp["mixer"]["wv"]["w"], policy, lead, gamma=g1, beta=b1,
+                             bias=lp["mixer"]["wv"].get("b"),
+                             head_rot_out=(cfg.n_kv_heads, dh), **common)
+            mx["wo"] = _prep(lp["mixer"]["wo"]["w"], policy, lead,
+                             bias=lp["mixer"]["wo"].get("b"), out_scale=ls1,
+                             head_rot_in=(cfg.n_heads, dh),
+                             rotate_out_offline=rotated)
+        out["mixer"] = mx
+        if ls1 is not None:
+            out.pop("ls1", None)
+    elif kind == "mamba":
+        mx = dict(lp["mixer"])
+        mx["w_in"] = _prep(lp["mixer"]["w_in"]["w"], policy, lead, gamma=g1, beta=b1, **common)
+        mx["w_out"] = _prep(lp["mixer"]["w_out"]["w"], policy, lead,
+                            rotate_input_online=True, rotate_out_offline=rotated)
+        out["mixer"] = mx  # Δ/B/C/conv/a_log stay fp (bf16 islands)
+    elif kind == "rwkv":
+        mx = dict(lp["mixer"])
+        for name in ("wr", "wk", "wv", "wg", "wo"):
+            mx[name] = _prep(lp["mixer"][name]["w"], policy, lead, rotate_input_online=True)
+        out["mixer"] = mx  # mu/decay LoRA/bonus/ln_x stay fp
+
+    # ---- FFN ----
+    if fk in ("dense", "dense_inner"):
+        f = dict(lp["ffn"])
+        for name in ("w_gate", "w_up"):
+            if name in lp["ffn"]:
+                f[name] = _prep(lp["ffn"][name]["w"], policy, lead, gamma=g2, beta=b2,
+                                bias=lp["ffn"][name].get("b"), **common)
+        f["w_down"] = _prep(lp["ffn"]["w_down"]["w"], policy, lead,
+                            bias=lp["ffn"]["w_down"].get("b"), out_scale=ls2,
+                            rotate_input_online=True, rotate_out_offline=rotated)
+        out["ffn"] = f
+        if ls2 is not None:
+            out.pop("ls2", None)
+    elif fk == "moe":
+        f = dict(lp["ffn"])
+        # router stays fp but must absorb the folded γ/β + rotation
+        rt = lp["ffn"]["router"]
+        arrs = {k: v for k, v in (("gamma", g2), ("beta", b2), ("bias", rt.get("b"))) if v is not None}
+        f["router"] = _vmapped(
+            lambda w_, *a: _fold_fp(w_, **dict(zip(arrs.keys(), a)), rotate_in=rotated),
+            lead,
+        )(rt["w"], *arrs.values())
+        ex = lp["ffn"]["experts"]
+        nex = dict(ex)
+        for name in ("w_gate", "w_up"):
+            if name in ex:
+                nex[name] = _prep(ex[name], policy, lead + 1,
+                                  gamma=_bcast(g2, cfg.n_experts), beta=_bcast(b2, cfg.n_experts),
+                                  **common)
+        nex["w_down"] = _prep(ex["w_down"], policy, lead + 1,
+                              rotate_input_online=True, rotate_out_offline=rotated)
+        f["experts"] = nex
+        if "shared" in lp["ffn"]:
+            sh = dict(lp["ffn"]["shared"])
+            for name in ("w_gate", "w_up"):
+                if name in lp["ffn"]["shared"]:
+                    sh[name] = _prep(lp["ffn"]["shared"][name]["w"], policy, lead,
+                                     gamma=g2, beta=b2, **common)
+            sh["w_down"] = _prep(lp["ffn"]["shared"]["w_down"]["w"], policy, lead,
+                                 rotate_input_online=True, rotate_out_offline=rotated)
+            f["shared"] = sh
+        out["ffn"] = f
+    elif fk == "rwkv_channel":
+        f = dict(lp["ffn"])
+        f["w_up"] = _prep(lp["ffn"]["w_up"]["w"], policy, lead, rotate_input_online=True)
+        f["w_down"] = _prep(lp["ffn"]["w_down"]["w"], policy, lead, rotate_input_online=True)
+        out["ffn"] = f
+    return out
+
+
+def _bcast(x, n):
+    if x is None:
+        return None
+    return jnp.broadcast_to(x[..., None, :], x.shape[:-1] + (n, x.shape[-1]))
+
+
+def _folded(kind: str, dim: int, groups: int | None) -> FoldedNorm:
+    """FoldedNorm whose LN mean-vector ``u`` is stacked for scan groups."""
+    fn = make_folded_norm(kind, dim)
+    if fn.u is not None and groups is not None:
+        fn = FoldedNorm(kind=fn.kind, u=jnp.broadcast_to(fn.u, (groups, dim)), eps=fn.eps)
+    return fn
+
+
+# ---------------------------------------------------------------------------
+# VGGT
+# ---------------------------------------------------------------------------
+
+
+def quantize_vggt(cfg: ModelConfig, params: dict, policy: QuantPolicy) -> dict:
+    """Quantize the VGGT tree (models/vggt.py): rotated stream via the
+    patch projection + rotated special tokens; AA blocks fully quantized
+    with LayerScale folded; heads stay fp with final-norm fold."""
+    rotated = policy.use_wht
+    q = dict(params)
+    if rotated:
+        pp = params["patch_proj"]
+        q["patch_proj"] = {
+            "w": rotate_cols(pp["w"].astype(jnp.float32)),
+            "b": rotate_cols(pp["b"][None, :].astype(jnp.float32))[0] if pp.get("b") is not None else None,
+        }
+        q["special_tokens"] = rotate_cols(params["special_tokens"].astype(jnp.float32))
+
+    def quant_block(bp):
+        an: Norm = bp["attn_norm"]
+        fn: Norm = bp["ffn_norm"]
+        g1, b1 = (an.g, an.b) if rotated else (None, None)
+        g2, b2 = (fn.g, fn.b) if rotated else (None, None)
+        common = dict(rotate_in_offline=rotated, rotate_input_online=not rotated)
+        nb = dict(bp)
+        groups = int(an.g.shape[0])
+        if rotated:
+            nb["attn_norm"] = _folded("ln", cfg.d_model, groups)
+            nb["ffn_norm"] = _folded("ln", cfg.d_model, groups)
+        at = dict(bp["attn"])
+        dh = cfg.head_dim
+        for name in ("wq", "wk"):
+            at[name] = _prep(bp["attn"][name]["w"], policy, 1, gamma=g1, beta=b1,
+                             bias=bp["attn"][name].get("b"), **common)
+        at["wv"] = _prep(bp["attn"]["wv"]["w"], policy, 1, gamma=g1, beta=b1,
+                         bias=bp["attn"]["wv"].get("b"), head_rot_out=(cfg.n_kv_heads, dh), **common)
+        at["wo"] = _prep(bp["attn"]["wo"]["w"], policy, 1, bias=bp["attn"]["wo"].get("b"),
+                         out_scale=bp.get("ls1"), head_rot_in=(cfg.n_heads, dh),
+                         rotate_out_offline=rotated)
+        nb["attn"] = at
+        ff = dict(bp["ffn"])
+        for name in ("w_gate", "w_up"):
+            if name in bp["ffn"]:
+                ff[name] = _prep(bp["ffn"][name]["w"], policy, 1, gamma=g2, beta=b2,
+                                 bias=bp["ffn"][name].get("b"), **common)
+        ff["w_down"] = _prep(bp["ffn"]["w_down"]["w"], policy, 1,
+                             bias=bp["ffn"]["w_down"].get("b"), out_scale=bp.get("ls2"),
+                             rotate_input_online=True, rotate_out_offline=rotated)
+        nb["ffn"] = ff
+        nb.pop("ls1", None)
+        nb.pop("ls2", None)
+        return nb
+
+    blocks = dict(params["blocks"])
+    blocks["frame"] = quant_block(params["blocks"]["frame"])
+    blocks["global"] = quant_block(params["blocks"]["global"])
+    q["blocks"] = blocks
+
+    fn: Norm = params["final_norm"]
+    if rotated:
+        q["final_norm"] = make_folded_norm("ln", cfg.d_model)
+        for head in ("camera_head", "dpt_head"):
+            h = dict(params[head])
+            h["fc1"] = _fold_fp(params[head]["fc1"]["w"], gamma=fn.g, beta=fn.b,
+                                bias=params[head]["fc1"].get("b"), rotate_in=True)
+            q[head] = h
+    return q

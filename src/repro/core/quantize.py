@@ -1,0 +1,137 @@
+"""Symmetric integer quantization primitives (paper §III, §V-A).
+
+Bit settings follow the paper: weights W4 (packed two-per-byte), activations
+A8 or A4.  All quantization is *symmetric* (zero-point-free) so the integer
+matmul needs only a post-scale, matching the accelerator's Quantization Unit.
+
+Granularity:
+  * weights     — per-output-channel scales (axis=-1 of [in, out])
+  * activations — per-token scales (last-dim-wise dynamic quant)
+
+INT4 values live in int8 containers in compute (TPU MXU is int8-native; see
+DESIGN.md §2) and are packed 2-per-uint8 for storage/HBM traffic.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "QTensor",
+    "int_range",
+    "quantize",
+    "dequantize",
+    "quantize_per_token",
+    "pack_int4",
+    "unpack_int4",
+    "quantize_weight",
+]
+
+
+def int_range(bits: int) -> tuple[int, int]:
+    """Symmetric signed range for a bit width, e.g. 4 -> (-7, 7)."""
+    qmax = 2 ** (bits - 1) - 1
+    return -qmax, qmax
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class QTensor:
+    """A quantized tensor: integer values + broadcastable scale.
+
+    ``values`` is int8 (possibly holding int4-range numbers) or uint8 when
+    ``packed`` (two int4 per byte along ``pack_axis``).
+    """
+
+    values: jnp.ndarray
+    scale: jnp.ndarray
+    bits: int = dataclasses.field(metadata=dict(static=True), default=8)
+    packed: bool = dataclasses.field(metadata=dict(static=True), default=False)
+    pack_axis: int = dataclasses.field(metadata=dict(static=True), default=0)
+
+    @property
+    def shape(self):
+        if not self.packed:
+            return self.values.shape
+        s = list(self.values.shape)
+        s[self.pack_axis] *= 2
+        return tuple(s)
+
+    def dequantize(self, dtype=jnp.float32) -> jnp.ndarray:
+        v = unpack_int4(self.values, self.pack_axis) if self.packed else self.values
+        return v.astype(dtype) * self.scale.astype(dtype)
+
+    def unpacked_values(self) -> jnp.ndarray:
+        return unpack_int4(self.values, self.pack_axis) if self.packed else self.values
+
+
+def quantize(
+    x: jnp.ndarray, bits: int, axis: int | tuple[int, ...] | None = -1
+) -> QTensor:
+    """Symmetric quantization with scales reduced over ``axis``.
+
+    ``axis=None`` -> per-tensor scale.  Scales keep reduced dims so they
+    broadcast against ``values``.
+    """
+    _, qmax = int_range(bits)
+    amax = jnp.max(jnp.abs(x), axis=axis, keepdims=True) if axis is not None else jnp.max(jnp.abs(x))
+    scale = jnp.maximum(amax, 1e-8) / qmax
+    container = jnp.int8 if bits <= 8 else jnp.int32
+    q = jnp.clip(jnp.round(x / scale), -qmax, qmax).astype(container)
+    return QTensor(values=q, scale=scale.astype(jnp.float32), bits=bits)
+
+
+def dequantize(q: QTensor, dtype=jnp.float32) -> jnp.ndarray:
+    return q.dequantize(dtype)
+
+
+def quantize_per_token(x: jnp.ndarray, bits: int) -> QTensor:
+    """Dynamic per-token activation quantization (scale over the last dim)."""
+    return quantize(x, bits, axis=-1)
+
+
+def pack_int4(v: jnp.ndarray, axis: int = 0) -> jnp.ndarray:
+    """Pack int4-range int8 values two-per-uint8 along ``axis``."""
+    assert v.dtype == jnp.int8
+    assert v.shape[axis] % 2 == 0, v.shape
+    lo, hi = jnp.split(v.astype(jnp.uint8) & 0xF, 2, axis=axis) if False else (None, None)
+    # interleave-free layout: first half of axis in low nibble, second in high
+    n = v.shape[axis] // 2
+    a = jax.lax.slice_in_dim(v, 0, n, axis=axis).astype(jnp.uint8) & 0xF
+    b = jax.lax.slice_in_dim(v, n, 2 * n, axis=axis).astype(jnp.uint8) & 0xF
+    return (a | (b << 4)).astype(jnp.uint8)
+
+
+def unpack_int4(p: jnp.ndarray, axis: int = 0) -> jnp.ndarray:
+    """Inverse of :func:`pack_int4` -> int8 values in [-8, 7]."""
+    assert p.dtype == jnp.uint8
+    lo = (p & 0xF).astype(jnp.int8)
+    hi = (p >> 4).astype(jnp.int8)
+    # sign-extend 4-bit two's complement
+    lo = jnp.where(lo > 7, lo - 16, lo)
+    hi = jnp.where(hi > 7, hi - 16, hi)
+    return jnp.concatenate([lo, hi], axis=axis)
+
+
+def quantize_weight(w: jnp.ndarray, bits: int, pack: bool | None = None) -> QTensor:
+    """Per-output-channel weight quantization for a [in, out] matrix.
+
+    ``bits==4`` packs along the *input* dim (axis 0) by default so the
+    kernel can unpack contiguous K-tiles.
+    """
+    q = quantize(w, bits, axis=tuple(range(w.ndim - 1)))  # scale per out channel
+    if pack is None:
+        pack = bits == 4
+    if pack:
+        assert bits == 4
+        vals = pack_int4(q.values, axis=w.ndim - 2)
+        return QTensor(values=vals, scale=q.scale, bits=4, packed=True, pack_axis=w.ndim - 2)
+    return q
+
+
+def fake_quant(x: jnp.ndarray, bits: int, axis: Any = -1) -> jnp.ndarray:
+    """Quantize-dequantize (used by accuracy benchmarks and tests)."""
+    return quantize(x, bits, axis=axis).dequantize(x.dtype)

@@ -1,0 +1,145 @@
+"""Orthogonal transforms for VersaQ-3D quantization (paper §II-C, §III).
+
+Two transforms, used exactly as the paper prescribes:
+
+* **WHT** (Walsh-Hadamard): applied to *activations* for incoherence
+  processing — redistributes saturated channels into a quantization-friendly
+  distribution.  Elements are ±1/sqrt(n), so the online transform is a
+  multiplier-free butterfly (see ``kernels/wht.py`` for the Pallas version;
+  this module holds the reference matrices and jnp butterfly).
+
+* **DCT** (orthonormal DCT-II): applied to *weights* (offline) for structural
+  preservation / energy compaction.  The paper uses the HEVC integer DCT; on
+  TPU the win of integer DCT arithmetic disappears (the transform is fused
+  offline anyway), so we use the exact orthonormal DCT-II matrix — see
+  DESIGN.md §2.
+
+Feature dims in the assigned archs are not all powers of two (5120, 6144,
+4608, 3072...), so both transforms are applied **block-diagonally**: the dim
+is split into equal blocks whose size is the largest power-of-two divisor
+(capped for the DCT at 64, HEVC's largest block).  A block-diagonal
+orthogonal matrix is still orthogonal, so computational invariance
+(paper Eq. 4) holds unchanged.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = [
+    "hadamard_matrix",
+    "dct_matrix",
+    "block_size_for",
+    "blocked_hadamard_matrix",
+    "blocked_dct_matrix",
+    "apply_wht",
+    "apply_blocked",
+    "fast_wht",
+]
+
+
+def _largest_pow2_divisor(n: int) -> int:
+    return n & (-n)
+
+
+def block_size_for(dim: int, cap: int = 4096) -> int:
+    """Largest power-of-two block size that divides ``dim`` (≤ cap)."""
+    b = _largest_pow2_divisor(dim)
+    while b > cap:
+        b //= 2
+    if b < 2:
+        raise ValueError(f"dim {dim} has no power-of-two factor >= 2")
+    return b
+
+
+@functools.lru_cache(maxsize=None)
+def _hadamard_np(n: int) -> np.ndarray:
+    """Normalized Hadamard matrix H_n (n a power of two), H Hᵀ = I, H = Hᵀ."""
+    if n & (n - 1):
+        raise ValueError(f"Hadamard size must be a power of two, got {n}")
+    h = np.array([[1.0]])
+    while h.shape[0] < n:
+        h = np.block([[h, h], [h, -h]])
+    return (h / math.sqrt(n)).astype(np.float64)
+
+
+def hadamard_matrix(n: int, dtype=jnp.float32) -> jnp.ndarray:
+    return jnp.asarray(_hadamard_np(n), dtype=dtype)
+
+
+@functools.lru_cache(maxsize=None)
+def _dct_np(n: int) -> np.ndarray:
+    """Orthonormal DCT-II matrix D (rows = basis), D Dᵀ = I."""
+    k = np.arange(n)[:, None]
+    i = np.arange(n)[None, :]
+    d = np.cos(np.pi * (2 * i + 1) * k / (2 * n))
+    d *= np.sqrt(2.0 / n)
+    d[0] *= 1.0 / np.sqrt(2.0)
+    return d.astype(np.float64)
+
+
+def dct_matrix(n: int, dtype=jnp.float32) -> jnp.ndarray:
+    return jnp.asarray(_dct_np(n), dtype=dtype)
+
+
+def blocked_hadamard_matrix(dim: int, dtype=jnp.float32) -> jnp.ndarray:
+    """Block-diagonal Hadamard for an arbitrary dim (dense [dim, dim])."""
+    b = block_size_for(dim)
+    h = _hadamard_np(b)
+    out = np.kron(np.eye(dim // b), h)
+    return jnp.asarray(out, dtype=dtype)
+
+
+def blocked_dct_matrix(dim: int, block: int = 64, dtype=jnp.float32) -> jnp.ndarray:
+    """Block-diagonal DCT for an arbitrary dim (dense [dim, dim])."""
+    b = min(block_size_for(dim, cap=block), block)
+    d = _dct_np(b)
+    out = np.kron(np.eye(dim // b), d)
+    return jnp.asarray(out, dtype=dtype)
+
+
+def fast_wht(x: jnp.ndarray, block: int | None = None) -> jnp.ndarray:
+    """Multiplier-free blocked WHT along the last axis (jnp butterfly).
+
+    Equivalent to ``x @ blocked_hadamard_matrix(x.shape[-1])`` (H is
+    symmetric) but runs in log2(block) add/sub stages — the TPU analogue of
+    the paper's "±1 mode" PEs.  Used as the numerical reference for the
+    Pallas kernel and as the default online path.
+    """
+    dim = x.shape[-1]
+    b = block or block_size_for(dim)
+    nblk = dim // b
+    shape = x.shape
+    x = x.reshape(shape[:-1] + (nblk, b))
+    h = 1
+    while h < b:
+        x = x.reshape(shape[:-1] + (nblk, b // (2 * h), 2, h))
+        a = x[..., 0, :]
+        c = x[..., 1, :]
+        x = jnp.stack([a + c, a - c], axis=-2)
+        h *= 2
+    x = x.reshape(shape[:-1] + (nblk, b))
+    x = x * jnp.asarray(1.0 / math.sqrt(b), dtype=x.dtype)
+    return x.reshape(shape)
+
+
+def apply_wht(x: jnp.ndarray) -> jnp.ndarray:
+    """Blocked WHT along the last axis (rotates activations)."""
+    return fast_wht(x)
+
+
+def apply_blocked(x: jnp.ndarray, mat: jnp.ndarray, block: int) -> jnp.ndarray:
+    """y = x @ M where M is block-diagonal with [block, block] blocks.
+
+    ``mat`` is the [block, block] block; avoids materializing the dense
+    [dim, dim] matrix on the hot path.
+    """
+    dim = x.shape[-1]
+    assert dim % block == 0, (dim, block)
+    shape = x.shape
+    x = x.reshape(shape[:-1] + (dim // block, block))
+    y = jnp.einsum("...kb,bc->...kc", x, mat)
+    return y.reshape(shape)

@@ -1,0 +1,342 @@
+"""VersaQ-3D quantization flow (paper §III, Fig. 5/6).
+
+Implements the paper's computation flow in JAX, generalized to every
+architecture in the assigned pool:
+
+* **Offline weight preparation** (Fig. 6):  ``W_final ← Hᵀ·γ·W·D`` —
+  Hadamard on the input side (computational invariance with the rotated
+  residual stream, Eq. 4-7), the preceding norm's γ folded in (Eq. 6), the
+  DCT on the output side for structural weight preservation (Eq. 7), then
+  symmetric W4/W8 quantization with per-output-channel scales.
+
+* **Online activation processing** (Fig. 5): residual stream lives
+  permanently in the rotated (WHT) domain; per-token dynamic A4/A8
+  quantization before each integer matmul; block IDCT after each matmul to
+  cancel the offline DCT; nonlinears (norm stats, RoPE, softmax, GLU,
+  router) in bf16 — exactly the paper's Stage-1..4 pipeline.
+
+* **Per-head rotations**: V-projection output / O-projection input carry a
+  fused per-head Hadamard (offline, free); Q and K receive an *online*
+  per-head WHT after RoPE (paper Stage 2) — scores are invariant because
+  (qH)(kH)ᵀ = qkᵀ — which smooths Q/K for INT quantization and makes the
+  int8 KV cache accurate.
+
+Conventions (all matrices orthonormal, blocked block-diagonally):
+  rotated residual:   x' = x·H            (H = Hᵀ, H·H = I per block)
+  DCT domain output:  ŷ = y·Dᵀ  ⇒  online IDCT: y = ŷ·D
+
+Baselines implemented for the paper's comparisons: ``rtn`` (no transforms)
+and ``quarot`` (Hadamard only, no DCT).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import transforms
+from repro.core.quantize import (
+    QTensor,
+    quantize_per_token,
+    quantize_weight,
+)
+
+__all__ = [
+    "QuantPolicy",
+    "QuantLinear",
+    "FoldedNorm",
+    "apply_linear",
+    "apply_norm",
+    "prepare_linear",
+    "online_wht",
+    "W4A8",
+    "W4A4",
+]
+
+DCT_BLOCK = 64
+
+
+@dataclasses.dataclass(frozen=True)
+class QuantPolicy:
+    """Which bits + which transforms. method ∈ {rtn, quarot, versaq}."""
+
+    w_bits: int = 4
+    a_bits: int = 8
+    method: str = "versaq"
+
+    @property
+    def use_wht(self) -> bool:
+        return self.method in ("quarot", "versaq")
+
+    @property
+    def use_dct(self) -> bool:
+        return self.method == "versaq"
+
+    @property
+    def name(self) -> str:
+        return f"{self.method}-w{self.w_bits}a{self.a_bits}"
+
+
+W4A8 = QuantPolicy(4, 8, "versaq")
+W4A4 = QuantPolicy(4, 4, "versaq")
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class QuantLinear:
+    """A quantized linear layer in the VersaQ flow.
+
+    ``qw`` holds the fully fused+quantized weight.  Static flags describe
+    the *online* ops this layer still needs:
+
+    - ``rotate_input``: apply a blocked WHT to x before quantizing (used
+      where the producer couldn't be fused, e.g. the FFN hidden -> down
+      projection, paper Fig. 5 "WHT" box).
+    - ``idct``: apply the block IDCT to the output (cancels the offline D).
+    """
+
+    qw: QTensor
+    bias: Optional[jnp.ndarray] = None
+    a_bits: int = dataclasses.field(metadata=dict(static=True), default=8)
+    rotate_input: bool = dataclasses.field(metadata=dict(static=True), default=False)
+    idct: bool = dataclasses.field(metadata=dict(static=True), default=False)
+    dct_block: int = dataclasses.field(metadata=dict(static=True), default=DCT_BLOCK)
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class Norm:
+    """Plain (unquantized) norm: γ (+β), kind ∈ {rms, ln}."""
+
+    g: jnp.ndarray
+    b: Optional[jnp.ndarray] = None
+    kind: str = dataclasses.field(metadata=dict(static=True), default="rms")
+    eps: float = dataclasses.field(metadata=dict(static=True), default=1e-6)
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class FoldedNorm:
+    """Marker for a norm whose γ (and β) were folded into downstream weights.
+
+    The norm *statistics* still run online (bf16), in the rotated domain:
+
+    - RMSNorm: orthonormal rotation preserves ‖x‖₂, so plain x/rms(x) is
+      exact in the rotated domain.
+    - LayerNorm: the mean is recovered via the precomputed vector
+      ``u = Hᵀ1/d`` (nonzero only at block-leading coordinates) and the
+      variance from E[x²] − μ², both rotation-invariant.
+
+    β (if any) is folded into the downstream projection bias offline.
+    """
+
+    kind: str = dataclasses.field(metadata=dict(static=True), default="rms")
+    u: Optional[jnp.ndarray] = None  # Hᵀ1/d for LayerNorm mean recovery
+    eps: float = dataclasses.field(metadata=dict(static=True), default=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# Online ops
+# ---------------------------------------------------------------------------
+
+
+def online_wht(x: jnp.ndarray, block: int | None = None) -> jnp.ndarray:
+    """Blocked multiplier-free WHT along the last axis."""
+    return transforms.fast_wht(x, block=block)
+
+
+def _int_matmul(xq: QTensor, wq: QTensor, out_dtype) -> jnp.ndarray:
+    """(per-token int) x (per-channel int) -> scaled float.
+
+    jnp fallback path (the Pallas kernel in ``kernels/quant_matmul.py`` is
+    the TPU hot path; numerics are identical).  Values are cast to f32
+    whose 24-bit mantissa represents every int8 product exactly; f32
+    accumulation matches the kernel's int32 accumulate to ~1e-7 relative
+    for the K sizes used here.
+    """
+    xv = xq.values.astype(jnp.float32)
+    wv = wq.unpacked_values().astype(jnp.float32)
+    acc = jnp.einsum("...k,kn->...n", xv, wv)
+    out = acc * xq.scale.astype(jnp.float32) * wq.scale.astype(jnp.float32)
+    return out.astype(out_dtype)
+
+
+def apply_linear(p: Any, x: jnp.ndarray) -> jnp.ndarray:
+    """Dispatching linear: plain {"w": ...} dict or QuantLinear."""
+    if isinstance(p, QuantLinear):
+        dtype = x.dtype
+        if p.rotate_input:
+            x = online_wht(x)
+        xq = quantize_per_token(x, p.a_bits)
+        y = _int_matmul(xq, p.qw, jnp.float32)
+        if p.idct:
+            d = transforms.dct_matrix(p.dct_block, dtype=jnp.float32)
+            y = transforms.apply_blocked(y, d, p.dct_block)  # ŷ·D cancels offline ·Dᵀ
+        if p.bias is not None:
+            y = y + p.bias.astype(jnp.float32)
+        return y.astype(dtype)
+    y = jnp.einsum("...k,kn->...n", x, p["w"].astype(x.dtype))
+    if p.get("b") is not None:
+        y = y + p["b"].astype(x.dtype)
+    return y
+
+
+def apply_norm(p: Any, x: jnp.ndarray) -> jnp.ndarray:
+    """Dispatching norm: ``Norm`` (plain) or ``FoldedNorm`` (γ folded away)."""
+    dtype = x.dtype
+    xf = x.astype(jnp.float32)
+    if isinstance(p, FoldedNorm):
+        if p.kind == "rms":
+            ms = jnp.mean(xf * xf, axis=-1, keepdims=True)
+            return (xf * jax.lax.rsqrt(ms + p.eps)).astype(dtype)
+        # LayerNorm statistics recovered in the rotated domain
+        d = xf.shape[-1]
+        mu = jnp.einsum("...d,d->...", xf, p.u)[..., None]  # mean of unrotated x
+        sq = jnp.mean(xf * xf, axis=-1, keepdims=True)  # E[x²] (rotation-invariant)
+        var = sq - mu * mu
+        # subtract the rotated-domain image of the mean: (μ·1)·H = μ·(1·H) = μ·d·u
+        return ((xf - mu * p.u * d) * jax.lax.rsqrt(var + p.eps)).astype(dtype)
+    if p.kind == "rms":
+        ms = jnp.mean(xf * xf, axis=-1, keepdims=True)
+        y = xf * jax.lax.rsqrt(ms + p.eps)
+    else:
+        mu = jnp.mean(xf, axis=-1, keepdims=True)
+        var = jnp.var(xf, axis=-1, keepdims=True)
+        y = (xf - mu) * jax.lax.rsqrt(var + p.eps)
+    y = y * p.g.astype(jnp.float32)
+    if p.b is not None:
+        y = y + p.b.astype(jnp.float32)
+    return y.astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# Offline weight preparation (Fig. 6)
+# ---------------------------------------------------------------------------
+
+
+def rotate_rows(w: jnp.ndarray, block: int | None = None) -> jnp.ndarray:
+    """W ← Hᵀ·W with blocked Hadamard along the input (row) dim (H = Hᵀ)."""
+    blk = block or transforms.block_size_for(w.shape[0])
+    h = transforms.hadamard_matrix(blk, dtype=jnp.float32)
+    d_in = w.shape[0]
+    w = w.reshape(d_in // blk, blk, -1).astype(jnp.float32)
+    w = jnp.einsum("cb,kbn->kcn", h, w)
+    return w.reshape(d_in, -1)
+
+
+def rotate_cols(w: jnp.ndarray, block: int | None = None) -> jnp.ndarray:
+    """W ← W·H (blocked) along the output dim — leaves outputs rotated."""
+    blk = block or transforms.block_size_for(w.shape[-1])
+    hb = transforms.hadamard_matrix(blk, dtype=jnp.float32)
+    d_out = w.shape[-1]
+    lead = w.shape[:-1]
+    w = w.reshape(lead + (d_out // blk, blk)).astype(jnp.float32)
+    w = jnp.einsum("...kb,bc->...kc", w, hb)
+    return w.reshape(lead + (d_out,))
+
+
+def dct_cols(w: jnp.ndarray, block: int = DCT_BLOCK) -> jnp.ndarray:
+    """W ← W·Dᵀ with blocked DCT along the output dim (online IDCT = ·D)."""
+    d = transforms.dct_matrix(block, dtype=jnp.float32)
+    d_out = w.shape[-1]
+    lead = w.shape[:-1]
+    w = w.reshape(lead + (d_out // block, block)).astype(jnp.float32)
+    w = jnp.einsum("...kb,cb->...kc", w, d)
+    return w.reshape(lead + (d_out,))
+
+
+def prepare_linear(
+    w: jnp.ndarray,
+    policy: QuantPolicy,
+    *,
+    gamma: Optional[jnp.ndarray] = None,
+    beta: Optional[jnp.ndarray] = None,
+    bias: Optional[jnp.ndarray] = None,
+    rotate_in_offline: bool = False,
+    rotate_input_online: bool = False,
+    rotate_out_offline: bool = False,
+    head_rot_in: tuple[int, int] | None = None,
+    head_rot_out: tuple[int, int] | None = None,
+    in_block: int | None = None,
+) -> QuantLinear:
+    """Fuse transforms into a [in, out] weight and quantize (Eq. 7).
+
+    ``gamma``/``beta``: the preceding (pre-)norm's element-wise scale/shift,
+    folded per Eq. 6 (β contributes ``β @ W`` to the bias, computed on the
+    *original* W).
+    ``rotate_in_offline``: fuse Hᵀ on the input side (input arrives rotated).
+    ``rotate_input_online``: the input can't arrive rotated (e.g. GLU
+    hidden); the online WHT runs at apply time and Hᵀ is fused here so the
+    pair cancels.
+    ``rotate_out_offline``: fuse H on the output side — the output stays in
+    the rotated residual domain (paper Stage 4); bias is rotated to match.
+    ``head_rot_in``/``head_rot_out``: (n_heads, head_dim) per-head Hadamard
+    on the input/output side (V/O projections).
+    """
+    w = w.astype(jnp.float32)
+    b = jnp.zeros((w.shape[-1],), jnp.float32) if bias is None else bias.astype(jnp.float32)
+    has_bias = bias is not None
+    if beta is not None:  # β @ W with the original W
+        b = b + beta.astype(jnp.float32) @ w
+        has_bias = True
+    if gamma is not None:
+        w = w * gamma.astype(jnp.float32)[:, None]
+    if head_rot_in is not None and policy.use_wht:
+        nh, hd = head_rot_in
+        w = fold_head_hadamard_in(w, nh, hd)
+    use_wht = policy.use_wht and (rotate_in_offline or rotate_input_online)
+    if use_wht:
+        w = rotate_rows(w, in_block or transforms.block_size_for(w.shape[0]))
+    if head_rot_out is not None and policy.use_wht:
+        nh, hd = head_rot_out
+        w = fold_head_hadamard_out(w, nh, hd)
+    if rotate_out_offline and policy.use_wht:
+        w = rotate_cols(w)
+        b = rotate_cols(b[None, :])[0]
+    idct = False
+    if policy.use_dct and w.shape[-1] % DCT_BLOCK == 0:
+        w = dct_cols(w, DCT_BLOCK)
+        # bias is added AFTER the online IDCT, in the un-DCT'd basis: keep b.
+        idct = True
+    qw = quantize_weight(w, policy.w_bits)
+    return QuantLinear(
+        qw=qw,
+        bias=b if has_bias else None,
+        a_bits=policy.a_bits,
+        rotate_input=policy.use_wht and rotate_input_online,
+        idct=idct,
+    )
+
+
+def fold_head_hadamard_out(w: jnp.ndarray, n_heads: int, head_dim: int) -> jnp.ndarray:
+    """Fuse a per-head Hadamard on the *output* side: W[:, (h,d)] ← W·H_dh."""
+    k = w.shape[0]
+    w = w.reshape(k, n_heads, head_dim)
+    w = rotate_cols(w)
+    return w.reshape(k, n_heads * head_dim)
+
+
+def fold_head_hadamard_in(w: jnp.ndarray, n_heads: int, head_dim: int) -> jnp.ndarray:
+    """Fuse a per-head Hadamard on the *input* side: W[(h,d), :] ← H_dhᵀ·W."""
+    hb = transforms.blocked_hadamard_matrix(head_dim, dtype=jnp.float32)
+    n = w.shape[-1]
+    w = w.reshape(n_heads, head_dim, n).astype(jnp.float32)
+    w = jnp.einsum("ed,hdn->hen", hb.T, w)
+    return w.reshape(n_heads * head_dim, n)
+
+
+def head_wht(x: jnp.ndarray) -> jnp.ndarray:
+    """Online per-head WHT along head_dim (scores-invariant Q/K smoothing)."""
+    return transforms.fast_wht(x)
+
+
+def make_folded_norm(kind: str, dim: int, eps: float = 1e-6) -> FoldedNorm:
+    if kind == "rms":
+        return FoldedNorm(kind="rms", u=None, eps=eps)
+    # u = Hᵀ1/d: for a normalized blocked Hadamard, column sums are √b at
+    # block-leading coordinates and 0 elsewhere.
+    b = transforms.block_size_for(dim)
+    u = jnp.zeros((dim,), jnp.float32).at[::b].set(jnp.sqrt(float(b)) / dim)
+    return FoldedNorm(kind="ln", u=u, eps=eps)

@@ -1,0 +1,102 @@
+"""jit'd public wrappers around the Pallas kernels.
+
+These are the entry points the rest of the framework uses.  On CPU (this
+container) they run in interpret mode for validation; on TPU they compile
+to Mosaic.  ``interpret`` defaults from the backend.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.quantize import QTensor, quantize_per_token
+from repro.kernels import quant_matmul as _qm
+from repro.kernels import two_stage_attention as _tsa
+from repro.kernels import wht as _wht
+
+__all__ = ["quant_linear_matmul", "two_stage_mha", "online_wht_2d"]
+
+
+def _default_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def quant_linear_matmul(
+    x: jnp.ndarray,
+    wq: QTensor,
+    a_bits: int = 8,
+    out_dtype=jnp.float32,
+    interpret: bool | None = None,
+    **tile_kw,
+) -> jnp.ndarray:
+    """Quantize activations per-token and run the integer matmul kernel.
+
+    x: [..., K] float -> returns [..., N] ``out_dtype``.
+    """
+    interpret = _default_interpret() if interpret is None else interpret
+    lead = x.shape[:-1]
+    k = x.shape[-1]
+    xq = quantize_per_token(x.reshape(-1, k), a_bits)
+    ws = wq.scale.reshape(1, -1).astype(jnp.float32)
+    y = _qm.quant_matmul(
+        xq.values,
+        xq.scale.astype(jnp.float32),
+        wq.values,
+        ws,
+        packed=wq.packed,
+        out_dtype=out_dtype,
+        interpret=interpret,
+        **tile_kw,
+    )
+    return y.reshape(lead + (y.shape[-1],))
+
+
+def two_stage_mha(
+    q: jnp.ndarray,
+    k: jnp.ndarray,
+    v: jnp.ndarray,
+    *,
+    causal: bool = False,
+    a_bits: int = 8,
+    interpret: bool | None = None,
+    **tile_kw,
+) -> jnp.ndarray:
+    """Paper-Alg.-1 attention over float [B, H, L, dh] inputs.
+
+    Quantizes Q/K per-token and V per-head to int8, then runs the
+    two-stage kernel.  Returns [B, H, Lq, dh] float32.
+    """
+    interpret = _default_interpret() if interpret is None else interpret
+    b, h, lq, dh = q.shape
+    lk = k.shape[2]
+
+    def flat(t, l):
+        return t.reshape(b * h, l, dh)
+
+    qf, kf, vf = flat(q, lq), flat(k, lk), flat(v, lk)
+    qq = quantize_per_token(qf, a_bits)
+    kq = quantize_per_token(kf, a_bits)
+    vmax = jnp.max(jnp.abs(vf), axis=(1, 2), keepdims=True)
+    vscale = jnp.maximum(vmax, 1e-8) / 127.0
+    vv = jnp.clip(jnp.round(vf / vscale), -127, 127).astype(jnp.int8)
+    out = _tsa.two_stage_attention(
+        qq.values,
+        qq.scale.astype(jnp.float32),
+        kq.values,
+        kq.scale.astype(jnp.float32),
+        vv,
+        vscale.astype(jnp.float32),
+        causal=causal,
+        interpret=interpret,
+        **tile_kw,
+    )
+    return out.reshape(b, h, lq, dh)
+
+
+def online_wht_2d(x: jnp.ndarray, interpret: bool | None = None, **kw) -> jnp.ndarray:
+    """Pallas blocked WHT along the last axis of [..., d]."""
+    interpret = _default_interpret() if interpret is None else interpret
+    lead = x.shape[:-1]
+    d = x.shape[-1]
+    y = _wht.wht(x.reshape(-1, d), interpret=interpret, **kw)
+    return y.reshape(lead + (d,))

@@ -1,0 +1,196 @@
+"""Roofline-term extraction from compiled dry-run artifacts.
+
+Hardware model: TPU v5e — 197 TFLOP/s bf16 per chip, 819 GB/s HBM,
+~50 GB/s/link ICI (task-specified constants).
+
+``cost_analysis()`` on an SPMD-partitioned executable reports **per-device**
+FLOPs and bytes, so the three terms are computed per device directly
+(equivalent to the total/(chips·peak) formulation).
+
+Collective bytes are NOT in cost_analysis: we parse the partitioned HLO
+text and sum operand bytes of every all-gather / all-reduce /
+reduce-scatter / all-to-all / collective-permute, with a per-op wire
+multiplier (all-reduce ≈ 2x its operand for ring reduce+broadcast phases).
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+
+PEAK_FLOPS = 197e12  # bf16 per chip
+HBM_BW = 819e9  # bytes/s per chip
+ICI_BW = 50e9  # bytes/s per link
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "bf16": 2, "f16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "s4": 0.5, "u4": 0.5, "pred": 1, "c64": 8, "c128": 16,
+}
+
+_SHAPE_RE = re.compile(r"\b(f64|f32|bf16|f16|f8e4m3fn|f8e5m2|s64|u64|s32|u32|s16|u16|s8|u8|s4|u4|pred|c64|c128)\[([0-9,]*)\]")
+_OP_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?[\w.\-]+\s*=\s*"
+    r"(?:\(?[a-z0-9]+\[[0-9,]*\][^\s]*\)?,?\s*)+"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(-start|-done)?\(",
+)
+_GROUPS_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_GROUPS_EXPL_RE = re.compile(r"replica_groups=\{\{([0-9,]+)\}")
+
+
+def _shape_bytes(dtype: str, dims: str) -> float:
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            n *= int(d)
+    return n * _DTYPE_BYTES[dtype]
+
+
+def _group_size(line: str, default: int = 2) -> int:
+    m = _GROUPS_RE.search(line)
+    if m:
+        return max(int(m.group(2)), 1)
+    m = _GROUPS_EXPL_RE.search(line)
+    if m:
+        return max(len(m.group(1).split(",")), 1)
+    return default
+
+
+def _wire_bytes(kind: str, result_bytes: float, g: int) -> float:
+    """Per-device wire bytes (ring algorithms) from the RESULT shape —
+    operand shapes are not printed in post-optimization HLO.
+
+    all-reduce: result == operand; ring = reduce-scatter + all-gather
+                => 2·b·(g-1)/g
+    all-gather: result == gathered => received (g-1)/g of result
+    reduce-scatter: result == operand/g => sends (g-1)/g of operand
+                = result·(g-1)
+    all-to-all: keeps 1/g locally => result·(g-1)/g
+    collective-permute: full result
+    """
+    if kind == "all-reduce":
+        return 2.0 * result_bytes * (g - 1) / g
+    if kind == "all-gather":
+        return result_bytes * (g - 1) / g
+    if kind == "reduce-scatter":
+        return result_bytes * (g - 1)
+    if kind == "all-to-all":
+        return result_bytes * (g - 1) / g
+    return result_bytes
+
+
+def collective_bytes(hlo_text: str) -> dict:
+    """Sum per-device wire bytes per collective kind from partitioned HLO."""
+    kinds = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all", "collective-permute")
+    per_kind: dict[str, float] = {k: 0.0 for k in kinds}
+    count: dict[str, int] = {k: 0 for k in kinds}
+    for line in hlo_text.splitlines():
+        m = _OP_RE.match(line)
+        if not m or m.group(2) == "-done":
+            continue
+        kind = m.group(1)
+        shapes = _SHAPE_RE.findall(line[: m.start(1)])  # result shape(s)
+        b = sum(_shape_bytes(d, s) for d, s in shapes)
+        per_kind[kind] += _wire_bytes(kind, b, _group_size(line))
+        count[kind] += 1
+    total = sum(per_kind.values())
+    return {"total": total, "per_kind": per_kind, "count": count}
+
+
+@dataclasses.dataclass
+class Roofline:
+    flops: float  # per device
+    hbm_bytes: float  # per device
+    coll_bytes: float  # per device (wire)
+    n_links: int = 4  # v5e 2D torus: 4 links/chip; collectives use ~all
+
+    @property
+    def t_compute(self) -> float:
+        return self.flops / PEAK_FLOPS
+
+    @property
+    def t_memory(self) -> float:
+        return self.hbm_bytes / HBM_BW
+
+    @property
+    def t_collective(self) -> float:
+        return self.coll_bytes / ICI_BW
+
+    @property
+    def dominant(self) -> str:
+        terms = {
+            "compute": self.t_compute,
+            "memory": self.t_memory,
+            "collective": self.t_collective,
+        }
+        return max(terms, key=terms.get)
+
+    @property
+    def t_bound(self) -> float:
+        return max(self.t_compute, self.t_memory, self.t_collective)
+
+    def as_dict(self) -> dict:
+        return {
+            "flops_per_dev": self.flops,
+            "hbm_bytes_per_dev": self.hbm_bytes,
+            "coll_bytes_per_dev": self.coll_bytes,
+            "t_compute_s": self.t_compute,
+            "t_memory_s": self.t_memory,
+            "t_collective_s": self.t_collective,
+            "dominant": self.dominant,
+        }
+
+
+def extract(compiled, lowered_text: str | None = None) -> dict:
+    cost = compiled.cost_analysis()
+    if isinstance(cost, list):  # older API returns [dict]
+        cost = cost[0]
+    flops = float(cost.get("flops", 0.0))
+    bytes_acc = float(cost.get("bytes accessed", cost.get("bytes accessed0{}", 0.0)))
+    text = compiled.as_text() if lowered_text is None else lowered_text
+    coll = collective_bytes(text)
+    rl = Roofline(flops=flops, hbm_bytes=bytes_acc, coll_bytes=coll["total"])
+    mem = compiled.memory_analysis()
+    out = rl.as_dict()
+    out["collectives"] = coll
+    out["memory"] = {
+        "argument_bytes": getattr(mem, "argument_size_in_bytes", None),
+        "output_bytes": getattr(mem, "output_size_in_bytes", None),
+        "temp_bytes": getattr(mem, "temp_size_in_bytes", None),
+        "peak_bytes": getattr(mem, "serialized_size_in_bytes", None),
+        "generated_code_bytes": getattr(mem, "generated_code_size_in_bytes", None),
+    }
+    return out
+
+
+def time_scan_flops(cfg, shape_kind: str, seq: int, batch: int) -> float:
+    """Analytic FLOPs of inner time-scan recurrences (bodies XLA counts
+    once): Mamba selective scan ≈ 8·B·L·d_inner·d_state per layer
+    (in-step discretization: exp, dB·u, state update, C·h); RWKV6 wkv
+    ≈ 6·B·L·d·head_dim per layer.  Train steps triple (fwd + bwd ~2x).
+    Decode steps run the recurrence once (L=1)."""
+    l_eff = 1 if shape_kind == "decode" else seq
+    mult = 3.0 if shape_kind == "train" else 1.0
+    total = 0.0
+    for i in range(cfg.n_layers):
+        kind = cfg.pattern[i % len(cfg.pattern)]
+        if kind == "mamba":
+            di = cfg.mamba_expand * cfg.d_model
+            total += 8.0 * batch * l_eff * di * cfg.mamba_d_state
+        elif kind == "rwkv":
+            total += 6.0 * batch * l_eff * cfg.d_model * cfg.rwkv_head_dim
+    return total * mult
+
+
+def model_flops(cfg, shape_kind: str, seq: int, batch: int) -> float:
+    """MODEL_FLOPS = 6·N_active·D for train, 2·N_active·D for inference
+    (per whole step, all devices).  For VGGT shapes ``seq`` is the frame
+    count S and tokens = B·S·(patches+special)."""
+    total, active = cfg.param_counts()
+    if shape_kind.startswith("vggt"):
+        tokens = batch * seq * (1024 + cfg.n_special_tokens)
+        mult = 6.0 if shape_kind == "vggt_train" else 2.0
+        return mult * active * tokens
+    tokens = batch * seq if shape_kind != "decode" else batch  # decode: 1 tok
+    mult = 6.0 if shape_kind == "train" else 2.0
+    return mult * active * tokens

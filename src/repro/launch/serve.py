@@ -1,0 +1,44 @@
+"""Serving launcher: quantize + serve batched requests.
+
+  PYTHONPATH=src python -m repro.launch.serve --arch qwen3-14b-smoke \
+      --policy w4a8 --batch 4 --prompt-len 16 --gen 32
+"""
+import argparse
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config
+from repro.core.model_quant import quantize_lm
+from repro.core.versaq import QuantPolicy
+from repro.models import lm
+from repro.serving.engine import Engine
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen3-14b-smoke")
+    ap.add_argument("--policy", default="w4a8", help="w4a8|w4a4|fp")
+    ap.add_argument("--method", default="versaq", help="versaq|quarot|rtn")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=16)
+    ap.add_argument("--gen", type=int, default=32)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch)
+    key = jax.random.PRNGKey(0)
+    params = lm.init_params(cfg, key)
+    if args.policy != "fp":
+        w, a = int(args.policy[1]), int(args.policy[3])
+        params = quantize_lm(cfg, params, QuantPolicy(w, a, args.method))
+    eng = Engine(cfg, params, max_len=args.prompt_len + args.gen)
+    prompts = jax.random.randint(key, (args.batch, args.prompt_len), 0, cfg.vocab_size)
+    out = eng.generate(prompts, args.gen)
+    print("generated:", out.shape)
+    print(f"prefill {eng.stats.prefill_s*1e3:.1f}ms  "
+          f"decode {eng.stats.decode_s*1e3:.1f}ms  "
+          f"({eng.stats.tokens/max(eng.stats.decode_s,1e-9):.0f} tok/s)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,355 @@
+"""(arch × shape) cell definitions for the multi-pod dry-run.
+
+Each cell binds: the step function (train_step / prefill_step /
+decode_step), ShapeDtypeStruct stand-ins for every input (weak-type
+correct, shardable, **no device allocation** — built with
+``jax.eval_shape``), and the in/out shardings.
+
+Shape set (assignment):
+  train_4k     seq 4096  × global_batch 256   -> train_step (bf16 + AdamW)
+  prefill_32k  seq 32768 × global_batch 32    -> serve prefill (W4A8)
+  decode_32k   seq 32768 × global_batch 128   -> serve_step, 1 new token
+  long_500k    seq 524288 × global_batch 1    -> serve_step; SSM/hybrid only
+
+``applicable()`` encodes the assignment's skip rules (long_500k needs
+sub-quadratic attention -> jamba/rwkv6 only; every assigned arch is
+decoder-style so decode shapes always apply).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from repro.core.model_quant import quantize_lm, quantize_vggt
+from repro.core.versaq import W4A8
+from repro.models import lm
+from repro.optim import adamw
+from repro.parallel import sharding
+from repro.runtime.trainer import lm_loss
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeSpec:
+    name: str
+    kind: str  # train | prefill | decode
+    seq: int
+    batch: int
+
+
+SHAPES = {
+    "train_4k": ShapeSpec("train_4k", "train", 4096, 256),
+    "prefill_32k": ShapeSpec("prefill_32k", "prefill", 32768, 32),
+    "decode_32k": ShapeSpec("decode_32k", "decode", 32768, 128),
+    "long_500k": ShapeSpec("long_500k", "decode", 524288, 1),
+}
+
+SUBQUADRATIC = {"jamba-v0.1-52b", "rwkv6-1.6b"}
+
+
+def applicable(cfg: ModelConfig, shape: str) -> tuple[bool, str]:
+    if shape.startswith("vggt") != bool(cfg.vggt):
+        return False, "vggt shapes pair with the vggt arch only"
+    if shape == "long_500k" and cfg.name not in SUBQUADRATIC:
+        return False, (
+            "pure full-attention arch: a 524k dense-softmax KV pass is the "
+            "quadratic wall itself (DESIGN.md §4); runs for SSM/hybrid only"
+        )
+    return True, ""
+
+
+def _shard_tree(mesh: Mesh, pspecs):
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s),
+        pspecs,
+        is_leaf=lambda x: isinstance(x, P),
+    )
+
+
+@dataclasses.dataclass
+class Cell:
+    """Everything dryrun.py needs to lower one (arch × shape × mesh)."""
+
+    fn: Callable
+    args: tuple  # ShapeDtypeStructs
+    in_shardings: tuple
+    arch: str
+    shape: str
+    donate: tuple = ()
+
+
+def _train_cell(cfg: ModelConfig, shape: ShapeSpec, mesh: Mesh, *, seq_sp=True, zero1=False, remat=True, unroll=False, attn=None) -> Cell:
+    opt_cfg = adamw.AdamWConfig()
+    dp = sharding.batch_axes(mesh)
+    act = sharding.act_pspec(mesh, seq_shard=seq_sp)
+
+    cfg2 = cfg.with_(attn_impl=attn) if attn else cfg
+
+    def loss_fn(params, batch):
+        logits, _ = lm.forward(
+            cfg2, params, batch["tokens"], remat=remat, act_sharding=act,
+            scan_unroll=unroll,
+        )
+        logits = logits.astype(jnp.float32)
+        logz = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, batch["labels"][..., None], axis=-1)[..., 0]
+        return jnp.mean(logz - gold)
+
+    def train_step(params, opt_state, batch):
+        loss, grads = jax.value_and_grad(loss_fn)(params, batch)
+        params, opt_state, metrics = adamw.apply(opt_cfg, opt_state, params, grads)
+        return params, opt_state, loss
+
+    params_s = jax.eval_shape(
+        lambda: lm.init_params(cfg, jax.random.PRNGKey(0), dtype=jnp.bfloat16)
+    )
+    opt_s = jax.eval_shape(adamw.init, params_s)
+    if cfg.embed_inputs:
+        tokens = jax.ShapeDtypeStruct((shape.batch, shape.seq, cfg.d_model), jnp.bfloat16)
+    else:
+        tokens = jax.ShapeDtypeStruct((shape.batch, shape.seq), jnp.int32)
+    batch_s = {
+        "tokens": tokens,
+        "labels": jax.ShapeDtypeStruct((shape.batch, shape.seq), jnp.int32),
+    }
+    p_spec = sharding.make_param_pspecs(params_s)
+    o_spec = adamw.AdamWState(
+        step=P(),
+        m=sharding.make_opt_pspecs(params_s, zero1=zero1),
+        v=sharding.make_opt_pspecs(params_s, zero1=zero1),
+    )
+    b_spec = {
+        "tokens": P(dp, None, None) if cfg.embed_inputs else P(dp, None),
+        "labels": P(dp, None),
+    }
+    in_sh = (
+        _shard_tree(mesh, p_spec),
+        _shard_tree(mesh, o_spec),
+        _shard_tree(mesh, b_spec),
+    )
+    return Cell(
+        fn=train_step,
+        args=(params_s, opt_s, batch_s),
+        in_shardings=in_sh,
+        arch=cfg.name,
+        shape=shape.name,
+    )
+
+
+def _serve_params_spec(cfg: ModelConfig, fp_serve: bool = False):
+    """Serving parameters as ShapeDtypeStructs — W4A8-quantized by
+    default, bf16 for the unquantized comparison baseline."""
+
+    def build():
+        p = lm.init_params(cfg, jax.random.PRNGKey(0), dtype=jnp.bfloat16)
+        return p if fp_serve else quantize_lm(cfg, p, W4A8)
+
+    return jax.eval_shape(build)
+
+
+def _prefill_cell(cfg: ModelConfig, shape: ShapeSpec, mesh: Mesh, *, unroll=False, kv_dtype=None, fp_serve=False, act_sp=False, attn=None, attn_bf16=False) -> Cell:
+    params_s = _serve_params_spec(cfg, fp_serve)
+    cache_s = jax.eval_shape(
+        functools.partial(lm.init_cache, cfg, shape.batch, shape.seq,
+                          kv_dtype or jnp.int8)
+    )
+    if cfg.embed_inputs:
+        tokens = jax.ShapeDtypeStruct((shape.batch, shape.seq, cfg.d_model), jnp.bfloat16)
+    else:
+        tokens = jax.ShapeDtypeStruct((shape.batch, shape.seq), jnp.int32)
+
+    cfg2 = cfg.with_(attn_impl=attn) if attn else cfg
+    if attn_bf16:
+        cfg2 = cfg2.with_(attn_dtype="bf16")
+    act = sharding.act_pspec(mesh, seq_shard=True) if act_sp else None
+
+    def prefill_step(params, tokens, cache):
+        return lm.forward(cfg2, params, tokens, cache=cache, mode="prefill",
+                          scan_unroll=unroll, act_sharding=act)
+
+    dp = sharding.batch_axes(mesh)
+    p_spec = sharding.make_param_pspecs(params_s)
+    c_spec = sharding.cache_pspecs(cfg, cache_s, mesh, seq_axis_shard=False)
+    t_spec = P(dp, None, None) if cfg.embed_inputs else P(dp, None)
+    in_sh = (
+        _shard_tree(mesh, p_spec),
+        NamedSharding(mesh, t_spec),
+        _shard_tree(mesh, c_spec),
+    )
+    return Cell(
+        fn=prefill_step,
+        args=(params_s, tokens, cache_s),
+        in_shardings=in_sh,
+        arch=cfg.name,
+        shape=shape.name,
+    )
+
+
+def _decode_cell(cfg: ModelConfig, shape: ShapeSpec, mesh: Mesh, *, unroll=False, kv_dtype=None, fp_serve=False, kv_seq_model=False, attn=None) -> Cell:
+    params_s = _serve_params_spec(cfg, fp_serve)
+    cache_s = jax.eval_shape(
+        functools.partial(lm.init_cache, cfg, shape.batch, shape.seq,
+                          kv_dtype or jnp.int8)
+    )
+    if cfg.embed_inputs:
+        tok = jax.ShapeDtypeStruct((shape.batch, 1, cfg.d_model), jnp.bfloat16)
+    else:
+        tok = jax.ShapeDtypeStruct((shape.batch,), jnp.int32)
+
+    cfg2 = cfg.with_(attn_impl=attn) if attn else cfg
+
+    def serve_step(params, token, cache):
+        if not cfg.embed_inputs:
+            token2 = token[:, None] if token.ndim == 1 else token
+        else:
+            token2 = token
+        return lm.forward(cfg2, params, token2, cache=cache, mode="decode", scan_unroll=unroll)
+
+    # batch=1 long-context: shard the cache sequence dim (SP flash-decode);
+    # batched decode: shard the cache batch dim over DP
+    seq_sp = shape.batch == 1
+    dp = sharding.batch_axes(mesh)
+    p_spec = sharding.make_param_pspecs(params_s)
+    c_spec = sharding.cache_pspecs(cfg, cache_s, mesh, seq_axis_shard=seq_sp,
+                                   seq_model_shard=kv_seq_model)
+    t_spec = (P(dp, None, None) if cfg.embed_inputs else P(dp)) if not seq_sp else (
+        P(None, None, None) if cfg.embed_inputs else P(None)
+    )
+    in_sh = (
+        _shard_tree(mesh, p_spec),
+        NamedSharding(mesh, t_spec),
+        _shard_tree(mesh, c_spec),
+    )
+    return Cell(
+        fn=serve_step,
+        args=(params_s, tok, cache_s),
+        in_shardings=in_sh,
+        arch=cfg.name,
+        shape=shape.name,
+    )
+
+
+# --- VGGT (the paper's model): serve = one feed-forward pass per scene
+# batch; global attention sequence = S*(P+5) tokens --------------------------
+
+VGGT_SHAPES = {
+    "vggt_serve_s8": ShapeSpec("vggt_serve_s8", "vggt_serve", 8, 32),  # seq=S frames, batch=scenes
+    "vggt_serve_s32": ShapeSpec("vggt_serve_s32", "vggt_serve", 32, 4),
+    "vggt_train_s4": ShapeSpec("vggt_train_s4", "vggt_train", 4, 64),
+}
+SHAPES.update(VGGT_SHAPES)
+VGGT_PATCHES = 1024
+
+
+def _vggt_cell(cfg: ModelConfig, shape: ShapeSpec, mesh: Mesh, *, unroll=False,
+               fp_serve=False, act_sp=False, attn=None, **_):
+    from repro.core.model_quant import quantize_vggt
+    from repro.models import vggt as vggt_mod
+
+    s_frames, batch = shape.seq, shape.batch
+    cfg2 = cfg.with_(attn_impl=attn) if attn else cfg
+    dp = sharding.batch_axes(mesh)
+    import numpy as _np
+
+    dp_size = int(_np.prod([mesh.shape[a] for a in dp]))
+    # small scene batches shard the FRAME dim over data instead (S=32 ≥ 16)
+    if batch % dp_size == 0:
+        bspec = P(dp, None, None, None)
+        actspec = P(dp, None, "model", None)
+    else:
+        pod = "pod" if ("pod" in mesh.axis_names and batch % mesh.shape["pod"] == 0) else None
+        bspec = P(pod, "data", None, None)
+        actspec = P(pod, "data", "model", None)
+    act = NamedSharding(mesh, actspec) if act_sp else None
+    patches = jax.ShapeDtypeStruct(
+        (batch, s_frames, VGGT_PATCHES, cfg.d_model), jnp.bfloat16
+    )
+    if shape.kind == "vggt_serve":
+        params_s = jax.eval_shape(
+            lambda: (
+                (lambda p: p) if fp_serve else (lambda p: quantize_vggt(cfg, p, W4A8))
+            )(vggt_mod.init_params(cfg, jax.random.PRNGKey(0), dtype=jnp.bfloat16))
+        )
+
+        def serve_step(params, patches):
+            return vggt_mod.forward(cfg2, params, patches, scan_unroll=unroll,
+                                    act_sharding=act)
+
+        p_spec = sharding.make_param_pspecs(params_s)
+        in_sh = (
+            _shard_tree(mesh, p_spec),
+            NamedSharding(mesh, bspec),
+        )
+        return Cell(fn=serve_step, args=(params_s, patches), in_shardings=in_sh,
+                    arch=cfg.name, shape=shape.name)
+
+    # vggt_train
+    params_s = jax.eval_shape(
+        lambda: vggt_mod.init_params(cfg, jax.random.PRNGKey(0), dtype=jnp.bfloat16)
+    )
+    opt_s = jax.eval_shape(adamw.init, params_s)
+    opt_cfg = adamw.AdamWConfig()
+    batch_s = {
+        "patches": patches,
+        "pose": jax.ShapeDtypeStruct((batch, s_frames, 9), jnp.float32),
+        "depth": jax.ShapeDtypeStruct((batch, s_frames, VGGT_PATCHES), jnp.float32),
+        "points": jax.ShapeDtypeStruct((batch, s_frames, VGGT_PATCHES, 3), jnp.float32),
+    }
+
+    def train_step(params, opt_state, b):
+        def loss_fn(p):
+            out = vggt_mod.forward(cfg2, p, b["patches"], scan_unroll=unroll,
+                                   act_sharding=act, remat=True)
+            return (
+                jnp.mean((out["pose"] - b["pose"]) ** 2)
+                + jnp.mean((out["depth"] - b["depth"]) ** 2)
+                + jnp.mean((out["points"] - b["points"]) ** 2)
+            )
+
+        loss, grads = jax.value_and_grad(loss_fn)(params)
+        params, opt_state, _ = adamw.apply(opt_cfg, opt_state, params, grads)
+        return params, opt_state, loss
+
+    p_spec = sharding.make_param_pspecs(params_s)
+    bdim = bspec[0] if batch % dp_size == 0 else (bspec[0], bspec[1])
+    b_spec = {
+        "patches": bspec,
+        "pose": P(*bspec[:2], None),
+        "depth": P(*bspec[:2], None),
+        "points": bspec,
+    }
+    in_sh = (
+        _shard_tree(mesh, p_spec),
+        _shard_tree(mesh, adamw.AdamWState(step=P(), m=p_spec, v=p_spec)),
+        _shard_tree(mesh, b_spec),
+    )
+    return Cell(fn=train_step, args=(params_s, opt_s, batch_s), in_shardings=in_sh,
+                arch=cfg.name, shape=shape.name)
+
+
+def make_cell(cfg: ModelConfig, shape_name: str, mesh: Mesh, **kw) -> Cell:
+    shape = SHAPES[shape_name]
+    if shape.kind.startswith("vggt"):
+        kw = {k: v for k, v in kw.items() if k in ("unroll", "fp_serve", "act_sp", "attn")}
+        return _vggt_cell(cfg, shape, mesh, **kw)
+    if shape.kind == "train":
+        kw = {k: v for k, v in kw.items() if k in ("seq_sp", "zero1", "remat", "unroll", "attn")}
+        return _train_cell(cfg, shape, mesh, **kw)
+    if shape.kind == "prefill":
+        kw = {k: v for k, v in kw.items() if k in ("unroll", "kv_dtype", "fp_serve", "act_sp", "attn", "attn_bf16")}
+        return _prefill_cell(cfg, shape, mesh, **kw)
+    kw = {k: v for k, v in kw.items() if k in ("unroll", "kv_dtype", "fp_serve", "kv_seq_model", "attn")}
+    return _decode_cell(cfg, shape, mesh, **kw)
+
+
+def reduced_cfg(cfg: ModelConfig, n_groups: int) -> ModelConfig:
+    """Same dims, fewer scan groups — for the trip-count-exact roofline
+    extrapolation (layer stacks are homogeneous, so costs are affine in
+    the group count)."""
+    period = len(cfg.pattern)
+    return cfg.with_(n_layers=cfg.first_dense + n_groups * period)

@@ -1,0 +1,43 @@
+"""Training launcher: fault-tolerant loop with auto-resume.
+
+  PYTHONPATH=src python -m repro.launch.train --arch qwen3-14b-smoke \
+      --steps 300 --batch 8 --seq 64 --ckpt /tmp/ckpt
+
+On a real pod this runs under pjit with the production mesh (see
+dryrun.py for the lowered artifact); on this CPU container it trains the
+reduced configs end-to-end.
+"""
+import argparse
+
+from repro.configs import get_config
+from repro.data.pipeline import DataConfig
+from repro.optim import adamw
+from repro.runtime.trainer import Trainer, TrainerConfig
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen3-14b-smoke")
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--lr", type=float, default=3e-3)
+    ap.add_argument("--ckpt", default="/tmp/repro_ckpt")
+    ap.add_argument("--checkpoint-every", type=int, default=50)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch)
+    t = Trainer(
+        cfg,
+        adamw.AdamWConfig(lr=args.lr, warmup_steps=20, total_steps=args.steps),
+        DataConfig(vocab_size=cfg.vocab_size, batch=args.batch, seq_len=args.seq),
+        TrainerConfig(total_steps=args.steps, checkpoint_every=args.checkpoint_every),
+        args.ckpt,
+    )
+    res = t.run()
+    print(f"final loss: {res['history'][-1]['loss']:.4f}  "
+          f"stragglers flagged: {len(res['stragglers'])}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,1 @@
+"""Model zoo: composable transformer stacks + VGGT."""

@@ -1,0 +1,376 @@
+"""Attention mixers: GQA (w/ qk-norm) and MLA, with quantized KV caches.
+
+Three entry modes per mixer:
+  * ``full``   — training / VGGT forward: attention over the whole sequence
+                 (causal flag per call; VGGT global/frame attention is
+                 bidirectional, LM training is causal).
+  * ``prefill``— like full, but also writes the (int8-quantized) KV cache.
+  * ``decode`` — one new token against the cache (paper's serve path; the
+                 int8 cache is the activation-quantization idea applied to
+                 the most bytes-critical tensor in long-sequence serving).
+
+Per the paper's Stage-2 flow: Q/K get an online per-head WHT after
+RoPE/qk-norm when the layer is quantized (scores invariant, distributions
+smoothed); V carries an offline per-head Hadamard folded into W_v/W_o.
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.core.quantize import QTensor
+from repro.core.versaq import QuantLinear, head_wht
+from repro.models import layers as L
+
+
+class KVCache(NamedTuple):
+    """int8 KV cache with per-(token, head) scales.
+
+    k/v: [B, S, Hkv, dh] int8;  k_scale/v_scale: [B, S, Hkv, 1] f32.
+    ``length``: [] int32 current fill.
+    For MLA the "k" slot stores the compressed c_kv (+ rope key appended
+    separately) — see MLAttention.
+    """
+
+    k: jnp.ndarray
+    v: jnp.ndarray
+    k_scale: jnp.ndarray
+    v_scale: jnp.ndarray
+    length: jnp.ndarray
+
+
+def _quant_tokens(x: jnp.ndarray) -> tuple[jnp.ndarray, jnp.ndarray]:
+    amax = jnp.max(jnp.abs(x), axis=-1, keepdims=True)
+    scale = jnp.maximum(amax, 1e-8) / 127.0
+    q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+    return q, scale.astype(jnp.float32)
+
+
+def _quant_tokens_like(x: jnp.ndarray, dtype) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Quantize for an int8 cache; pass through for a bf16 cache (the
+    unquantized baseline in the roofline comparisons)."""
+    if dtype == jnp.int8:
+        return _quant_tokens(x)
+    return x.astype(dtype), jnp.ones(x.shape[:-1] + (1,), jnp.float32)
+
+
+def init_kv_cache(
+    cfg: ModelConfig, batch: int, max_len: int, n_groups: int, kv_dtype=jnp.int8
+) -> KVCache:
+    """Stacked cache for ``n_groups`` scan groups × per-group attn layers."""
+    if cfg.mla:
+        kd = cfg.kv_lora_rank + cfg.qk_rope_dim
+        k = jnp.zeros((n_groups, batch, max_len, 1, kd), kv_dtype)
+        v = jnp.zeros((n_groups, batch, max_len, 1, 1), kv_dtype)  # unused slot
+        ks = jnp.zeros((n_groups, batch, max_len, 1, 1), jnp.float32)
+        vs = jnp.zeros((n_groups, batch, max_len, 1, 1), jnp.float32)
+    else:
+        hkv, dh = cfg.n_kv_heads, cfg.head_dim
+        k = jnp.zeros((n_groups, batch, max_len, hkv, dh), kv_dtype)
+        v = jnp.zeros((n_groups, batch, max_len, hkv, dh), kv_dtype)
+        ks = jnp.zeros((n_groups, batch, max_len, hkv, 1), jnp.float32)
+        vs = jnp.zeros((n_groups, batch, max_len, hkv, 1), jnp.float32)
+    return KVCache(k, v, ks, vs, jnp.zeros((), jnp.int32))
+
+
+# ---------------------------------------------------------------------------
+# GQA
+# ---------------------------------------------------------------------------
+
+
+def init_gqa(key, cfg: ModelConfig, dtype=jnp.float32):
+    dh = cfg.head_dim
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": L.init_linear(ks[0], cfg.d_model, cfg.n_heads * dh, bias=cfg.attn_bias, dtype=dtype),
+        "wk": L.init_linear(ks[1], cfg.d_model, cfg.n_kv_heads * dh, bias=cfg.attn_bias, dtype=dtype),
+        "wv": L.init_linear(ks[2], cfg.d_model, cfg.n_kv_heads * dh, bias=cfg.attn_bias, dtype=dtype),
+        "wo": L.init_linear(ks[3], cfg.n_heads * dh, cfg.d_model, bias=cfg.attn_bias, dtype=dtype),
+    }
+    if cfg.qk_norm:
+        p["q_norm"] = L.init_norm(dh, kind="rms", dtype=dtype)
+        p["k_norm"] = L.init_norm(dh, kind="rms", dtype=dtype)
+    return p
+
+
+def _sdpa(q, k, v, *, causal: bool, q_offset: int | jnp.ndarray = 0, kv_len: Optional[jnp.ndarray] = None):
+    """Vanilla SDPA (materializes [Lq,Lk] scores) — ablation baseline.
+
+    q: [B,Lq,H,dh]; k/v: [B,Lk,Hkv,dh]. f32 softmax. GQA broadcast."""
+    b, lq, h, dh = q.shape
+    lk, hkv = k.shape[1], k.shape[2]
+    g = h // hkv
+    qf = q.reshape(b, lq, hkv, g, dh).astype(jnp.float32)
+    s = jnp.einsum("bqhgd,bkhd->bhgqk", qf, k.astype(jnp.float32)) / jnp.sqrt(
+        jnp.float32(dh)
+    )
+    if causal:
+        rows = jnp.asarray(q_offset) + jnp.arange(lq)[:, None]
+        cols = jnp.arange(lk)[None, :]
+        s = jnp.where(rows >= cols, s, -1e30)
+    if kv_len is not None:  # mask unwritten cache slots
+        s = jnp.where(jnp.arange(lk)[None, :] < kv_len, s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhgqk,bkhd->bqhgd", p, v.astype(jnp.float32))
+    return o.reshape(b, lq, h, v.shape[-1])
+
+
+CHUNK = 1024
+
+
+def _sdpa_streamed(q, k, v, *, causal: bool, two_stage: bool = False, chunk: int = CHUNK, compute_dtype: str = 'f32'):
+    """Streaming attention over KV chunks — never materializes [Lq,Lk].
+
+    ``two_stage=False``: FlashAttention-style single pass carrying
+    (m, l, o) with O rescaling.
+    ``two_stage=True``: the paper's Alg. 1 — pass ① computes only (m, l),
+    pass ② *recomputes* Q·Kᵀ with the final stats and accumulates O with
+    no rescaling (trades one extra QKᵀ for the O-carry; on the
+    accelerator this is what frees VMEM, and the Pallas kernel
+    (kernels/two_stage_attention.py) is the INT8 realization).
+
+    The chunk loop is a Python loop (always unrolled) so dry-run
+    cost_analysis counts every chunk — see dryrun.py pass 2.
+    """
+    b, lq, h, dh = q.shape
+    lk, hkv = k.shape[1], k.shape[2]
+    dv = v.shape[-1]
+    g = h // hkv
+    cdt = jnp.bfloat16 if compute_dtype == "bf16" else jnp.float32
+    qf = (q.reshape(b, lq, hkv, g, dh) / jnp.sqrt(jnp.float32(dh)).astype(q.dtype)).astype(cdt)
+    kf = k.astype(cdt)
+    vf = v.astype(cdt)
+    n_chunks = max(1, (lk + chunk - 1) // chunk)
+
+    def scores(c0, c1):
+        s = jnp.einsum("bqhgd,bkhd->bhgqk", qf, kf[:, c0:c1],
+                       preferred_element_type=jnp.float32)
+        if causal:
+            rows = jnp.arange(lq)[:, None] + (lk - lq)
+            cols = c0 + jnp.arange(c1 - c0)[None, :]
+            s = jnp.where(rows >= cols, s, -1e30)
+        return s
+
+    def live(c0):  # causal: skip chunks fully above the diagonal
+        return (not causal) or (c0 <= (lk - lq) + lq - 1)
+
+    m = jnp.full((b, hkv, g, lq, 1), -1e30, jnp.float32)
+    l = jnp.zeros((b, hkv, g, lq, 1), jnp.float32)
+    if two_stage:
+        # pass ① — statistics only (Eq. 8-9)
+        for c in range(n_chunks):
+            c0, c1 = c * chunk, min((c + 1) * chunk, lk)
+            if not live(c0):
+                continue
+            s = scores(c0, c1)
+            m_new = jnp.maximum(m, s.max(-1, keepdims=True))
+            l = l * jnp.exp(m - m_new) + jnp.exp(s - m_new).sum(-1, keepdims=True)
+            m = m_new
+        # pass ② — recompute with final stats, larger tiles, no rescale
+        o = jnp.zeros((b, hkv, g, lq, dv), jnp.float32)
+        big = chunk * 2  # paper: Stage-② mega-tiles (T_V > T_K)
+        for c in range(max(1, (lk + big - 1) // big)):
+            c0, c1 = c * big, min((c + 1) * big, lk)
+            if not live(c0):
+                continue
+            p = jnp.exp(scores(c0, c1) - m)
+            o = o + jnp.einsum("bhgqk,bkhd->bhgqd", p.astype(cdt), vf[:, c0:c1],
+                               preferred_element_type=jnp.float32)
+        o = o / jnp.maximum(l, 1e-30)
+    else:
+        o = jnp.zeros((b, hkv, g, lq, dv), jnp.float32)
+        for c in range(n_chunks):
+            c0, c1 = c * chunk, min((c + 1) * chunk, lk)
+            if not live(c0):
+                continue
+            s = scores(c0, c1)
+            m_new = jnp.maximum(m, s.max(-1, keepdims=True))
+            alpha = jnp.exp(m - m_new)
+            p = jnp.exp(s - m_new)
+            l = l * alpha + p.sum(-1, keepdims=True)
+            o = o * alpha + jnp.einsum("bhgqk,bkhd->bhgqd", p.astype(cdt), vf[:, c0:c1],
+                                       preferred_element_type=jnp.float32)
+            m = m_new
+        o = o / jnp.maximum(l, 1e-30)
+    return jnp.moveaxis(o.reshape(b, hkv * g, lq, dv), 1, 2)
+
+
+def sdpa_dispatch(cfg, q, k, v, *, causal: bool, q_offset=0, kv_len=None):
+    impl = getattr(cfg, "attn_impl", "flash")
+    if impl == "vanilla" or kv_len is not None:
+        # cache-masked paths (prefill-into-cache / decode) use the masked
+        # vanilla form; decode scores are [*,1,S] (linear, not quadratic)
+        return _sdpa(q, k, v, causal=causal, q_offset=q_offset, kv_len=kv_len)
+    return _sdpa_streamed(q, k, v, causal=causal, two_stage=(impl == "two_stage"),
+                          compute_dtype=getattr(cfg, "attn_dtype", "f32"))
+
+
+def gqa_attention(
+    p: dict,
+    cfg: ModelConfig,
+    x: jnp.ndarray,
+    *,
+    causal: bool = True,
+    positions: Optional[jnp.ndarray] = None,
+    cache: Optional[KVCache] = None,
+    mode: str = "full",
+) -> tuple[jnp.ndarray, Optional[KVCache]]:
+    b, lq, _ = x.shape
+    h, hkv, dh = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    quantized = isinstance(p["wq"], QuantLinear)
+    q = L.dense(p["wq"], x).reshape(b, lq, h, dh)
+    k = L.dense(p["wk"], x).reshape(b, lq, hkv, dh)
+    v = L.dense(p["wv"], x).reshape(b, lq, hkv, dh)
+    if cfg.qk_norm:
+        q = L.norm(p["q_norm"], q)
+        k = L.norm(p["k_norm"], k)
+    if positions is None:
+        positions = jnp.arange(lq)[None, :]
+    if cfg.pos == "rope":
+        cos, sin = L.rope_freqs(dh, cfg.rope_theta, positions)
+        q = L.apply_rope(q, cos, sin)
+        k = L.apply_rope(k, cos, sin)
+    if quantized:
+        # paper Stage 2: post-RoPE online per-head WHT (scores invariant)
+        q = head_wht(q)
+        k = head_wht(k)
+        # V arrives per-head-rotated from the offline W_v fusion.
+
+    if mode == "full" or cache is None:
+        o = sdpa_dispatch(cfg, q, k, v, causal=causal)
+        new_cache = None
+    else:
+        pos0 = cache.length
+        kq, ks_ = _quant_tokens_like(k, cache.k.dtype)
+        vq, vs_ = _quant_tokens_like(v, cache.v.dtype)
+        kc = jax.lax.dynamic_update_slice(cache.k, kq, (0, pos0, 0, 0))
+        vc = jax.lax.dynamic_update_slice(cache.v, vq, (0, pos0, 0, 0))
+        ksc = jax.lax.dynamic_update_slice(cache.k_scale, ks_, (0, pos0, 0, 0))
+        vsc = jax.lax.dynamic_update_slice(cache.v_scale, vs_, (0, pos0, 0, 0))
+        new_len = pos0 + lq
+        new_cache = KVCache(kc, vc, ksc, vsc, new_len)
+        if mode == "prefill" and lq > 1:
+            # streaming attention over the freshly-quantized K/V (prefill
+            # starts the cache: earlier slots are empty) — O(L·chunk) mem
+            kf = kq.astype(jnp.float32) * ks_
+            vf = vq.astype(jnp.float32) * vs_
+            o = sdpa_dispatch(cfg, q, kf, vf, causal=causal)
+        else:
+            # decode: scores are [*, 1, S] — linear, masked vanilla path
+            kf = kc.astype(jnp.float32) * ksc
+            vf = vc.astype(jnp.float32) * vsc
+            o = _sdpa(q, kf, vf, causal=causal, q_offset=pos0, kv_len=new_len)
+    o = o.reshape(b, lq, h * dh).astype(x.dtype)
+    return L.dense(p["wo"], o), new_cache
+
+
+# ---------------------------------------------------------------------------
+# MLA (DeepSeek-V2): low-rank compressed KV cache, absorbed decode
+# ---------------------------------------------------------------------------
+
+
+def init_mla(key, cfg: ModelConfig, dtype=jnp.float32):
+    ks = jax.random.split(key, 5)
+    h = cfg.n_heads
+    qd = cfg.qk_nope_dim + cfg.qk_rope_dim
+    return {
+        "wq": L.init_linear(ks[0], cfg.d_model, h * qd, dtype=dtype),
+        "w_kv_down": L.init_linear(ks[1], cfg.d_model, cfg.kv_lora_rank + cfg.qk_rope_dim, dtype=dtype),
+        "kv_norm": L.init_norm(cfg.kv_lora_rank, kind="rms", dtype=dtype),
+        "w_k_up": L.init_linear(ks[2], cfg.kv_lora_rank, h * cfg.qk_nope_dim, dtype=dtype),
+        "w_v_up": L.init_linear(ks[3], cfg.kv_lora_rank, h * cfg.v_head_dim, dtype=dtype),
+        "wo": L.init_linear(ks[4], h * cfg.v_head_dim, cfg.d_model, dtype=dtype),
+    }
+
+
+def mla_attention(
+    p: dict,
+    cfg: ModelConfig,
+    x: jnp.ndarray,
+    *,
+    causal: bool = True,
+    positions: Optional[jnp.ndarray] = None,
+    cache: Optional[KVCache] = None,
+    mode: str = "full",
+) -> tuple[jnp.ndarray, Optional[KVCache]]:
+    b, lq, _ = x.shape
+    h = cfg.n_heads
+    dn, dr, dv, rank = cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim, cfg.kv_lora_rank
+    if positions is None:
+        positions = jnp.arange(lq)[None, :]
+
+    q = L.dense(p["wq"], x).reshape(b, lq, h, dn + dr)
+    q_nope, q_rope = q[..., :dn], q[..., dn:]
+    kv = L.dense(p["w_kv_down"], x)
+    c_kv, k_rope = kv[..., :rank], kv[..., rank:]
+    c_kv = L.norm(p["kv_norm"], c_kv)
+    cos, sin = L.rope_freqs(dr, cfg.rope_theta, positions)
+    q_rope = L.apply_rope(q_rope, cos, sin)
+    k_rope = L.apply_rope(k_rope[..., None, :], cos, sin)[..., 0, :]  # shared across heads
+
+    scale = 1.0 / jnp.sqrt(jnp.float32(dn + dr))
+    if mode == "full" or cache is None or (mode == "prefill" and lq > 1):
+        # full / prefill: materialize per-token K/V from the fresh c_kv
+        # (cheap: [B,L,h,dn]) and run the streaming SDPA; the absorbed
+        # compressed-cache path is decode-only (linear scores).
+        k_nope = L.dense(p["w_k_up"], c_kv).reshape(b, lq, h, dn)
+        v = L.dense(p["w_v_up"], c_kv).reshape(b, lq, h, dv)
+        q_eff = jnp.concatenate([q_nope, q_rope], axis=-1)
+        k_eff = jnp.concatenate(
+            [k_nope, jnp.broadcast_to(k_rope[:, :, None, :], (b, lq, h, dr))], axis=-1
+        )
+        # pad V head_dim to match q_eff's (dn+dr) contract-free output dim
+        o = sdpa_dispatch(cfg, q_eff, k_eff, v, causal=causal)
+        new_cache = None
+        if mode == "prefill" and cache is not None:
+            pos0 = cache.length
+            ck = jnp.concatenate([c_kv, k_rope], axis=-1)[:, :, None, :]
+            ckq, cks = _quant_tokens_like(ck, cache.k.dtype)
+            kc = jax.lax.dynamic_update_slice(cache.k, ckq, (0, pos0, 0, 0))
+            ksc = jax.lax.dynamic_update_slice(cache.k_scale, cks, (0, pos0, 0, 0))
+            new_cache = KVCache(kc, cache.v, ksc, cache.v_scale, pos0 + lq)
+    else:
+        # absorbed decode: score via cache-domain projection of q
+        pos0 = cache.length
+        ck = jnp.concatenate([c_kv, k_rope], axis=-1)[:, :, None, :]  # [B,L,1,rank+dr]
+        ckq, cks = _quant_tokens_like(ck, cache.k.dtype)
+        kc = jax.lax.dynamic_update_slice(cache.k, ckq, (0, pos0, 0, 0))
+        ksc = jax.lax.dynamic_update_slice(cache.k_scale, cks, (0, pos0, 0, 0))
+        new_len = pos0 + lq
+        new_cache = KVCache(kc, cache.v, ksc, cache.v_scale, new_len)
+        ckf = (kc.astype(jnp.float32) * ksc)[:, :, 0, :]  # [B,S,rank+dr]
+        c_all, krope_all = ckf[..., :rank], ckf[..., rank:]
+        wku = p["w_k_up"]["w"] if isinstance(p["w_k_up"], dict) else None
+        if wku is None:  # quantized: dequantize the small up-proj for absorption
+            wku = p["w_k_up"].qw.dequantize(jnp.float32)
+            if p["w_k_up"].idct:
+                from repro.core import transforms as _t
+
+                d = _t.dct_matrix(p["w_k_up"].dct_block, dtype=jnp.float32)
+                wku = _t.apply_blocked(wku, d, p["w_k_up"].dct_block)
+        wku = wku.reshape(rank, h, dn)
+        q_lora = jnp.einsum("bqhd,rhd->bqhr", q_nope.astype(jnp.float32), wku.astype(jnp.float32))
+        s = (
+            jnp.einsum("bqhr,bkr->bhqk", q_lora, c_all)
+            + jnp.einsum("bqhd,bkd->bhqk", q_rope.astype(jnp.float32), krope_all)
+        ) * scale
+        rows = pos0 + jnp.arange(lq)[:, None]
+        cols = jnp.arange(c_all.shape[1])[None, :]
+        s = jnp.where((rows >= cols) & (cols < new_len), s, -1e30)
+        att = jax.nn.softmax(s, axis=-1)
+        o_lora = jnp.einsum("bhqk,bkr->bqhr", att, c_all)
+        wvu = p["w_v_up"]["w"] if isinstance(p["w_v_up"], dict) else None
+        if wvu is None:
+            wvu = p["w_v_up"].qw.dequantize(jnp.float32)
+            if p["w_v_up"].idct:
+                from repro.core import transforms as _t
+
+                d = _t.dct_matrix(p["w_v_up"].dct_block, dtype=jnp.float32)
+                wvu = _t.apply_blocked(wvu, d, p["w_v_up"].dct_block)
+        wvu = wvu.reshape(rank, h, dv)
+        o = jnp.einsum("bqhr,rhd->bqhd", o_lora, wvu.astype(jnp.float32))
+    o = o.reshape(b, lq, h * dv).astype(x.dtype)
+    return L.dense(p["wo"], o), new_cache

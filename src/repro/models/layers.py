@@ -1,0 +1,85 @@
+"""Shared layer primitives for the model zoo.
+
+Every linear/norm goes through ``core.versaq.apply_linear``/``apply_norm``
+so the same model code runs full-precision (plain dict params) and
+VersaQ-quantized (``QuantLinear``/``FoldedNorm`` params) — the paper's
+flow is a parameter transformation, not a different model.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.versaq import Norm, apply_linear, apply_norm
+
+__all__ = [
+    "dense",
+    "norm",
+    "init_linear",
+    "init_norm",
+    "embed",
+    "rope_freqs",
+    "apply_rope",
+    "sincos_positions",
+    "gelu",
+    "silu",
+]
+
+dense = apply_linear
+norm = apply_norm
+
+
+def init_linear(key, d_in: int, d_out: int, *, bias: bool = False, dtype=jnp.float32, scale: float | None = None):
+    s = scale if scale is not None else 1.0 / math.sqrt(d_in)
+    p = {"w": (jax.random.normal(key, (d_in, d_out)) * s).astype(dtype)}
+    p["b"] = jnp.zeros((d_out,), dtype) if bias else None
+    return p
+
+
+def init_norm(dim: int, *, kind: str = "rms", bias: bool = False, dtype=jnp.float32):
+    return Norm(
+        g=jnp.ones((dim,), dtype),
+        b=jnp.zeros((dim,), dtype) if bias else None,
+        kind=kind,
+    )
+
+
+def embed(table: jnp.ndarray, ids: jnp.ndarray) -> jnp.ndarray:
+    return jnp.take(table, ids, axis=0)
+
+
+def rope_freqs(head_dim: int, theta: float, positions: jnp.ndarray) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """cos/sin tables [*, L, head_dim//2] for given positions [*, L]."""
+    inv = 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+    ang = positions[..., None].astype(jnp.float32) * inv
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x: jnp.ndarray, cos: jnp.ndarray, sin: jnp.ndarray) -> jnp.ndarray:
+    """Rotate pairs. x: [..., L, H, dh]; cos/sin: [..., L, dh//2]."""
+    dh = x.shape[-1]
+    x1 = x[..., : dh // 2]
+    x2 = x[..., dh // 2 :]
+    # broadcast cos/sin over the head axis (x is [..., L, H, dh])
+    c = cos[..., :, None, :]
+    s = sin[..., :, None, :]
+    out = jnp.concatenate([x1 * c - x2 * s, x1 * s + x2 * c], axis=-1)
+    return out.astype(x.dtype)
+
+
+def sincos_positions(length: int, dim: int, dtype=jnp.float32) -> jnp.ndarray:
+    """Classic transformer sinusoidal position table [length, dim]."""
+    pos = jnp.arange(length, dtype=jnp.float32)[:, None]
+    i = jnp.arange(dim // 2, dtype=jnp.float32)[None, :]
+    ang = pos / (10_000.0 ** (2 * i / dim))
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1).astype(dtype)
+
+
+def gelu(x):
+    return jax.nn.gelu(x, approximate=True)
+
+
+def silu(x):
+    return jax.nn.silu(x)

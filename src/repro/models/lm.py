@@ -1,0 +1,310 @@
+"""Config-driven LM composition: init / forward / prefill / decode.
+
+Layer stacks are grouped by the config's ``pattern`` period and scanned
+with ``jax.lax.scan`` so the lowered HLO is O(one super-block), not
+O(n_layers) — essential for the 40-cell × 2-mesh dry-run compile budget.
+
+Non-uniform prefix layers (e.g. DeepSeek's first dense-FFN layer) are
+hoisted out of the scan as ``params["prefix"]``.
+
+The same forward runs full-precision (plain dict leaves) and
+VersaQ-quantized (QuantLinear/FoldedNorm leaves) — see
+``repro/core/model_quant.py``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import attention as A
+from repro.models import ffn as F
+from repro.models import layers as L
+from repro.models import rwkv as R
+from repro.models import ssm as S
+
+# ---------------------------------------------------------------------------
+# structure helpers
+# ---------------------------------------------------------------------------
+
+
+def n_scan_groups(cfg: ModelConfig) -> int:
+    return (cfg.n_layers - cfg.first_dense) // len(cfg.pattern)
+
+
+def ffn_kind(cfg: ModelConfig, global_idx: int) -> str:
+    if cfg.pattern[global_idx % len(cfg.pattern)] == "rwkv":
+        return "rwkv_channel"
+    if not cfg.moe:
+        return "dense"
+    if global_idx < cfg.first_dense:
+        return "dense"
+    return "moe" if (global_idx % cfg.moe_period) == 0 else "dense_inner"
+
+
+def mixer_kind(cfg: ModelConfig, global_idx: int) -> str:
+    return cfg.pattern[global_idx % len(cfg.pattern)]
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+
+def _init_layer(key, cfg: ModelConfig, global_idx: int, dtype) -> dict:
+    kind = mixer_kind(cfg, global_idx)
+    fk = ffn_kind(cfg, global_idx)
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    p: dict[str, Any] = {}
+    if kind == "attn":
+        p["mixer_norm"] = L.init_norm(cfg.d_model, kind=cfg.norm, bias=cfg.norm_bias, dtype=dtype)
+        p["mixer"] = A.init_mla(k1, cfg, dtype) if cfg.mla else A.init_gqa(k1, cfg, dtype)
+    elif kind == "mamba":
+        p["mixer_norm"] = L.init_norm(cfg.d_model, kind=cfg.norm, bias=cfg.norm_bias, dtype=dtype)
+        p["mixer"] = S.init_mamba(k1, cfg, dtype)
+    elif kind == "rwkv":
+        p["mixer_norm"] = L.init_norm(cfg.d_model, kind="ln", bias=True, dtype=dtype)
+        p["mixer"] = R.init_rwkv_time(k1, cfg, dtype)
+    else:
+        raise ValueError(kind)
+    p["ffn_norm"] = L.init_norm(
+        cfg.d_model, kind="ln" if kind == "rwkv" else cfg.norm, bias=cfg.norm_bias or kind == "rwkv", dtype=dtype
+    )
+    if fk == "moe":
+        p["ffn"] = F.init_moe(k2, cfg, dtype)
+    elif fk == "rwkv_channel":
+        p["ffn"] = R.init_rwkv_channel(k2, cfg, dtype)
+    elif fk == "dense_inner":
+        p["ffn"] = F.init_dense_ffn(k2, cfg.d_model, cfg.dense_d_ff or cfg.d_ff, cfg.act, dtype)
+    else:
+        dff = cfg.dense_d_ff if (cfg.moe and global_idx < cfg.first_dense) else cfg.d_ff
+        p["ffn"] = F.init_dense_ffn(k2, cfg.d_model, dff or cfg.d_ff, cfg.act, dtype)
+    if cfg.layerscale:
+        p["ls1"] = jnp.full((cfg.d_model,), cfg.layerscale_init, dtype)
+        p["ls2"] = jnp.full((cfg.d_model,), cfg.layerscale_init, dtype)
+    return p
+
+
+def init_params(cfg: ModelConfig, key, dtype=jnp.float32) -> dict:
+    keys = jax.random.split(key, cfg.n_layers + 3)
+    params: dict[str, Any] = {}
+    params["embed"] = {
+        "w": (jax.random.normal(keys[0], (cfg.vocab_size, cfg.d_model)) * 0.02).astype(dtype)
+    }
+    if cfg.embed_inputs:
+        params["in_proj"] = L.init_linear(keys[1], cfg.d_model, cfg.d_model, dtype=dtype)
+    params["prefix"] = [
+        _init_layer(keys[2 + i], cfg, i, dtype) for i in range(cfg.first_dense)
+    ]
+    period = len(cfg.pattern)
+    groups = n_scan_groups(cfg)
+
+    def one_group(key_g, g):
+        ks = jax.random.split(key_g, period)
+        return {
+            f"l{j}": _init_layer(ks[j], cfg, cfg.first_dense + g * period + j, dtype)
+            for j in range(period)
+        }
+
+    gkeys = jax.random.split(keys[-1], groups)
+    stacked = jax.tree.map(
+        lambda *xs: jnp.stack(xs), *[one_group(gkeys[g], g) for g in range(groups)]
+    ) if groups > 1 else jax.tree.map(lambda x: x[None], one_group(gkeys[0], 0))
+    params["blocks"] = stacked
+    params["final_norm"] = L.init_norm(cfg.d_model, kind=cfg.norm, bias=cfg.norm_bias, dtype=dtype)
+    if not cfg.tie_embeddings:
+        params["lm_head"] = L.init_linear(keys[-2], cfg.d_model, cfg.vocab_size, dtype=dtype, scale=0.02)
+    return params
+
+
+# ---------------------------------------------------------------------------
+# caches
+# ---------------------------------------------------------------------------
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int, kv_dtype=jnp.int8) -> dict:
+    """Decode cache matching the prefix/blocks structure."""
+    period = len(cfg.pattern)
+    groups = n_scan_groups(cfg)
+
+    # per pattern position: attn -> KVCache[groups,...]; mamba/rwkv -> states
+    blocks: dict[str, Any] = {}
+    for j in range(period):
+        kind = cfg.pattern[j]
+        if kind == "attn":
+            c = A.init_kv_cache(cfg, batch, max_len, groups, kv_dtype)
+            blocks[f"l{j}"] = c._replace(length=jnp.zeros((groups,), jnp.int32))
+        elif kind == "mamba":
+            blocks[f"l{j}"] = S.init_mamba_state(cfg, batch, groups)
+        elif kind == "rwkv":
+            blocks[f"l{j}"] = R.init_rwkv_state(cfg, batch, groups)
+    prefix = []
+    for i in range(cfg.first_dense):
+        if mixer_kind(cfg, i) == "attn":
+            c = A.init_kv_cache(cfg, batch, max_len, 1, kv_dtype)
+            prefix.append(A.KVCache(c.k[0], c.v[0], c.k_scale[0], c.v_scale[0], c.length))
+        else:
+            prefix.append(None)
+    return {"prefix": prefix, "blocks": blocks, "pos": jnp.zeros((), jnp.int32)}
+
+
+# ---------------------------------------------------------------------------
+# forward
+# ---------------------------------------------------------------------------
+
+
+def _apply_layer(
+    cfg: ModelConfig,
+    lp: dict,
+    kind: str,
+    fk: str,
+    x: jnp.ndarray,
+    *,
+    positions,
+    cache=None,
+    mode: str = "full",
+):
+    h = L.norm(lp["mixer_norm"], x)
+    new_cache = cache
+    if kind == "attn":
+        fn = A.mla_attention if cfg.mla else A.gqa_attention
+        kv = cache if isinstance(cache, A.KVCache) else None
+        out, kv_new = fn(
+            lp["mixer"], cfg, h, causal=True, positions=positions, cache=kv, mode=mode
+        )
+        new_cache = kv_new if kv is not None else cache
+    elif kind == "mamba":
+        out, st = S.mamba_mixer(lp["mixer"], cfg, h, state=cache, mode=mode)
+        new_cache = st if cache is not None else cache
+    elif kind == "rwkv":
+        st: R.RWKVState = cache
+        out, wkv_last, tshift = R.rwkv_time_mix(
+            lp["mixer"], cfg, h, state=st, mode=mode
+        )
+        if st is not None:
+            new_cache = st._replace(tshift=tshift.astype(jnp.float32), wkv=wkv_last)
+    else:
+        raise ValueError(kind)
+    if "ls1" in lp:
+        out = out * lp["ls1"].astype(out.dtype)
+    x = x + out
+
+    h = L.norm(lp["ffn_norm"], x)
+    if fk == "moe":
+        out = F.moe_ffn(lp["ffn"], cfg, h)
+    elif fk == "rwkv_channel":
+        prev = new_cache.cshift if isinstance(new_cache, R.RWKVState) else None
+        out, cshift = R.rwkv_channel_mix(lp["ffn"], cfg, h, prev=prev)
+        if isinstance(new_cache, R.RWKVState):
+            new_cache = new_cache._replace(cshift=cshift.astype(jnp.float32))
+    else:
+        out = F.dense_ffn(lp["ffn"], cfg.act, h)
+    if "ls2" in lp:
+        out = out * lp["ls2"].astype(out.dtype)
+    x = x + out
+    return x, new_cache
+
+
+def _embed_inputs(cfg: ModelConfig, params: dict, inputs: jnp.ndarray, positions) -> jnp.ndarray:
+    if cfg.embed_inputs:
+        x = L.dense(params["in_proj"], inputs)
+    else:
+        x = L.embed(params["embed"]["w"], inputs)
+    if cfg.pos == "sincos":
+        d = cfg.d_model
+        i = jnp.arange(d // 2, dtype=jnp.float32)
+        ang = positions[..., None].astype(jnp.float32) / (10_000.0 ** (2 * i / d))
+        pe = jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+        if "pos_rot" in params:  # rotated-stream models fold H into the table
+            pe = pe @ params["pos_rot"].astype(jnp.float32)
+        x = x + pe.astype(x.dtype)
+    return x
+
+
+def forward(
+    cfg: ModelConfig,
+    params: dict,
+    inputs: jnp.ndarray,
+    *,
+    cache: Optional[dict] = None,
+    mode: str = "full",
+    remat: bool = False,
+    act_sharding=None,
+    scan_unroll: bool = False,
+) -> tuple[jnp.ndarray, Optional[dict]]:
+    """Full/prefill/decode forward.
+
+    inputs: [B, L] int tokens (or [B, L, d] embeddings for stub frontends).
+    ``remat``: activation-checkpoint each scan group (training memory).
+    ``act_sharding``: PartitionSpec constraint on the residual stream at
+    group boundaries (DP batch + optional TP-SP sequence sharding).
+    Returns (logits [B, L, V], new_cache).
+    """
+    pos0 = cache["pos"] if cache is not None else 0
+    lq = inputs.shape[1]
+    positions = (jnp.asarray(pos0) + jnp.arange(lq))[None, :]
+    x = _embed_inputs(cfg, params, inputs, positions)
+
+    new_prefix = []
+    for i, lp in enumerate(params["prefix"]):
+        c = cache["prefix"][i] if cache is not None else None
+        x, c2 = _apply_layer(
+            cfg, lp, mixer_kind(cfg, i), ffn_kind(cfg, i), x,
+            positions=positions, cache=c, mode=mode,
+        )
+        new_prefix.append(c2)
+
+    period = len(cfg.pattern)
+
+    def group_body(carry, scanned):
+        xc = carry
+        gp, gc = scanned
+        new_gc = {}
+        for j in range(period):
+            kind = cfg.pattern[j]
+            fk = ffn_kind(cfg, cfg.first_dense + j)
+            c = gc[f"l{j}"] if gc is not None else None
+            xc, c2 = _apply_layer(
+                cfg, gp[f"l{j}"], kind, fk, xc,
+                positions=positions, cache=c, mode=mode,
+            )
+            new_gc[f"l{j}"] = c2
+        if act_sharding is not None:
+            xc = jax.lax.with_sharding_constraint(xc, act_sharding)
+        return xc, (new_gc if gc is not None else None)
+
+    if cache is not None:
+        x, new_blocks = jax.lax.scan(
+            group_body, x, (params["blocks"], cache["blocks"]), unroll=scan_unroll
+        )
+    else:
+        body = lambda c, gp: group_body(c, (gp, None))
+        if remat == "dots" or remat == "dots_saveable":
+            body = jax.checkpoint(
+                body, prevent_cse=False,
+                policy=jax.checkpoint_policies.dots_saveable,
+            )
+        elif remat:
+            body = jax.checkpoint(body, prevent_cse=False)
+        x, _ = jax.lax.scan(body, x, params["blocks"], unroll=scan_unroll)
+        new_blocks = None
+
+    x = L.norm(params["final_norm"], x)
+    if cfg.tie_embeddings:
+        logits = jnp.einsum("bld,vd->blv", x, params["embed"]["w"].astype(x.dtype))
+    else:
+        logits = L.dense(params["lm_head"], x)
+    new_cache = None
+    if cache is not None:
+        new_cache = {"prefix": new_prefix, "blocks": new_blocks, "pos": pos0 + lq}
+    return logits, new_cache
+
+
+def decode_step(cfg: ModelConfig, params: dict, token, cache: dict):
+    """One-token decode: token [B] int32 (or [B, 1, d] embeddings)."""
+    if not cfg.embed_inputs:
+        token = token[:, None] if token.ndim == 1 else token
+    return forward(cfg, params, token, cache=cache, mode="decode")

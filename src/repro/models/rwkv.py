@@ -1,0 +1,142 @@
+"""RWKV-6 ("Finch") mixer: attention-free, data-dependent decay.
+
+Implements the RWKV6 time-mix (multi-head matrix-valued WKV state with
+per-token, per-channel decay produced by a LoRA on the token-shifted
+input) and channel-mix (squared-ReLU with token shift).  The recurrence
+runs as a ``lax.scan`` over time; decode carries (shift, wkv state).
+
+The two-stage attention tiling of the paper is INAPPLICABLE here (no
+softmax score matrix exists) — see DESIGN.md §Arch-applicability.  All
+projections (r/k/v/g/o, channel-mix) are VersaQ-quantizable; the decay
+LoRA and the recurrence stay bf16.
+"""
+from __future__ import annotations
+
+import math
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import layers as L
+
+
+class RWKVState(NamedTuple):
+    tshift: jnp.ndarray  # [B, 1, d] last token (time-mix)
+    cshift: jnp.ndarray  # [B, 1, d] last token (channel-mix)
+    wkv: jnp.ndarray  # [B, H, dh, dh]
+
+
+DECAY_LORA = 64
+
+
+def init_rwkv_time(key, cfg: ModelConfig, dtype=jnp.float32):
+    d = cfg.d_model
+    ks = jax.random.split(key, 8)
+    p = {
+        "mu": (jax.random.uniform(ks[0], (5, d)) * 0.1).astype(dtype),  # lerp factors r,k,v,g,w
+        "wr": L.init_linear(ks[1], d, d, dtype=dtype),
+        "wk": L.init_linear(ks[2], d, d, dtype=dtype),
+        "wv": L.init_linear(ks[3], d, d, dtype=dtype),
+        "wg": L.init_linear(ks[4], d, d, dtype=dtype),
+        "wo": L.init_linear(ks[5], d, d, dtype=dtype),
+        "w_decay_a": L.init_linear(ks[6], d, DECAY_LORA, dtype=dtype),
+        "w_decay_b": L.init_linear(ks[7], DECAY_LORA, d, dtype=dtype, scale=0.01 / math.sqrt(DECAY_LORA)),
+        "decay_base": (jnp.zeros((d,)) - 6.0).astype(dtype),
+        "bonus": jnp.full((d // cfg.rwkv_head_dim, cfg.rwkv_head_dim), 0.5).astype(dtype),
+        "ln_x": L.init_norm(d, kind="ln", bias=True, dtype=dtype),
+    }
+    return p
+
+
+def init_rwkv_channel(key, cfg: ModelConfig, dtype=jnp.float32):
+    d = cfg.d_model
+    ks = jax.random.split(key, 3)
+    return {
+        "mu": (jax.random.uniform(ks[0], (2, d)) * 0.1).astype(dtype),
+        "w_up": L.init_linear(ks[1], d, cfg.d_ff, dtype=dtype),
+        "w_down": L.init_linear(ks[2], cfg.d_ff, d, dtype=dtype),
+    }
+
+
+def _token_shift(x: jnp.ndarray, prev: Optional[jnp.ndarray]) -> jnp.ndarray:
+    """x_{t-1} with either zero or carried-in first element."""
+    if prev is None:
+        return jnp.pad(x[:, :-1, :], ((0, 0), (1, 0), (0, 0)))
+    return jnp.concatenate([prev, x[:, :-1, :]], axis=1)
+
+
+def rwkv_time_mix(
+    p: dict,
+    cfg: ModelConfig,
+    x: jnp.ndarray,
+    *,
+    state: Optional[RWKVState] = None,
+    mode: str = "full",
+):
+    b, l, d = x.shape
+    hd = cfg.rwkv_head_dim
+    nh = d // hd
+    prev = state.tshift.astype(x.dtype) if state is not None else None
+    xs = _token_shift(x, prev)
+    mu = p["mu"].astype(jnp.float32)
+    xf, xsf = x.astype(jnp.float32), xs.astype(jnp.float32)
+
+    def lerp(i):
+        return (xf + mu[i] * (xsf - xf)).astype(x.dtype)
+
+    r = L.dense(p["wr"], lerp(0)).reshape(b, l, nh, hd)
+    k = L.dense(p["wk"], lerp(1)).reshape(b, l, nh, hd)
+    v = L.dense(p["wv"], lerp(2)).reshape(b, l, nh, hd)
+    g = L.silu(L.dense(p["wg"], lerp(3)).astype(jnp.float32))
+    # data-dependent decay (LoRA), per token per channel
+    dw = L.dense(p["w_decay_b"], jnp.tanh(L.dense(p["w_decay_a"], lerp(4)).astype(jnp.float32)).astype(x.dtype))
+    w = jnp.exp(-jnp.exp(p["decay_base"].astype(jnp.float32) + dw.astype(jnp.float32)))  # in (0,1)
+    w = w.reshape(b, l, nh, hd)
+    u = p["bonus"].astype(jnp.float32)  # [nh, hd]
+
+    rf = r.astype(jnp.float32)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+
+    def step(s, ts):
+        r_t, k_t, v_t, w_t = ts  # [B,nh,hd]
+        kv = jnp.einsum("bhk,bhv->bhkv", k_t, v_t)
+        y = jnp.einsum("bhk,bhkv->bhv", r_t, s + u[None, :, :, None] * kv)
+        s = w_t[..., None] * s + kv
+        return s, y
+
+    s0 = (
+        state.wkv.astype(jnp.float32)
+        if state is not None
+        else jnp.zeros((b, nh, hd, hd), jnp.float32)
+    )
+    ts = tuple(jnp.moveaxis(t, 1, 0) for t in (rf, kf, vf, w))
+    s_last, ys = jax.lax.scan(step, s0, ts)
+    y = jnp.moveaxis(ys, 0, 1).reshape(b, l, d)
+    y = L.norm(p["ln_x"], y.astype(x.dtype))  # group-norm-ish output norm
+    out = L.dense(p["wo"], (y.astype(jnp.float32) * g).astype(x.dtype))
+    new_tshift = x[:, -1:, :]
+    return out, s_last, new_tshift
+
+
+def rwkv_channel_mix(p: dict, cfg: ModelConfig, x: jnp.ndarray, *, prev: Optional[jnp.ndarray] = None):
+    xs = _token_shift(x, prev.astype(x.dtype) if prev is not None else None)
+    mu = p["mu"].astype(jnp.float32)
+    xf, xsf = x.astype(jnp.float32), xs.astype(jnp.float32)
+    xk = (xf + mu[0] * (xsf - xf)).astype(x.dtype)
+    h = L.dense(p["w_up"], xk)
+    h = jnp.square(jax.nn.relu(h.astype(jnp.float32))).astype(x.dtype)
+    return L.dense(p["w_down"], h), x[:, -1:, :]
+
+
+def init_rwkv_state(cfg: ModelConfig, batch: int, n_groups: int) -> RWKVState:
+    d = cfg.d_model
+    hd = cfg.rwkv_head_dim
+    nh = d // hd
+    return RWKVState(
+        tshift=jnp.zeros((n_groups, batch, 1, d), jnp.float32),
+        cshift=jnp.zeros((n_groups, batch, 1, d), jnp.float32),
+        wkv=jnp.zeros((n_groups, batch, nh, hd, hd), jnp.float32),
+    )

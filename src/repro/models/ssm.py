@@ -1,0 +1,136 @@
+"""Mamba selective-SSM mixer (for the Jamba hybrid).
+
+Faithful Mamba-1 block: in-proj -> depthwise causal conv -> SiLU ->
+selective scan (input-dependent Δ, B, C; diagonal A) -> gate -> out-proj.
+The sequence scan uses ``jax.lax.scan`` over time (O(1) HLO size); decode
+carries (conv window, ssm state) in the cache.
+
+Quantization note (DESIGN.md §Arch-applicability): the in/out projections
+are VersaQ-quantized like any linear; Δ/B/C/A and the scan itself stay
+bf16 — they are the "precision-sensitive nonlinear operators" of this
+mixer, analogous to Softmax/LayerNorm in attention.
+"""
+from __future__ import annotations
+
+import math
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import layers as L
+
+
+class MambaState(NamedTuple):
+    conv: jnp.ndarray  # [B, d_conv-1, d_inner]
+    ssm: jnp.ndarray  # [B, d_inner, d_state]
+
+
+def init_mamba(key, cfg: ModelConfig, dtype=jnp.float32):
+    d = cfg.d_model
+    di = cfg.mamba_expand * d
+    ds = cfg.mamba_d_state
+    dc = cfg.mamba_d_conv
+    ks = jax.random.split(key, 6)
+    dt_rank = max(1, d // 16)
+    p = {
+        "w_in": L.init_linear(ks[0], d, 2 * di, dtype=dtype),  # x and gate z
+        "conv_w": (jax.random.normal(ks[1], (dc, di)) / math.sqrt(dc)).astype(dtype),
+        "conv_b": jnp.zeros((di,), dtype),
+        "w_xproj": L.init_linear(ks[2], di, dt_rank + 2 * ds, dtype=dtype),
+        "w_dt": L.init_linear(ks[3], dt_rank, di, bias=True, dtype=dtype),
+        "a_log": jnp.log(jnp.tile(jnp.arange(1, ds + 1, dtype=jnp.float32), (di, 1))).astype(dtype),
+        "d_skip": jnp.ones((di,), dtype),
+        "w_out": L.init_linear(ks[4], di, d, dtype=dtype),
+    }
+    return p
+
+
+def _selective_scan(u, dt, a, b_in, c_in, d_skip, init_state=None):
+    """u: [B,L,di]; dt: [B,L,di]; a: [di,ds]; b/c: [B,L,ds].
+
+    Discretization (dA, dB·u) happens INSIDE the step so temporaries stay
+    [B,di,ds] (materializing [B,L,di,ds] would be tens of GB per device
+    at jamba train_4k).  xs stay sharded on di over ``model``, so the
+    scan body runs collective-free.
+    """
+    neg_a = -jnp.exp(a.astype(jnp.float32))  # [di,ds]
+
+    def step(h, xs):
+        u_t, dt_t, b_t, c_t = xs  # [B,di], [B,di], [B,ds], [B,ds]
+        da_t = jnp.exp(dt_t[..., None] * neg_a)  # [B,di,ds]
+        dbu_t = (dt_t * u_t)[..., None] * b_t[:, None, :]
+        h = da_t * h + dbu_t
+        y = jnp.einsum("bds,bs->bd", h, c_t)
+        return h, y
+
+    bsz, _, di = u.shape
+    ds = a.shape[-1]
+    h0 = jnp.zeros((bsz, di, ds), jnp.float32) if init_state is None else init_state
+    xs = (
+        jnp.moveaxis(u, 1, 0),
+        jnp.moveaxis(dt, 1, 0),
+        jnp.moveaxis(b_in, 1, 0),
+        jnp.moveaxis(c_in, 1, 0),
+    )
+    h_last, ys = jax.lax.scan(step, h0, xs)
+    y = jnp.moveaxis(ys, 0, 1)  # [B,L,di]
+    return y + u * d_skip, h_last
+
+
+def mamba_mixer(
+    p: dict,
+    cfg: ModelConfig,
+    x: jnp.ndarray,
+    *,
+    state: Optional[MambaState] = None,
+    mode: str = "full",
+) -> tuple[jnp.ndarray, Optional[MambaState]]:
+    b, l, d = x.shape
+    di = cfg.mamba_expand * d
+    ds = cfg.mamba_d_state
+    dc = cfg.mamba_d_conv
+    dt_rank = max(1, d // 16)
+
+    xz = L.dense(p["w_in"], x)
+    u, z = xz[..., :di], xz[..., di:]
+
+    # depthwise causal conv over time
+    if state is not None:
+        prev = state.conv.astype(u.dtype)  # [B, dc-1, di]
+        upad = jnp.concatenate([prev, u], axis=1)
+        new_conv = upad[:, -(dc - 1) :, :]
+    else:
+        upad = jnp.pad(u, ((0, 0), (dc - 1, 0), (0, 0)))
+        new_conv = upad[:, -(dc - 1) :, :]
+    wc = p["conv_w"].astype(jnp.float32)
+    uc = sum(
+        upad[:, i : i + l, :].astype(jnp.float32) * wc[i] for i in range(dc)
+    ) + p["conv_b"].astype(jnp.float32)
+    uc = L.silu(uc)
+
+    proj = L.dense(p["w_xproj"], uc.astype(x.dtype))
+    dt_in, b_in, c_in = (
+        proj[..., :dt_rank],
+        proj[..., dt_rank : dt_rank + ds].astype(jnp.float32),
+        proj[..., dt_rank + ds :].astype(jnp.float32),
+    )
+    dt = jax.nn.softplus(L.dense(p["w_dt"], dt_in).astype(jnp.float32))
+
+    init = state.ssm if state is not None else None
+    y, h_last = _selective_scan(
+        uc, dt, p["a_log"], b_in, c_in, p["d_skip"].astype(jnp.float32), init
+    )
+    y = (y * L.silu(z.astype(jnp.float32))).astype(x.dtype)
+    out = L.dense(p["w_out"], y)
+    new_state = MambaState(conv=new_conv, ssm=h_last) if (state is not None or mode != "full") else None
+    return out, new_state
+
+
+def init_mamba_state(cfg: ModelConfig, batch: int, n_groups: int) -> MambaState:
+    di = cfg.mamba_expand * cfg.d_model
+    return MambaState(
+        conv=jnp.zeros((n_groups, batch, cfg.mamba_d_conv - 1, di), jnp.float32),
+        ssm=jnp.zeros((n_groups, batch, di, cfg.mamba_d_state), jnp.float32),
+    )

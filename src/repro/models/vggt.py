@@ -1,0 +1,156 @@
+"""VGGT: Visual Geometry Grounded Transformer (the paper's target model).
+
+Faithful structure per paper §II-B / Fig. 2:
+
+* DINO feature extraction is a STUB frontend — ``input_specs`` provides
+  precomputed patch embeddings [B, S, P, d_in] (the paper's quantization
+  also targets only the AA module).
+* Per-frame special tokens (camera + register) are learned and prepended.
+* The **Alternating-Attention** backbone interleaves frame-wise attention
+  (tokens reshaped to [B·S, T, C]) and global attention ([B, S·T, C]) —
+  the long-sequence global attention is exactly what the paper's two-stage
+  tiling (kernels/two_stage_attention.py) accelerates.
+* LayerScale (DINOv2-style) on every residual branch — this is the
+  LayerScale that paper Eq. 6-7 folds into the output projections.
+* Heads: Camera head (9-DoF pose from the camera token) and a DPT-style
+  head (per-patch depth + 3D point map + confidence).
+
+Attention is bidirectional (no causal mask); there is no KV cache —
+serving is a single feed-forward pass, per the paper's deployment model.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import attention as A
+from repro.models import ffn as F
+from repro.models import layers as L
+
+N_POSE = 9  # rotation quaternion (4) + translation (3) + focal (2)
+
+
+def _init_attn_block(key, cfg: ModelConfig, dtype):
+    k1, k2 = jax.random.split(key)
+    p = {
+        "attn_norm": L.init_norm(cfg.d_model, kind="ln", bias=True, dtype=dtype),
+        "attn": A.init_gqa(k1, cfg, dtype),
+        "ffn_norm": L.init_norm(cfg.d_model, kind="ln", bias=True, dtype=dtype),
+        "ffn": F.init_dense_ffn(k2, cfg.d_model, cfg.d_ff, cfg.act, dtype),
+        "ls1": jnp.full((cfg.d_model,), cfg.layerscale_init, dtype),
+        "ls2": jnp.full((cfg.d_model,), cfg.layerscale_init, dtype),
+    }
+    return p
+
+
+def init_params(cfg: ModelConfig, key, dtype=jnp.float32) -> dict:
+    assert cfg.vggt
+    ks = jax.random.split(key, 8)
+    n_groups = cfg.n_layers  # one AA pair per "layer"
+
+    def pair(k):
+        ka, kb = jax.random.split(k)
+        return {
+            "frame": _init_attn_block(ka, cfg, dtype),
+            "global": _init_attn_block(kb, cfg, dtype),
+        }
+
+    gkeys = jax.random.split(ks[0], n_groups)
+    blocks = jax.tree.map(lambda *xs: jnp.stack(xs), *[pair(k) for k in gkeys])
+    d = cfg.d_model
+    params: dict[str, Any] = {
+        "patch_proj": L.init_linear(ks[1], d, d, bias=True, dtype=dtype),
+        "special_tokens": (jax.random.normal(ks[2], (cfg.n_special_tokens, d)) * 0.02).astype(dtype),
+        "blocks": blocks,
+        "final_norm": L.init_norm(d, kind="ln", bias=True, dtype=dtype),
+        "camera_head": {
+            "fc1": L.init_linear(ks[3], d, d, bias=True, dtype=dtype),
+            "fc2": L.init_linear(ks[4], d, N_POSE, bias=True, dtype=dtype),
+        },
+        "dpt_head": {
+            "fc1": L.init_linear(ks[5], d, d, bias=True, dtype=dtype),
+            "fc2": L.init_linear(ks[6], d, 3 + 1 + 1, bias=True, dtype=dtype),  # xyz, depth, conf
+        },
+    }
+    return params
+
+
+def _block(p, cfg: ModelConfig, x: jnp.ndarray) -> jnp.ndarray:
+    h = L.norm(p["attn_norm"], x)
+    out, _ = A.gqa_attention(p["attn"], cfg, h, causal=False, mode="full")
+    x = x + out * p["ls1"].astype(out.dtype) if "ls1" in p else x + out
+    h = L.norm(p["ffn_norm"], x)
+    out = F.dense_ffn(p["ffn"], cfg.act, h)
+    x = x + out * p["ls2"].astype(out.dtype) if "ls2" in p else x + out
+    return x
+
+
+def forward(
+    cfg: ModelConfig,
+    params: dict,
+    patch_embeds: jnp.ndarray,
+    *,
+    scan_unroll: bool = False,
+    act_sharding=None,
+    remat: bool = False,
+) -> dict:
+    """patch_embeds: [B, S, P, d] (stub DINO features).
+
+    Returns dict with pose [B,S,9], depth [B,S,P], points [B,S,P,3],
+    conf [B,S,P], tokens [B,S,T,d].
+    """
+    b, s, p_, d = patch_embeds.shape
+    ns = cfg.n_special_tokens
+    x = L.dense(params["patch_proj"], patch_embeds)
+    spec = jnp.broadcast_to(params["special_tokens"], (b, s, ns, d)).astype(x.dtype)
+    x = jnp.concatenate([spec, x], axis=2)  # [B, S, T, d], T = ns + P
+    t = ns + p_
+
+    def group_body(carry, gp):
+        xc = carry  # [B, S, T, d]
+        # frame-wise attention
+        xf = xc.reshape(b * s, t, d)
+        xf = _block(gp["frame"], cfg, xf)
+        xc = xf.reshape(b, s, t, d)
+        # global attention over all frames' tokens
+        xg = xc.reshape(b, s * t, d)
+        xg = _block(gp["global"], cfg, xg)
+        xc = xg.reshape(b, s, t, d)
+        if act_sharding is not None:
+            xc = jax.lax.with_sharding_constraint(xc, act_sharding)
+        return xc, None
+
+    body = group_body
+    if remat:
+        body = jax.checkpoint(body, prevent_cse=False)
+    x, _ = jax.lax.scan(body, x, params["blocks"], unroll=scan_unroll)
+    x = L.norm(params["final_norm"], x)
+
+    cam_tok = x[:, :, 0, :]  # [B, S, d]
+    ch = params["camera_head"]
+    pose = L.dense(ch["fc2"], jnp.tanh(L.dense(ch["fc1"], cam_tok).astype(jnp.float32)).astype(x.dtype))
+
+    patch_tok = x[:, :, ns:, :]
+    dh = params["dpt_head"]
+    feat = L.gelu(L.dense(dh["fc1"], patch_tok).astype(jnp.float32)).astype(x.dtype)
+    out = L.dense(dh["fc2"], feat).astype(jnp.float32)
+    points, depth, conf = out[..., :3], out[..., 3], jax.nn.sigmoid(out[..., 4])
+    return {
+        "pose": pose.astype(jnp.float32),
+        "points": points,
+        "depth": depth,
+        "conf": conf,
+        "tokens": x,
+    }
+
+
+def reconstruction_loss(cfg: ModelConfig, params: dict, batch: dict) -> jnp.ndarray:
+    """Simple multi-task loss (pose + depth + points) for the training demo."""
+    out = forward(cfg, params, batch["patches"])
+    lp = jnp.mean((out["pose"] - batch["pose"]) ** 2)
+    ld = jnp.mean((out["depth"] - batch["depth"]) ** 2)
+    lx = jnp.mean((out["points"] - batch["points"]) ** 2)
+    return lp + ld + lx

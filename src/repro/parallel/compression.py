@@ -1,0 +1,86 @@
+"""INT8 gradient compression for data-parallel all-reduce (+error feedback).
+
+The paper's quantization idea applied to *collectives* (beyond-paper
+optimization, EXPERIMENTS.md §Perf): the DP gradient all-reduce moves int8
+on the wire instead of bf16/f32 — 2-4x fewer collective bytes.
+
+Algorithm (per leaf, inside ``shard_map`` over the DP axis):
+  1. error feedback:  g' = g + e          (e = residual from last step)
+  2. shared scale:    s = pmax(amax(g'))/127   (scalar collective)
+  3. quantize:        q = round(g'/s) int8;  e_new = g' - q·s
+  4. reduce-scatter as int8 via all_to_all, sum shards in int32
+     (exact: ≤ 127·n_devices fits easily),
+  5. all-gather the int8-requantized sums.
+
+Wire bytes: N·(1 + 1/nd) int8 vs 2·N·4 f32 for a ring all-reduce —
+~8x fewer.  Error feedback keeps SGD/Adam convergence (tested:
+tests/parallel/test_compression.py shows a tiny model converges to the
+same loss as the uncompressed baseline).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from jax.experimental.shard_map import shard_map
+
+
+def _pad_to(x: jnp.ndarray, mult: int) -> tuple[jnp.ndarray, int]:
+    n = x.size
+    rem = (-n) % mult
+    flat = x.reshape(-1)
+    if rem:
+        flat = jnp.concatenate([flat, jnp.zeros((rem,), flat.dtype)])
+    return flat, n
+
+
+def compressed_psum(g: jnp.ndarray, axis_name: str, n_dev: int, err: jnp.ndarray):
+    """int8 all-reduce of ``g`` with error-feedback state ``err``.
+
+    Returns (mean-reduced g, new error state). Call inside shard_map.
+    """
+    orig_shape = g.shape
+    gf = g.astype(jnp.float32) + err.astype(jnp.float32)
+    flat, n = _pad_to(gf, n_dev)
+    scale = jax.lax.pmax(jnp.max(jnp.abs(flat)), axis_name) / 127.0
+    scale = jnp.maximum(scale, 1e-20)
+    q = jnp.clip(jnp.round(flat / scale), -127, 127).astype(jnp.int8)
+    new_err = (flat - q.astype(jnp.float32) * scale)[:n].reshape(orig_shape)
+
+    chunks = q.reshape(n_dev, -1)
+    # reduce-scatter phase, int8 on the wire: device d receives chunk d
+    # from every peer
+    gathered = jax.lax.all_to_all(
+        chunks[None], axis_name, split_axis=1, concat_axis=0, tiled=False
+    )  # [nd, 1, chunk]
+    local_sum = gathered.astype(jnp.int32).sum(axis=0)[0]  # exact (≤127·nd)
+    # requantize the per-chunk sum (in units of `scale`) for the int8 gather
+    r = jax.lax.pmax(jnp.max(jnp.abs(local_sum)).astype(jnp.float32), axis_name) / 127.0
+    r = jnp.maximum(r, 1.0)  # sums are integers; never upscale below 1 q-unit
+    q2 = jnp.clip(jnp.round(local_sum.astype(jnp.float32) / r), -127, 127).astype(jnp.int8)
+    full = jax.lax.all_gather(q2, axis_name, axis=0, tiled=False).reshape(-1)
+    # value = (q-units sum) · r · scale;  mean over the DP axis
+    out = full.astype(jnp.float32) * (r * scale)
+    return out[:n].reshape(orig_shape) / n_dev, new_err
+
+
+def init_error_state(grads_like: Any) -> Any:
+    return jax.tree.map(lambda g: jnp.zeros(g.shape, jnp.float32), grads_like)
+
+
+def compressed_tree_psum(grads: Any, err: Any, axis_name: str, n_dev: int):
+    """Apply compressed_psum leaf-wise; tiny leaves (<1KiB) go uncompressed
+    (scalar collectives would dominate)."""
+
+    def f(g, e):
+        if g.size < 256:
+            return jax.lax.pmean(g, axis_name), e
+        return compressed_psum(g, axis_name, n_dev, e)
+
+    flat_g, tdef = jax.tree.flatten(grads)
+    flat_e = tdef.flatten_up_to(err)
+    out = [f(g, e) for g, e in zip(flat_g, flat_e)]
+    return tdef.unflatten([o[0] for o in out]), tdef.unflatten([o[1] for o in out])

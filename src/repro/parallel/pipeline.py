@@ -1,0 +1,91 @@
+"""GPipe-style pipeline parallelism (stage axis + microbatch rotation).
+
+Provided for the >per-chip-HBM regime (e.g. jamba bf16 training beyond the
+assigned meshes); the 40-cell dry-run uses DP×TP which suffices for the
+assigned shapes — see DESIGN.md §5.  Implemented with ``shard_map`` over a
+``pipe`` axis and ``ppermute`` microbatch rotation; every stage applies
+its own slice of a homogeneous layer stack.
+
+Schedule: standard GPipe fill-drain with M microbatches over S stages:
+step t ∈ [0, M+S-1); stage s computes microbatch t-s when 0 ≤ t-s < M.
+Bubble fraction = (S-1)/(M+S-1), reported by ``bubble_fraction``.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from jax.experimental.shard_map import shard_map
+
+
+def bubble_fraction(n_stages: int, n_micro: int) -> float:
+    return (n_stages - 1) / (n_micro + n_stages - 1)
+
+
+def pipeline_apply(
+    mesh: Mesh,
+    stage_fn: Callable[[Any, jnp.ndarray], jnp.ndarray],
+    stage_params: Any,
+    x: jnp.ndarray,
+    n_micro: int,
+    axis: str = "pipe",
+):
+    """Run ``stage_fn`` as an S-stage pipeline over microbatches of ``x``.
+
+    ``stage_params`` leaves have leading dim S (one slice per stage) and
+    are sharded over ``axis``; ``x`` is [B, ...] with B % n_micro == 0.
+    """
+    n_stages = int(mesh.shape[axis])
+    b = x.shape[0]
+    assert b % n_micro == 0
+    micro = b // n_micro
+    xs = x.reshape(n_micro, micro, *x.shape[1:])
+
+    def spmd(params_slice, xs_local):
+        params_slice = jax.tree.map(lambda p: p[0], params_slice)
+        s = jax.lax.axis_index(axis)
+        total = n_micro + n_stages - 1
+        buf = jnp.zeros_like(xs_local[0])
+        outs = jnp.zeros_like(xs_local)
+
+        def step(carry, t):
+            buf, outs = carry
+            mb = t - s  # microbatch this stage works on
+            # stage 0 ingests fresh microbatches; others use the buffer
+            fresh = xs_local[jnp.clip(t, 0, n_micro - 1)]
+            inp = jnp.where(s == 0, fresh, buf)
+            active = (mb >= 0) & (mb < n_micro)
+            y = stage_fn(params_slice, inp)
+            y = jnp.where(active, y, buf)
+            # rotate: stage s sends to s+1
+            nxt = jax.lax.ppermute(
+                y, axis, [(i, (i + 1) % n_stages) for i in range(n_stages)]
+            )
+            # last stage records finished microbatch
+            done_mb = t - (n_stages - 1)
+            record = (s == n_stages - 1) & (done_mb >= 0) & (done_mb < n_micro)
+            outs = jnp.where(
+                record,
+                outs.at[jnp.clip(done_mb, 0, n_micro - 1)].set(y),
+                outs,
+            )
+            return (nxt, outs), None
+
+        (buf, outs), _ = jax.lax.scan(step, (buf, outs), jnp.arange(total))
+        # broadcast results from the last stage to all (replicated output):
+        # zero everywhere else + psum (ppermute can't fan out 1 -> N)
+        outs = jnp.where(s == n_stages - 1, outs, jnp.zeros_like(outs))
+        return jax.lax.psum(outs, axis)
+
+    fn = shard_map(
+        spmd,
+        mesh=mesh,
+        in_specs=(P(axis), P()),
+        out_specs=P(),
+        check_rep=False,
+    )
+    ys = fn(stage_params, xs)
+    return ys.reshape(b, *ys.shape[2:])

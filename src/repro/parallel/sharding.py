@@ -1,0 +1,221 @@
+"""Partition rules: parameter/optimizer/cache PartitionSpecs (DP/TP/EP/SP).
+
+TP layout (Megatron-style, on the ``model`` axis):
+  * column-parallel (input replicated, output sharded): wq/wk/wv, FFN
+    up/gate, Mamba in-proj, RWKV r/k/v/g, lm_head
+  * row-parallel (input sharded, output reduced): wo, FFN down, Mamba
+    out-proj, RWKV o
+  * EP: MoE expert stacks shard their leading expert dim over ``model``
+  * embeddings shard the vocab dim over ``model``
+  * everything 1-D (norms, scales-per-token, biases of row-parallel) is
+    replicated unless it is the bias of a column-parallel projection.
+
+Quantized params follow their parent projection: ``qw.values`` like ``w``,
+``qw.scale`` ([1, N]) shards N the same way, ``bias`` likewise.
+
+DP: the batch dim of inputs/caches shards over ``("pod", "data")``.
+SP (sequence): long-context KV caches shard the *sequence* dim over
+``data`` and the head_dim over ``model`` (head counts in the pool don't
+divide 16, head_dim always does — see DESIGN.md §5).
+
+ZeRO-1: optimizer state leaves additionally shard their largest
+replicated axis over ``data`` when divisible.
+"""
+from __future__ import annotations
+
+import re
+from typing import Any
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+# projection name -> parallel style
+_COL = {
+    "wq", "wk", "wv", "w_gate", "w_up", "w_in", "wr", "wg",
+    "w_k_up", "w_v_up", "lm_head", "in_proj", "w_dt", "patch_proj",
+    "w_decay_b",
+}
+_ROW = {"wo", "w_down", "w_out", "w_xproj"}
+_REPL = {"router", "w_kv_down", "w_decay_a", "fc1", "fc2"}  # small / precision-sensitive
+
+
+def _style_for(path_names: list[str]) -> str:
+    for name in reversed(path_names):
+        if name in _COL:
+            return "col"
+        if name in _ROW:
+            return "row"
+        if name in _REPL:
+            return "repl"
+    if "embed" in path_names:
+        return "embed"
+    if "experts" in path_names:
+        return "expert"
+    return "repl"
+
+
+def _leaf_kind(path_names: list[str]) -> str:
+    last = path_names[-1]
+    if last in ("values",):
+        return "values"
+    if last in ("scale",):
+        return "scale"
+    if last in ("b", "bias"):
+        return "bias"
+    return "w"
+
+
+def _path_names(path) -> list[str]:
+    names = []
+    for k in path:
+        if isinstance(k, jax.tree_util.DictKey):
+            names.append(str(k.key))
+        elif isinstance(k, jax.tree_util.GetAttrKey):
+            names.append(k.name)
+        elif isinstance(k, jax.tree_util.SequenceKey):
+            names.append(str(k.idx))
+        else:
+            names.append(str(k))
+    return names
+
+
+def _pad(spec: tuple, ndim: int) -> P:
+    """Left-pad with None for stacked leading dims (scan groups, experts)."""
+    if len(spec) > ndim:
+        # drop leading Nones if the leaf is lower-rank (e.g. scale [1, N])
+        spec = spec[len(spec) - ndim :]
+    return P(*((None,) * (ndim - len(spec)) + tuple(spec)))
+
+
+def param_pspec(path, leaf, *, model_axis: str = "model") -> P:
+    names = _path_names(path)
+    ndim = np.ndim(leaf)
+    style = _style_for(names)
+    kind = _leaf_kind(names)
+    m = model_axis
+    if style == "expert" or "experts" in names:
+        # expert stacks are [..., E, d_in, d_out] (possibly with leading
+        # scan-group dims and packed/scale variants): the E axis is always
+        # 3rd-from-last — shard it over ``model`` (EP)
+        if ndim < 3:
+            return P(*((None,) * ndim))
+        dims = [None] * ndim
+        dims[ndim - 3] = m
+        return P(*dims)
+    if style == "embed":
+        return _pad((m, None), ndim)
+    if style == "col":
+        if kind in ("w", "values"):
+            return _pad((None, m), ndim)
+        if kind == "scale":
+            return _pad((None, m), ndim)
+        if kind == "bias":
+            return _pad((m,), ndim)
+    if style == "row":
+        if kind in ("w", "values"):
+            return _pad((m, None), ndim)
+        return _pad((None,) * min(ndim, 2), ndim)
+    return P(*((None,) * ndim))
+
+
+def make_param_shardings(mesh: Mesh, params: Any, *, model_axis: str = "model"):
+    """Pytree of NamedShardings matching ``params`` (template or real)."""
+
+    def f(path, leaf):
+        return NamedSharding(mesh, param_pspec(path, leaf, model_axis=model_axis))
+
+    return jax.tree_util.tree_map_with_path(f, params)
+
+
+def make_param_pspecs(params: Any, *, model_axis: str = "model"):
+    return jax.tree_util.tree_map_with_path(
+        lambda p, l: param_pspec(p, l, model_axis=model_axis), params
+    )
+
+
+def zero1_pspec(path, leaf, *, data_axis="data", model_axis="model") -> P:
+    """ZeRO-1: shard the first replicated axis of optimizer moments over
+    ``data`` when its size divides; fall back to the param spec."""
+    base = param_pspec(path, leaf, model_axis=model_axis)
+    ndim = np.ndim(leaf)
+    if ndim == 0:
+        return base
+    dims = list(base) + [None] * (ndim - len(base))
+    shape = np.shape(leaf)
+    for i, (ax, sz) in enumerate(zip(dims, shape)):
+        if ax is None and sz % 16 == 0 and sz >= 16:
+            dims[i] = data_axis
+            break
+    return P(*dims)
+
+
+def make_opt_pspecs(params: Any, *, zero1: bool, model_axis="model", data_axis="data"):
+    """PartitionSpecs for AdamW moments (m, v trees mirror params)."""
+    if not zero1:
+        return make_param_pspecs(params, model_axis=model_axis)
+    return jax.tree_util.tree_map_with_path(
+        lambda p, l: zero1_pspec(p, l, data_axis=data_axis, model_axis=model_axis),
+        params,
+    )
+
+
+# ---------------------------------------------------------------------------
+# activations / caches
+# ---------------------------------------------------------------------------
+
+
+def batch_axes(mesh: Mesh) -> tuple:
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def batch_pspec(mesh: Mesh) -> P:
+    return P(batch_axes(mesh))
+
+
+def act_pspec(mesh: Mesh, *, seq_shard: bool) -> P:
+    """Residual-stream constraint [B, L, d]: batch over DP, optionally the
+    sequence over ``model`` (TP-SP, Megatron sequence parallelism)."""
+    dp = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    return P(dp, "model" if seq_shard else None, None)
+
+
+def cache_pspecs(cfg, cache: Any, mesh: Mesh, *, seq_axis_shard: bool,
+                 seq_model_shard: bool = False) -> Any:
+    """KV/state cache specs: batch over DP (when divisible) else sequence
+    over ``data`` (SP flash-decode for batch=1 long-context); head_dim /
+    state channels over ``model`` — or, with ``seq_model_shard``, the
+    cache SEQUENCE over ``model`` (flash-decode partial-softmax combine:
+    turns per-layer [B,H,S] score all-reduces into tiny stat reductions).
+    """
+    dp = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+    def f(path, leaf):
+        names = _path_names(path)
+        ndim = np.ndim(leaf)
+        last = names[-1]
+        if ndim <= 1:
+            return P()
+        bdim = None if seq_axis_shard else dp
+        if last in ("k", "v", "k_scale", "v_scale"):
+            # [(groups,) B, S, Hkv, dh(or 1)] — rank 4 for prefix layers
+            if seq_model_shard:
+                return _pad((bdim, "model", None, None), ndim)
+            seq = "data" if seq_axis_shard else None
+            model = "model" if (np.shape(leaf)[-1] % _model_size(mesh) == 0 and np.shape(leaf)[-1] > 1) else None
+            return _pad((bdim, seq, None, model), ndim)
+        if last == "conv":  # [(groups,) B, dc-1, di]
+            return _pad((bdim, None, "model"), ndim)
+        if last == "ssm":  # [(groups,) B, di, ds]
+            return _pad((bdim, "model", None), ndim)
+        if last == "wkv":  # [(groups,) B, nh, hd, hd]
+            return _pad((bdim, "model", None, None), ndim)
+        if last in ("tshift", "cshift"):  # [(groups,) B, 1, d]
+            return _pad((bdim, None, "model"), ndim)
+        return P(*(None,) * ndim)
+
+    return jax.tree_util.tree_map_with_path(f, cache)
+
+
+def _model_size(mesh: Mesh) -> int:
+    return int(mesh.shape["model"]) if "model" in mesh.axis_names else 1

@@ -1,0 +1,173 @@
+"""Fault-tolerant training runtime.
+
+Features (DESIGN.md §5):
+* auto-resume from the latest valid checkpoint (atomic, checksummed);
+* restart-exact data (step-seeded pipeline: no iterator state on disk);
+* straggler watchdog: flags steps slower than ``straggler_factor`` × the
+  running median (on real multi-host this hooks per-host heartbeats; here
+  it monitors step wall time and logs, and is unit-tested by injection);
+* failure injection hook for the restart tests;
+* two execution modes:
+    - ``pjit`` (GSPMD) DP×TP with PartitionSpec rules,
+    - ``ddp_compressed`` shard_map DP with int8 error-feedback gradient
+      all-reduce (parallel/compression.py).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import statistics
+import time
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from jax.experimental.shard_map import shard_map
+
+from repro.checkpoint.manager import CheckpointManager
+from repro.configs.base import ModelConfig
+from repro.data.pipeline import DataConfig, token_batch
+from repro.models import lm
+from repro.optim import adamw
+from repro.parallel import compression, sharding
+
+
+def lm_loss(cfg: ModelConfig, params: Any, batch: dict) -> jnp.ndarray:
+    logits, _ = lm.forward(cfg, params, batch["tokens"])
+    logits = logits.astype(jnp.float32)
+    labels = batch["labels"]
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    return jnp.mean(logz - gold)
+
+
+def make_train_step(
+    cfg: ModelConfig,
+    opt_cfg: adamw.AdamWConfig,
+    loss_fn: Optional[Callable] = None,
+):
+    loss_fn = loss_fn or functools.partial(lm_loss, cfg)
+
+    def step(params, opt_state, batch):
+        loss, grads = jax.value_and_grad(lambda p: loss_fn(p, batch))(params)
+        params, opt_state, metrics = adamw.apply(opt_cfg, opt_state, params, grads)
+        metrics["loss"] = loss
+        return params, opt_state, metrics
+
+    return step
+
+
+def make_ddp_compressed_step(
+    cfg: ModelConfig,
+    opt_cfg: adamw.AdamWConfig,
+    mesh: Mesh,
+    axis: str = "data",
+    loss_fn: Optional[Callable] = None,
+):
+    """Pure-DP shard_map step: per-device grads -> int8 EF all-reduce ->
+    replicated AdamW update."""
+    loss_fn = loss_fn or functools.partial(lm_loss, cfg)
+    n_dev = int(mesh.shape[axis])
+
+    def spmd(params, opt_state, err, batch):
+        loss, grads = jax.value_and_grad(lambda p: loss_fn(p, batch))(params)
+        loss = jax.lax.pmean(loss, axis)
+        grads, err = compression.compressed_tree_psum(grads, err, axis, n_dev)
+        params, opt_state, metrics = adamw.apply(opt_cfg, opt_state, params, grads)
+        metrics["loss"] = loss
+        return params, opt_state, err, metrics
+
+    return jax.jit(
+        shard_map(
+            spmd,
+            mesh=mesh,
+            in_specs=(P(), P(), P(), P(axis)),
+            out_specs=(P(), P(), P(), P()),
+            check_rep=False,
+        )
+    )
+
+
+@dataclasses.dataclass
+class TrainerConfig:
+    total_steps: int = 300
+    checkpoint_every: int = 50
+    log_every: int = 10
+    straggler_factor: float = 3.0
+    keep_checkpoints: int = 3
+
+
+class Trainer:
+    """Checkpoint/restart training loop with straggler watchdog."""
+
+    def __init__(
+        self,
+        cfg: ModelConfig,
+        opt_cfg: adamw.AdamWConfig,
+        data_cfg: DataConfig,
+        tc: TrainerConfig,
+        ckpt_dir: str,
+        *,
+        step_fn: Optional[Callable] = None,
+        params: Any = None,
+        seed: int = 0,
+    ):
+        self.cfg, self.opt_cfg, self.data_cfg, self.tc = cfg, opt_cfg, data_cfg, tc
+        self.ckpt = CheckpointManager(ckpt_dir, keep=tc.keep_checkpoints)
+        key = jax.random.PRNGKey(seed)
+        self.params = params if params is not None else lm.init_params(cfg, key)
+        self.opt_state = adamw.init(self.params)
+        self.start_step = 0
+        self.step_times: list[float] = []
+        self.straggler_events: list[int] = []
+        self.fail_at: Optional[int] = None  # test hook
+        self._step = jax.jit(step_fn or make_train_step(cfg, opt_cfg))
+        self.history: list[dict] = []
+        self._maybe_resume()
+
+    def _maybe_resume(self):
+        latest = self.ckpt.latest_step()
+        if latest is None:
+            return
+        state = {"params": self.params, "opt": self.opt_state}
+        state, meta, step = self.ckpt.restore(state)
+        self.params, self.opt_state = state["params"], state["opt"]
+        self.start_step = int(meta.get("next_step", step))
+
+    def _watchdog(self, step: int, dt: float):
+        self.step_times.append(dt)
+        if len(self.step_times) >= 8:
+            med = statistics.median(self.step_times[-64:])
+            if dt > self.tc.straggler_factor * med:
+                self.straggler_events.append(step)
+                print(
+                    f"[watchdog] step {step}: {dt*1e3:.1f}ms > "
+                    f"{self.tc.straggler_factor}x median {med*1e3:.1f}ms — "
+                    "straggler flagged (would trigger hot-spare swap on a real pod)"
+                )
+
+    def run(self) -> dict:
+        for step in range(self.start_step, self.tc.total_steps):
+            if self.fail_at is not None and step == self.fail_at:
+                raise RuntimeError(f"injected failure at step {step}")
+            batch = token_batch(self.data_cfg, step)
+            t0 = time.perf_counter()
+            self.params, self.opt_state, metrics = self._step(
+                self.params, self.opt_state, batch
+            )
+            metrics = {k: float(v) for k, v in metrics.items()}
+            self._watchdog(step, time.perf_counter() - t0)
+            self.history.append({"step": step, **metrics})
+            if step % self.tc.log_every == 0:
+                print(
+                    f"step {step:5d} loss {metrics['loss']:.4f} "
+                    f"gnorm {metrics['grad_norm']:.3f} lr {metrics['lr']:.2e}"
+                )
+            if (step + 1) % self.tc.checkpoint_every == 0 or step + 1 == self.tc.total_steps:
+                self.ckpt.save(
+                    step + 1,
+                    {"params": self.params, "opt": self.opt_state},
+                    meta={"next_step": step + 1},
+                )
+        return {"history": self.history, "stragglers": self.straggler_events}

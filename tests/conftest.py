@@ -1,0 +1,3 @@
+import jax
+
+jax.config.update("jax_platform_name", "cpu")

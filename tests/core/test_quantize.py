@@ -1,0 +1,64 @@
+"""Property tests for the quantization primitives."""
+import hypothesis.strategies as st
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings
+
+import sys
+import importlib
+Q = importlib.import_module("repro.core.quantize")
+
+
+@settings(max_examples=30, deadline=None)
+@given(
+    seed=st.integers(0, 2**16),
+    bits=st.sampled_from([4, 8]),
+    rows=st.integers(1, 8),
+    cols=st.sampled_from([2, 16, 64, 130]),
+)
+def test_quant_error_bound(seed, bits, rows, cols):
+    """|x - deq(q(x))| <= scale/2 elementwise (round-to-nearest)."""
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.normal(size=(rows, cols)) * 10, jnp.float32)
+    q = Q.quantize(x, bits, axis=-1)
+    err = np.abs(np.asarray(q.dequantize() - x))
+    bound = np.asarray(q.scale) / 2 + 1e-6
+    assert (err <= bound + 1e-7).all()
+
+
+@settings(max_examples=30, deadline=None)
+@given(seed=st.integers(0, 2**16), k=st.sampled_from([2, 8, 64]), n=st.integers(1, 9))
+def test_pack_unpack_roundtrip(seed, k, n):
+    rng = np.random.default_rng(seed)
+    v = jnp.asarray(rng.integers(-8, 8, size=(k, n)), jnp.int8)
+    np.testing.assert_array_equal(Q.unpack_int4(Q.pack_int4(v, 0), 0), v)
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 2**16))
+def test_weight_quant_per_channel_scales(seed):
+    rng = np.random.default_rng(seed)
+    w = jnp.asarray(rng.normal(size=(64, 32)), jnp.float32)
+    # scale one output channel way up: other channels must be unaffected
+    w = w.at[:, 3].mul(100.0)
+    q = Q.quantize_weight(w, 8)
+    deq = q.dequantize()
+    rel = np.linalg.norm(np.asarray(deq[:, :3] - w[:, :3])) / np.linalg.norm(
+        np.asarray(w[:, :3])
+    )
+    assert rel < 0.01, rel
+
+
+def test_idempotent_quantization():
+    """Quantizing already-quantized values is exact."""
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.normal(size=(8, 16)), jnp.float32)
+    q1 = Q.quantize(x, 8, axis=-1)
+    d1 = q1.dequantize()
+    q2 = Q.quantize(d1, 8, axis=-1)
+    np.testing.assert_allclose(q2.dequantize(), d1, rtol=1e-6, atol=1e-6)
+
+
+def test_int_range():
+    assert Q.int_range(4) == (-7, 7)
+    assert Q.int_range(8) == (-127, 127)

@@ -1,0 +1,71 @@
+"""Property tests (hypothesis) for the orthogonal transforms."""
+import hypothesis.strategies as st
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings
+
+from repro.core import transforms as T
+
+DIMS = st.sampled_from([2, 4, 8, 16, 64, 128, 192, 320, 3072])
+
+
+@settings(max_examples=25, deadline=None)
+@given(n=st.sampled_from([2, 4, 8, 16, 64, 128]))
+def test_hadamard_orthonormal(n):
+    h = np.asarray(T.hadamard_matrix(n), np.float64)
+    np.testing.assert_allclose(h @ h.T, np.eye(n), atol=1e-10)
+    np.testing.assert_allclose(h, h.T, atol=1e-12)  # symmetric
+
+
+@settings(max_examples=25, deadline=None)
+@given(n=st.sampled_from([4, 8, 16, 32, 64]))
+def test_dct_orthonormal(n):
+    d = np.asarray(T.dct_matrix(n), np.float64)  # f32 storage -> f32 atol
+    np.testing.assert_allclose(d @ d.T, np.eye(n), atol=5e-6)
+
+
+@settings(max_examples=20, deadline=None)
+@given(dim=DIMS, seed=st.integers(0, 2**16))
+def test_fast_wht_equals_dense(dim, seed):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.normal(size=(3, dim)), jnp.float32)
+    hb = T.blocked_hadamard_matrix(dim)
+    np.testing.assert_allclose(T.fast_wht(x), x @ hb, rtol=2e-4, atol=2e-4)
+
+
+@settings(max_examples=20, deadline=None)
+@given(dim=DIMS, seed=st.integers(0, 2**16))
+def test_wht_involution_and_isometry(dim, seed):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.normal(size=(2, dim)), jnp.float32)
+    y = T.fast_wht(x)
+    np.testing.assert_allclose(T.fast_wht(y), x, rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(
+        jnp.linalg.norm(y, axis=-1), jnp.linalg.norm(x, axis=-1), rtol=1e-4
+    )
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    seed=st.integers(0, 2**16),
+    din=st.sampled_from([32, 64, 128]),
+    dout=st.sampled_from([64, 128, 192]),
+)
+def test_computational_invariance(seed, din, dout):
+    """(X·H)(Hᵀ·W) == X·W — paper Eq. 4."""
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.normal(size=(4, din)), jnp.float32)
+    w = jnp.asarray(rng.normal(size=(din, dout)), jnp.float32)
+    from repro.core.versaq import rotate_rows
+
+    got = T.fast_wht(x) @ rotate_rows(w)
+    np.testing.assert_allclose(got, x @ w, rtol=1e-3, atol=1e-3)
+
+
+def test_block_size_for():
+    assert T.block_size_for(4096) == 4096
+    assert T.block_size_for(5120) == 1024
+    assert T.block_size_for(6144) == 2048
+    assert T.block_size_for(4608) == 512
+    assert T.block_size_for(96) == 32
+    assert T.block_size_for(8192, cap=4096) == 4096

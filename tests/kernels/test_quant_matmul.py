@@ -1,0 +1,66 @@
+"""quant_matmul Pallas kernel vs pure-jnp oracle: shape/dtype sweeps."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.quantize import quantize_per_token, quantize_weight
+from repro.kernels import ops, ref
+
+RNG = np.random.default_rng(7)
+
+
+def _mk(m, k, n):
+    x = jnp.asarray(RNG.normal(size=(m, k)), jnp.float32)
+    w = jnp.asarray(RNG.normal(size=(k, n)), jnp.float32)
+    return x, w
+
+
+@pytest.mark.parametrize("w_bits", [8, 4])
+@pytest.mark.parametrize(
+    "m,k,n,bm,bn,bk",
+    [
+        (32, 128, 64, 32, 64, 64),
+        (64, 256, 128, 32, 64, 128),
+        (128, 512, 256, 64, 128, 256),
+        (16, 64, 512, 16, 128, 64),
+    ],
+)
+def test_matches_oracle(w_bits, m, k, n, bm, bn, bk):
+    x, w = _mk(m, k, n)
+    wq = quantize_weight(w, w_bits)
+    xq = quantize_per_token(x, 8)
+    got = ops.quant_linear_matmul(x, wq, a_bits=8, bm=bm, bn=bn, bk=bk, interpret=True)
+    want = ref.quant_matmul_ref(
+        xq.values, xq.scale, wq.values, wq.scale.reshape(1, -1), packed=wq.packed
+    )
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("out_dtype", [jnp.float32, jnp.bfloat16])
+def test_out_dtypes(out_dtype):
+    x, w = _mk(32, 128, 64)
+    wq = quantize_weight(w, 4)
+    got = ops.quant_linear_matmul(
+        x, wq, a_bits=8, bm=32, bn=64, bk=64, out_dtype=out_dtype, interpret=True
+    )
+    assert got.dtype == out_dtype
+    assert np.isfinite(np.asarray(got, np.float32)).all()
+
+
+@pytest.mark.parametrize("a_bits", [8, 4])
+def test_close_to_fp(a_bits):
+    """Quantized result approximates the fp matmul (sanity bound)."""
+    x, w = _mk(64, 256, 128)
+    wq = quantize_weight(w, 8)
+    got = ops.quant_linear_matmul(x, wq, a_bits=a_bits, bm=32, bn=64, bk=128, interpret=True)
+    fp = x @ w
+    rel = float(jnp.linalg.norm(got - fp) / jnp.linalg.norm(fp))
+    assert rel < (0.02 if a_bits == 8 else 0.2), rel
+
+
+def test_int4_packing_roundtrip_shapes():
+    _, w = _mk(8, 64, 32)
+    wq = quantize_weight(w, 4)
+    assert wq.packed and wq.values.dtype == jnp.uint8
+    assert wq.values.shape == (32, 32)  # K packed 2-per-byte
+    assert wq.shape == (64, 32)

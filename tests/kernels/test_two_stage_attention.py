@@ -1,0 +1,88 @@
+"""Two-stage recomputation attention kernel (paper Alg. 1) vs oracles."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.quantize import quantize_per_token
+from repro.kernels import ops, ref
+from repro.kernels.two_stage_attention import two_stage_attention, vmem_bytes_two_stage
+
+RNG = np.random.default_rng(3)
+
+
+def _qkv(bh, l, dh):
+    q = jnp.asarray(RNG.normal(size=(bh, l, dh)), jnp.float32)
+    k = jnp.asarray(RNG.normal(size=(bh, l, dh)), jnp.float32)
+    v = jnp.asarray(RNG.normal(size=(bh, l, dh)), jnp.float32)
+    return q, k, v
+
+
+def _quant(q, k, v):
+    qq = quantize_per_token(q, 8)
+    kq = quantize_per_token(k, 8)
+    vs = jnp.max(jnp.abs(v), axis=(1, 2), keepdims=True) / 127.0
+    vv = jnp.clip(jnp.round(v / vs), -127, 127).astype(jnp.int8)
+    return qq, kq, vv, vs
+
+
+@pytest.mark.parametrize("causal", [False, True])
+@pytest.mark.parametrize(
+    "bh,l,dh,bq,bk,bkv",
+    [
+        (1, 128, 64, 64, 64, 64),
+        (2, 256, 64, 64, 64, 128),
+        (1, 256, 128, 64, 64, 256),
+        (4, 128, 64, 128, 64, 128),
+    ],
+)
+def test_exact_vs_int_oracle(causal, bh, l, dh, bq, bk, bkv):
+    q, k, v = _qkv(bh, l, dh)
+    qq, kq, vv, vs = _quant(q, k, v)
+    want = ref.two_stage_attention_ref(
+        qq.values, qq.scale, kq.values, kq.scale, vv, vs, causal=causal
+    )
+    got = two_stage_attention(
+        qq.values, qq.scale.astype(jnp.float32), kq.values,
+        kq.scale.astype(jnp.float32), vv, vs.astype(jnp.float32),
+        causal=causal, bq=bq, bk=bk, bkv=bkv, interpret=True,
+    )
+    np.testing.assert_allclose(got, want.astype(jnp.float32), rtol=3e-4, atol=3e-4)
+
+
+@pytest.mark.parametrize("causal", [False, True])
+def test_close_to_fp_attention(causal):
+    b, h, l, dh = 1, 2, 256, 64
+    q = jnp.asarray(RNG.normal(size=(b, h, l, dh)), jnp.float32)
+    k = jnp.asarray(RNG.normal(size=(b, h, l, dh)), jnp.float32)
+    v = jnp.asarray(RNG.normal(size=(b, h, l, dh)), jnp.float32)
+    got = ops.two_stage_mha(q, k, v, causal=causal, bq=64, bk=64, bkv=128)
+    fp = ref.attention_ref(q, k, v, causal=causal)
+    rel = float(jnp.linalg.norm(got - fp) / jnp.linalg.norm(fp))
+    assert rel < 0.05, rel  # int8 Q/K/V + int8 probabilities
+
+
+def test_stats_match_flash_semantics():
+    """Stage-① (M, Σ) equals the direct row max / softmax denominator."""
+    bh, l, dh = 1, 128, 64
+    q, k, v = _qkv(bh, l, dh)
+    qq, kq, vv, vs = _quant(q, k, v)
+    # run just the kernel's first stage via the public op and compare the
+    # implied normalization: o_kernel == oracle already covers Σ; check M
+    # indirectly by feeding a spiked row.
+    qv = qq.values.at[0, 0].set(127)
+    got = two_stage_attention(
+        qv, qq.scale.astype(jnp.float32), kq.values, kq.scale.astype(jnp.float32),
+        vv, vs.astype(jnp.float32), causal=False, bq=64, bk=64, bkv=64, interpret=True,
+    )
+    want = ref.two_stage_attention_ref(
+        qv, qq.scale, kq.values, kq.scale, vv, vs, causal=False
+    )
+    np.testing.assert_allclose(got, want.astype(jnp.float32), rtol=3e-4, atol=3e-4)
+
+
+def test_vmem_model_two_stage_smaller_than_flash():
+    """The paper's claim: Stage-② needs no (m, l, rescale) carry, so at the
+    same mega-tile size its VMEM working set is below the flash kernel's."""
+    m = vmem_bytes_two_stage(bq=64, bk=64, bkv=2048, dh=64)
+    assert m["stage1"] < m["flash_same_tiles"]
+    assert m["stage2"] <= m["flash_same_tiles"] + 64 * 4  # no rescale carry

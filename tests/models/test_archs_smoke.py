@@ -1,0 +1,83 @@
+"""Per-arch smoke tests: reduced config, one forward + one train step on
+CPU, output shapes + no NaNs (assignment requirement)."""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import ASSIGNED, get_config
+from repro.models import lm, vggt
+from repro.optim import adamw
+from repro.runtime.trainer import lm_loss, make_train_step
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _inputs(cfg, b=2, l=16):
+    if cfg.embed_inputs:
+        tokens = jax.random.normal(KEY, (b, l, cfg.d_model), jnp.float32)
+    else:
+        tokens = jax.random.randint(KEY, (b, l), 0, cfg.vocab_size)
+    labels = jax.random.randint(KEY, (b, l), 0, cfg.vocab_size)
+    return {"tokens": tokens, "labels": labels}
+
+
+@pytest.mark.parametrize("arch", ASSIGNED)
+def test_forward_shapes_no_nan(arch):
+    cfg = get_config(arch + "-smoke")
+    params = lm.init_params(cfg, KEY)
+    batch = _inputs(cfg)
+    logits, _ = lm.forward(cfg, params, batch["tokens"])
+    assert logits.shape == (2, 16, cfg.vocab_size)
+    assert bool(jnp.isfinite(logits).all())
+
+
+@pytest.mark.parametrize("arch", ASSIGNED)
+def test_one_train_step(arch):
+    cfg = get_config(arch + "-smoke")
+    params = lm.init_params(cfg, KEY)
+    opt = adamw.init(params)
+    step = jax.jit(make_train_step(cfg, adamw.AdamWConfig(lr=1e-3)))
+    params2, opt2, metrics = step(params, opt, _inputs(cfg))
+    assert bool(jnp.isfinite(metrics["loss"]))
+    assert bool(jnp.isfinite(metrics["grad_norm"]))
+    # parameters actually changed
+    l0 = jax.tree.leaves(params)[0]
+    l1 = jax.tree.leaves(params2)[0]
+    assert not bool(jnp.allclose(l0, l1))
+
+
+def test_vggt_smoke_forward_and_step():
+    cfg = get_config("vggt-1b-smoke")
+    params = vggt.init_params(cfg, KEY)
+    pe = jax.random.normal(KEY, (2, 3, 64, cfg.d_model), jnp.float32)
+    out = vggt.forward(cfg, params, pe)
+    assert out["pose"].shape == (2, 3, 9)
+    assert out["points"].shape == (2, 3, 64, 3)
+    assert out["depth"].shape == (2, 3, 64)
+    for v in out.values():
+        assert bool(jnp.isfinite(v).all())
+    batch = {
+        "patches": pe,
+        "pose": jnp.zeros((2, 3, 9)),
+        "depth": jnp.ones((2, 3, 64)),
+        "points": jnp.zeros((2, 3, 64, 3)),
+    }
+    loss, grads = jax.value_and_grad(
+        lambda p: vggt.reconstruction_loss(cfg, p, batch)
+    )(params)
+    assert bool(jnp.isfinite(loss))
+    gn = adamw.global_norm(grads)
+    assert bool(jnp.isfinite(gn)) and float(gn) > 0
+
+
+@pytest.mark.parametrize("arch", ["qwen3-14b", "jamba-v0.1-52b", "deepseek-v2-lite-16b"])
+def test_full_configs_match_published_sizes(arch):
+    cfg = get_config(arch)
+    total, active = cfg.param_counts()
+    expect = {
+        "qwen3-14b": (14.8e9, 14.8e9),
+        "jamba-v0.1-52b": (51.4e9, 12.0e9),
+        "deepseek-v2-lite-16b": (15.7e9, 2.7e9),
+    }[arch]
+    assert abs(total - expect[0]) / expect[0] < 0.05
+    assert abs(active - expect[1]) / expect[1] < 0.08

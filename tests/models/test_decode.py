@@ -1,0 +1,88 @@
+"""Serving equivalence: prefill + decode == full forward (int8-KV tolerance),
+for every mixer family, both full-precision and W4A8-quantized params."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core.model_quant import quantize_lm
+from repro.core.versaq import W4A8
+from repro.models import lm
+
+KEY = jax.random.PRNGKey(0)
+ARCHS = [
+    "qwen3-14b", "starcoder2-7b", "musicgen-large", "paligemma-3b",
+    "deepseek-moe-16b", "deepseek-v2-lite-16b", "jamba-v0.1-52b", "rwkv6-1.6b",
+]
+
+
+def _decode_vs_full(cfg, params, b=2, l=12, split=8):
+    if cfg.embed_inputs:
+        full_in = jax.random.normal(KEY, (b, l, cfg.d_model), jnp.float32)
+    else:
+        full_in = jax.random.randint(KEY, (b, l), 0, cfg.vocab_size)
+    full_logits, _ = lm.forward(cfg, params, full_in)
+    cache = lm.init_cache(cfg, b, 32)
+    _, cache = lm.forward(cfg, params, full_in[:, :split], cache=cache, mode="prefill")
+    outs = []
+    for t in range(split, l):
+        tok = full_in[:, t] if not cfg.embed_inputs else full_in[:, t : t + 1]
+        sl, cache = lm.decode_step(cfg, params, tok, cache)
+        outs.append(sl[:, 0])
+    dec = jnp.stack(outs, axis=1)
+    return float(
+        jnp.linalg.norm(dec - full_logits[:, split:])
+        / jnp.linalg.norm(full_logits[:, split:])
+    )
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_decode_equals_full_fp(arch):
+    cfg = get_config(arch + "-smoke")
+    if cfg.moe:
+        cfg = cfg.with_(capacity_factor=float(cfg.n_experts))
+    params = lm.init_params(cfg, KEY)
+    err = _decode_vs_full(cfg, params)
+    assert err < 0.1, (arch, err)  # int8 KV cache noise bound
+
+
+@pytest.mark.parametrize("arch", ["qwen3-14b", "rwkv6-1.6b"])
+def test_decode_equals_full_quantized(arch):
+    cfg = get_config(arch + "-smoke")
+    params = quantize_lm(cfg, lm.init_params(cfg, KEY), W4A8)
+    err = _decode_vs_full(cfg, params)
+    assert err < 0.35, (arch, err)  # W4 weights + int8 KV
+
+
+def test_bf16_cache_more_accurate_than_int8():
+    cfg = get_config("qwen3-14b-smoke")
+    params = lm.init_params(cfg, KEY)
+    full_in = jax.random.randint(KEY, (2, 12), 0, cfg.vocab_size)
+    full_logits, _ = lm.forward(cfg, params, full_in)
+
+    def run(kv_dtype):
+        cache = lm.init_cache(cfg, 2, 32, kv_dtype)
+        _, cache = lm.forward(cfg, params, full_in[:, :8], cache=cache, mode="prefill")
+        outs = []
+        for t in range(8, 12):
+            sl, cache = lm.decode_step(cfg, params, full_in[:, t], cache)
+            outs.append(sl[:, 0])
+        dec = jnp.stack(outs, 1)
+        return float(
+            jnp.linalg.norm(dec - full_logits[:, 8:]) / jnp.linalg.norm(full_logits[:, 8:])
+        )
+
+    assert run(jnp.bfloat16) < run(jnp.int8) + 1e-6
+
+
+def test_streamed_attention_impls_agree():
+    cfg = get_config("qwen3-14b-smoke")
+    params = lm.init_params(cfg, KEY)
+    toks = jax.random.randint(KEY, (2, 16), 0, cfg.vocab_size)
+    outs = {}
+    for impl in ("vanilla", "flash", "two_stage"):
+        logits, _ = lm.forward(cfg.with_(attn_impl=impl), params, toks)
+        outs[impl] = logits
+    np.testing.assert_allclose(outs["flash"], outs["vanilla"], rtol=2e-3, atol=2e-3)
+    np.testing.assert_allclose(outs["two_stage"], outs["vanilla"], rtol=2e-3, atol=2e-3)

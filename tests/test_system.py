@@ -1,0 +1,102 @@
+"""End-to-end system behaviour: training learns, quantized serving works,
+the full VersaQ pipeline preserves a trained model's behaviour."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.core.model_quant import quantize_lm, quantize_vggt
+from repro.core.versaq import QuantPolicy, W4A8
+from repro.data.pipeline import DataConfig, scene_batch, token_batch
+from repro.models import lm, vggt
+from repro.optim import adamw
+from repro.runtime.trainer import make_train_step
+from repro.serving.engine import Engine, vggt_serve
+
+KEY = jax.random.PRNGKey(0)
+TINY = dict(d_model=64, n_heads=4, n_kv_heads=2, head_dim=16, d_ff=128, vocab_size=64)
+
+
+def _train_tiny(steps=80):
+    cfg = get_config("qwen3-14b-smoke").with_(**TINY)
+    params = lm.init_params(cfg, KEY)
+    opt = adamw.init(params)
+    step = jax.jit(make_train_step(cfg, adamw.AdamWConfig(lr=3e-3, warmup_steps=5, total_steps=steps)))
+    dc = DataConfig(vocab_size=64, batch=8, seq_len=32)
+    losses = []
+    for s in range(steps):
+        params, opt, m = step(params, opt, token_batch(dc, s))
+        losses.append(float(m["loss"]))
+    return cfg, params, losses
+
+
+def test_training_learns():
+    _, _, losses = _train_tiny()
+    assert losses[-1] < 0.6 * losses[0], (losses[0], losses[-1])
+
+
+def test_quantized_model_preserves_trained_behaviour():
+    """The system-level Table-I proxy: after training, W4A8 VersaQ keeps
+    greedy predictions close to the fp model; RTN W4A4 degrades more."""
+    cfg, params, _ = _train_tiny()
+    dc = DataConfig(vocab_size=64, batch=8, seq_len=32)
+    batch = token_batch(dc, 999)
+    ref, _ = lm.forward(cfg, params, batch["tokens"])
+    ref_top1 = jnp.argmax(ref, -1)
+
+    def agree(policy):
+        qp = quantize_lm(cfg, params, policy)
+        out, _ = lm.forward(cfg, qp, batch["tokens"])
+        return float(jnp.mean(jnp.argmax(out, -1) == ref_top1))
+
+    versaq_w4a8 = agree(W4A8)
+    assert versaq_w4a8 > 0.9, versaq_w4a8  # paper: 98-99% of fp at W4A8
+    rtn_w4a4 = agree(QuantPolicy(4, 4, "rtn"))
+    versaq_w4a4 = agree(QuantPolicy(4, 4, "versaq"))
+    assert versaq_w4a4 >= rtn_w4a4 - 0.02, (versaq_w4a4, rtn_w4a4)
+
+
+def test_serving_engine_generates():
+    cfg, params, _ = _train_tiny(steps=30)
+    eng = Engine(cfg, params, max_len=64)
+    prompts = jnp.asarray(np.random.default_rng(0).integers(0, 64, (4, 8)), jnp.int32)
+    out = eng.generate(prompts, n_steps=8)
+    assert out.shape == (4, 8)
+    assert (out >= 0).all() and (out < 64).all()
+    assert eng.stats.tokens == 32
+
+
+def test_vggt_feedforward_reconstruction_pipeline():
+    """Train VGGT-mini briefly on synthetic scenes; quantized serving must
+    track the fp reconstruction (the paper's end-to-end claim)."""
+    cfg = get_config("vggt-1b-smoke").with_(layerscale_init=0.2)
+    params = vggt.init_params(cfg, KEY)
+
+    def loss_fn(p, b):
+        return vggt.reconstruction_loss(cfg, p, b)
+
+    opt_cfg = adamw.AdamWConfig(lr=1e-3, warmup_steps=5, total_steps=40)
+    opt = adamw.init(params)
+
+    @jax.jit
+    def step(p, o, b):
+        l, g = jax.value_and_grad(loss_fn)(p, b)
+        p, o, m = adamw.apply(opt_cfg, o, p, g)
+        return p, o, l
+
+    losses = []
+    for s in range(40):
+        b = scene_batch(4, 3, 64, cfg.d_model, s)
+        b = {k: jnp.asarray(v) for k, v in b.items()}
+        params, opt, l = step(params, opt, b)
+        losses.append(float(l))
+    assert losses[-1] < losses[0], (losses[0], losses[-1])
+
+    scenes = jnp.asarray(scene_batch(2, 3, 64, cfg.d_model, 1000)["patches"])
+    ref = vggt_serve(cfg, params, scenes)
+    qp = quantize_vggt(cfg, params, W4A8)
+    got = vggt_serve(cfg, qp, scenes)
+    rel = float(
+        jnp.linalg.norm(got["points"] - ref["points"]) / jnp.linalg.norm(ref["points"])
+    )
+    assert rel < 0.25, rel
