@@ -1,0 +1,68 @@
+"""Warm-bucket serving throughput: fp32 vs W4A8 through ``VGGTEngine``.
+
+Measures the production serving path (bucketed jit cache + micro-batch
+queue): the first request per bucket pays the compile, every later
+request hits the warm bucket.  Emits cold-vs-warm latency and warm
+scenes/s for the fp engine and the W4A8 engine (jnp int-emulation path;
+pass ``--attn-impl two_stage`` to route global attention through the
+INT8 Pallas kernel — interpret-mode on CPU, so structurally correct but
+slow off-TPU).
+
+  PYTHONPATH=src python -m benchmarks.serve_vggt_bench [--requests 8]
+"""
+import argparse
+
+import jax.numpy as jnp
+
+from benchmarks import common
+from repro.core.versaq import W4A8
+from repro.data.pipeline import scene_batch
+from repro.serving.vggt_engine import VGGTEngine
+
+
+def bench_engine(name: str, eng: VGGTEngine, cfg, *, scenes_per_req: int,
+                 frames: int, patches: int, requests: int) -> None:
+    reqs = [
+        jnp.asarray(
+            scene_batch(scenes_per_req, frames, patches, cfg.d_model, 20_000 + r)["patches"]
+        )
+        for r in range(requests)
+    ]
+    eng.infer(reqs[0])  # cold: pays the bucket compile
+    bucket, bs = next(iter(eng.stats.buckets.items()))
+    cold_ms = bs.latencies_s[0] * 1e3
+    for r in reqs[1:]:
+        eng.infer(r)
+    warm = list(bs.latencies_s)[1:]
+    warm_scenes = bs.scenes - scenes_per_req
+    warm_s = sum(warm)
+    common.emit(
+        f"serve_vggt.{name}",
+        (warm_s / max(len(warm), 1)) * 1e6,
+        f"bucket={bucket} cold_ms={cold_ms:.1f} "
+        f"warm_p50_ms={bs.p50_ms:.1f} warm_scenes_per_s={warm_scenes / max(warm_s, 1e-9):.2f} "
+        f"compiles={bs.compiles}",
+    )
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--requests", type=int, default=6)
+    ap.add_argument("--scenes", type=int, default=4)
+    ap.add_argument("--frames", type=int, default=3)
+    ap.add_argument("--patches", type=int, default=64)
+    ap.add_argument("--attn-impl", default=None)
+    args = ap.parse_args()
+
+    cfg, params = common.trained_vggt_mini()
+    fp = VGGTEngine(cfg, params, max_batch=args.scenes)
+    bench_engine("fp32", fp, cfg, scenes_per_req=args.scenes, frames=args.frames,
+                 patches=args.patches, requests=args.requests)
+    q = VGGTEngine(cfg, params, policy=W4A8, attn_impl=args.attn_impl,
+                   max_batch=args.scenes)
+    bench_engine("w4a8", q, cfg, scenes_per_req=args.scenes, frames=args.frames,
+                 patches=args.patches, requests=args.requests)
+
+
+if __name__ == "__main__":
+    main()

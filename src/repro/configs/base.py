@@ -30,6 +30,10 @@ class ModelConfig:
     rope_theta: float = 10_000.0
     attn_bias: bool = False
     attn_impl: str = "flash"  # flash | two_stage | vanilla (ablation)
+    # two_stage + quantized weights route through the INT8 Pallas kernel;
+    # False pins the jnp emulation (dryrun cost analysis counts its
+    # unrolled chunk loop — see launch/specs.py)
+    attn_use_kernel: bool = True
     attn_dtype: str = "f32"  # f32 | bf16 streaming-attention compute dtype
     act: str = "swiglu"  # swiglu | geglu | gelu
     # --- MoE ---

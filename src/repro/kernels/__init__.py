@@ -6,3 +6,11 @@
 Each has a jitted wrapper in ops.py and a pure-jnp oracle in ref.py;
 validated in interpret mode on CPU, lowered by Mosaic on TPU.
 """
+from jax.experimental.pallas import tpu as _pltpu
+
+
+def tpu_compiler_params(**kw):
+    """Compat shim: ``pltpu.TPUCompilerParams`` was renamed to
+    ``pltpu.CompilerParams`` across JAX releases; accept either."""
+    cls = getattr(_pltpu, "CompilerParams", None) or _pltpu.TPUCompilerParams
+    return cls(**kw)

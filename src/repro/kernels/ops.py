@@ -51,6 +51,19 @@ def quant_linear_matmul(
     return y.reshape(lead + (y.shape[-1],))
 
 
+def divisor_tile(length: int, target: int) -> int:
+    """Largest tile size ≤ ``target`` that divides ``length``.
+
+    The model path serves token counts like S·(n_special + P) that are not
+    multiples of the paper's 64/2048 tiles; the kernel requires exact
+    divisibility, so serving picks the best-fitting divisor per bucket.
+    """
+    t = min(target, length)
+    while length % t:
+        t -= 1
+    return t
+
+
 def two_stage_mha(
     q: jnp.ndarray,
     k: jnp.ndarray,
@@ -64,11 +77,16 @@ def two_stage_mha(
     """Paper-Alg.-1 attention over float [B, H, L, dh] inputs.
 
     Quantizes Q/K per-token and V per-head to int8, then runs the
-    two-stage kernel.  Returns [B, H, Lq, dh] float32.
+    two-stage kernel.  Returns [B, H, Lq, dh] float32.  Tile sizes not
+    passed explicitly default to the largest divisors of Lq/Lk under the
+    paper's T_Q/T_K/T_V.
     """
     interpret = _default_interpret() if interpret is None else interpret
     b, h, lq, dh = q.shape
     lk = k.shape[2]
+    tile_kw.setdefault("bq", divisor_tile(lq, _tsa.T_Q))
+    tile_kw.setdefault("bk", divisor_tile(lk, _tsa.T_K))
+    tile_kw.setdefault("bkv", divisor_tile(lk, _tsa.T_V))
 
     def flat(t, l):
         return t.reshape(b * h, l, dh)

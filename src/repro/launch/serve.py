@@ -1,7 +1,14 @@
 """Serving launcher: quantize + serve batched requests.
 
+LM prefill/decode serving:
+
   PYTHONPATH=src python -m repro.launch.serve --arch qwen3-14b-smoke \
       --policy w4a8 --batch 4 --prompt-len 16 --gen 32
+
+VGGT feed-forward serving (bucketed + micro-batched engine):
+
+  PYTHONPATH=src python -m repro.launch.serve --arch vggt-1b-smoke \
+      --policy w4a8 --requests 6 --frames 4 --patches 64 --attn-impl two_stage
 """
 import argparse
 
@@ -11,8 +18,40 @@ import jax.numpy as jnp
 from repro.configs import get_config
 from repro.core.model_quant import quantize_lm
 from repro.core.versaq import QuantPolicy
+from repro.data.pipeline import scene_batch
 from repro.models import lm
 from repro.serving.engine import Engine
+
+
+def _policy(args) -> QuantPolicy | None:
+    if args.policy == "fp":
+        return None
+    return QuantPolicy(int(args.policy[1]), int(args.policy[3]), args.method)
+
+
+def serve_vggt(cfg, args) -> None:
+    from repro.models import vggt
+    from repro.serving.vggt_engine import VGGTEngine
+
+    params = vggt.init_params(cfg, jax.random.PRNGKey(0))
+    eng = VGGTEngine(
+        cfg,
+        params,
+        policy=_policy(args),
+        attn_impl=args.attn_impl,
+        max_batch=args.batch,
+    )
+    reqs = []
+    for r in range(args.requests):
+        scenes = jnp.asarray(
+            scene_batch(args.scenes, args.frames, args.patches, cfg.d_model, r)["patches"]
+        )
+        reqs.append(eng.enqueue(scenes))
+    eng.flush()
+    out = reqs[-1].result()
+    print(f"served {len(reqs)} requests -> poses{tuple(out['pose'].shape)} "
+          f"points{tuple(out['points'].shape)}")
+    print(eng.stats.format())
 
 
 def main():
@@ -23,14 +62,25 @@ def main():
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=16)
     ap.add_argument("--gen", type=int, default=32)
+    # vggt serving
+    ap.add_argument("--requests", type=int, default=4)
+    ap.add_argument("--scenes", type=int, default=2, help="scenes per request")
+    ap.add_argument("--frames", type=int, default=4)
+    ap.add_argument("--patches", type=int, default=64)
+    ap.add_argument("--attn-impl", default=None,
+                    help="override cfg.attn_impl (two_stage = INT8 Pallas kernel)")
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
+    if cfg.vggt:
+        serve_vggt(cfg, args)
+        return
+
     key = jax.random.PRNGKey(0)
     params = lm.init_params(cfg, key)
-    if args.policy != "fp":
-        w, a = int(args.policy[1]), int(args.policy[3])
-        params = quantize_lm(cfg, params, QuantPolicy(w, a, args.method))
+    pol = _policy(args)
+    if pol is not None:
+        params = quantize_lm(cfg, params, pol)
     eng = Engine(cfg, params, max_len=args.prompt_len + args.gen)
     prompts = jax.random.randint(key, (args.batch, args.prompt_len), 0, cfg.vocab_size)
     out = eng.generate(prompts, args.gen)

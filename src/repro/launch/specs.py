@@ -88,7 +88,9 @@ def _train_cell(cfg: ModelConfig, shape: ShapeSpec, mesh: Mesh, *, seq_sp=True, 
     dp = sharding.batch_axes(mesh)
     act = sharding.act_pspec(mesh, seq_shard=seq_sp)
 
-    cfg2 = cfg.with_(attn_impl=attn) if attn else cfg
+    cfg2 = cfg.with_(attn_impl=attn, attn_use_kernel=False) if attn else cfg
+    # attn_use_kernel=False: cost analysis must count the jnp emulation's
+    # unrolled chunk loop, not an opaque Pallas custom call
 
     def loss_fn(params, batch):
         logits, _ = lm.forward(
@@ -163,7 +165,9 @@ def _prefill_cell(cfg: ModelConfig, shape: ShapeSpec, mesh: Mesh, *, unroll=Fals
     else:
         tokens = jax.ShapeDtypeStruct((shape.batch, shape.seq), jnp.int32)
 
-    cfg2 = cfg.with_(attn_impl=attn) if attn else cfg
+    cfg2 = cfg.with_(attn_impl=attn, attn_use_kernel=False) if attn else cfg
+    # attn_use_kernel=False: cost analysis must count the jnp emulation's
+    # unrolled chunk loop, not an opaque Pallas custom call
     if attn_bf16:
         cfg2 = cfg2.with_(attn_dtype="bf16")
     act = sharding.act_pspec(mesh, seq_shard=True) if act_sp else None
@@ -201,7 +205,9 @@ def _decode_cell(cfg: ModelConfig, shape: ShapeSpec, mesh: Mesh, *, unroll=False
     else:
         tok = jax.ShapeDtypeStruct((shape.batch,), jnp.int32)
 
-    cfg2 = cfg.with_(attn_impl=attn) if attn else cfg
+    cfg2 = cfg.with_(attn_impl=attn, attn_use_kernel=False) if attn else cfg
+    # attn_use_kernel=False: cost analysis must count the jnp emulation's
+    # unrolled chunk loop, not an opaque Pallas custom call
 
     def serve_step(params, token, cache):
         if not cfg.embed_inputs:
@@ -252,7 +258,9 @@ def _vggt_cell(cfg: ModelConfig, shape: ShapeSpec, mesh: Mesh, *, unroll=False,
     from repro.models import vggt as vggt_mod
 
     s_frames, batch = shape.seq, shape.batch
-    cfg2 = cfg.with_(attn_impl=attn) if attn else cfg
+    cfg2 = cfg.with_(attn_impl=attn, attn_use_kernel=False) if attn else cfg
+    # attn_use_kernel=False: cost analysis must count the jnp emulation's
+    # unrolled chunk loop, not an opaque Pallas custom call
     dp = sharding.batch_axes(mesh)
     import numpy as _np
 

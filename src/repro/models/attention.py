@@ -96,10 +96,13 @@ def init_gqa(key, cfg: ModelConfig, dtype=jnp.float32):
     return p
 
 
-def _sdpa(q, k, v, *, causal: bool, q_offset: int | jnp.ndarray = 0, kv_len: Optional[jnp.ndarray] = None):
+def _sdpa(q, k, v, *, causal: bool, q_offset: int | jnp.ndarray = 0, kv_len: Optional[jnp.ndarray] = None,
+          kv_mask: Optional[jnp.ndarray] = None):
     """Vanilla SDPA (materializes [Lq,Lk] scores) — ablation baseline.
 
-    q: [B,Lq,H,dh]; k/v: [B,Lk,Hkv,dh]. f32 softmax. GQA broadcast."""
+    q: [B,Lq,H,dh]; k/v: [B,Lk,Hkv,dh]. f32 softmax. GQA broadcast.
+    ``kv_mask``: [B, Lk] bool — False keys are excluded (padding-to-bucket
+    in the serving engine)."""
     b, lq, h, dh = q.shape
     lk, hkv = k.shape[1], k.shape[2]
     g = h // hkv
@@ -113,6 +116,8 @@ def _sdpa(q, k, v, *, causal: bool, q_offset: int | jnp.ndarray = 0, kv_len: Opt
         s = jnp.where(rows >= cols, s, -1e30)
     if kv_len is not None:  # mask unwritten cache slots
         s = jnp.where(jnp.arange(lk)[None, :] < kv_len, s, -1e30)
+    if kv_mask is not None:
+        s = jnp.where(kv_mask[:, None, None, None, :], s, -1e30)
     p = jax.nn.softmax(s, axis=-1)
     o = jnp.einsum("bhgqk,bkhd->bqhgd", p, v.astype(jnp.float32))
     return o.reshape(b, lq, h, v.shape[-1])
@@ -121,7 +126,8 @@ def _sdpa(q, k, v, *, causal: bool, q_offset: int | jnp.ndarray = 0, kv_len: Opt
 CHUNK = 1024
 
 
-def _sdpa_streamed(q, k, v, *, causal: bool, two_stage: bool = False, chunk: int = CHUNK, compute_dtype: str = 'f32'):
+def _sdpa_streamed(q, k, v, *, causal: bool, two_stage: bool = False, chunk: int = CHUNK, compute_dtype: str = 'f32',
+                   kv_mask: Optional[jnp.ndarray] = None):
     """Streaming attention over KV chunks — never materializes [Lq,Lk].
 
     ``two_stage=False``: FlashAttention-style single pass carrying
@@ -152,6 +158,8 @@ def _sdpa_streamed(q, k, v, *, causal: bool, two_stage: bool = False, chunk: int
             rows = jnp.arange(lq)[:, None] + (lk - lq)
             cols = c0 + jnp.arange(c1 - c0)[None, :]
             s = jnp.where(rows >= cols, s, -1e30)
+        if kv_mask is not None:
+            s = jnp.where(kv_mask[:, None, None, None, c0:c1], s, -1e30)
         return s
 
     def live(c0):  # causal: skip chunks fully above the diagonal
@@ -198,14 +206,48 @@ def _sdpa_streamed(q, k, v, *, causal: bool, two_stage: bool = False, chunk: int
     return jnp.moveaxis(o.reshape(b, hkv * g, lq, dv), 1, 2)
 
 
-def sdpa_dispatch(cfg, q, k, v, *, causal: bool, q_offset=0, kv_len=None):
+def sdpa_dispatch(cfg, q, k, v, *, causal: bool, q_offset=0, kv_len=None, kv_mask=None):
     impl = getattr(cfg, "attn_impl", "flash")
     if impl == "vanilla" or kv_len is not None:
         # cache-masked paths (prefill-into-cache / decode) use the masked
         # vanilla form; decode scores are [*,1,S] (linear, not quadratic)
-        return _sdpa(q, k, v, causal=causal, q_offset=q_offset, kv_len=kv_len)
+        return _sdpa(q, k, v, causal=causal, q_offset=q_offset, kv_len=kv_len, kv_mask=kv_mask)
     return _sdpa_streamed(q, k, v, causal=causal, two_stage=(impl == "two_stage"),
-                          compute_dtype=getattr(cfg, "attn_dtype", "f32"))
+                          compute_dtype=getattr(cfg, "attn_dtype", "f32"), kv_mask=kv_mask)
+
+
+def _two_stage_kernel_sdpa(q, k, v, *, causal: bool):
+    """Quantized fast path: the paper's INT8 two-stage Pallas kernel.
+
+    q: [B,Lq,H,dh]; k/v: [B,Lk,Hkv,dh] float (already per-head rotated by
+    the VersaQ flow).  Q/K are quantized per token, V per head, inside
+    ``kernels.ops.two_stage_mha``; GQA keys/values are broadcast to the
+    full head count (the kernel works on flat [B·H, L, dh]).
+
+    Returns None when no healthy tiling exists — the caller falls back to
+    the jnp emulation rather than driving Mosaic with degenerate tiles:
+    interpret mode (CPU) accepts any divisor ≥ 8; a real TPU lowering
+    additionally requires sublane-aligned (multiple-of-8) tiles."""
+    from repro.kernels import ops as kernel_ops
+    from repro.kernels import two_stage_attention as _tsa
+
+    lq, lk = q.shape[1], k.shape[1]
+    bq = kernel_ops.divisor_tile(lq, _tsa.T_Q)
+    bk = kernel_ops.divisor_tile(lk, _tsa.T_K)
+    bkv = kernel_ops.divisor_tile(lk, _tsa.T_V)
+    if min(bq, bk) < 8:
+        return None
+    if jax.default_backend() == "tpu" and any(t % 8 for t in (bq, bk, bkv)):
+        return None
+    h, hkv = q.shape[2], k.shape[2]
+    qh = jnp.moveaxis(q, 2, 1)
+    kh = jnp.moveaxis(k, 2, 1)
+    vh = jnp.moveaxis(v, 2, 1)
+    if hkv != h:
+        kh = jnp.repeat(kh, h // hkv, axis=1)
+        vh = jnp.repeat(vh, h // hkv, axis=1)
+    o = kernel_ops.two_stage_mha(qh, kh, vh, causal=causal, bq=bq, bk=bk, bkv=bkv)
+    return jnp.moveaxis(o, 1, 2)
 
 
 def gqa_attention(
@@ -217,6 +259,7 @@ def gqa_attention(
     positions: Optional[jnp.ndarray] = None,
     cache: Optional[KVCache] = None,
     mode: str = "full",
+    kv_mask: Optional[jnp.ndarray] = None,
 ) -> tuple[jnp.ndarray, Optional[KVCache]]:
     b, lq, _ = x.shape
     h, hkv, dh = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
@@ -240,9 +283,26 @@ def gqa_attention(
         # V arrives per-head-rotated from the offline W_v fusion.
 
     if mode == "full" or cache is None:
-        o = sdpa_dispatch(cfg, q, k, v, causal=causal)
+        o = None
+        if (
+            quantized
+            and getattr(cfg, "attn_impl", "flash") == "two_stage"
+            and getattr(cfg, "attn_use_kernel", True)
+            and kv_mask is None
+        ):
+            # W4A8 serving fast path: INT8 Q/K/V through the Pallas kernel
+            # (paper Alg. 1); masked (padded-bucket) calls and untileable
+            # lengths fall through to the jnp emulation, which supports
+            # kv_mask and any L.
+            o = _two_stage_kernel_sdpa(q, k, v, causal=causal)
+        if o is None:
+            o = sdpa_dispatch(cfg, q, k, v, causal=causal, kv_mask=kv_mask)
         new_cache = None
     else:
+        # padding masks are a full/serving-path feature; the cache paths
+        # below do not apply them — fail loudly rather than silently
+        # attending to padded keys
+        assert kv_mask is None, "kv_mask is not supported on prefill/decode cache paths"
         pos0 = cache.length
         kq, ks_ = _quant_tokens_like(k, cache.k.dtype)
         vq, vs_ = _quant_tokens_like(v, cache.v.dtype)

@@ -78,9 +78,9 @@ def init_params(cfg: ModelConfig, key, dtype=jnp.float32) -> dict:
     return params
 
 
-def _block(p, cfg: ModelConfig, x: jnp.ndarray) -> jnp.ndarray:
+def _block(p, cfg: ModelConfig, x: jnp.ndarray, kv_mask=None) -> jnp.ndarray:
     h = L.norm(p["attn_norm"], x)
-    out, _ = A.gqa_attention(p["attn"], cfg, h, causal=False, mode="full")
+    out, _ = A.gqa_attention(p["attn"], cfg, h, causal=False, mode="full", kv_mask=kv_mask)
     x = x + out * p["ls1"].astype(out.dtype) if "ls1" in p else x + out
     h = L.norm(p["ffn_norm"], x)
     out = F.dense_ffn(p["ffn"], cfg.act, h)
@@ -88,16 +88,52 @@ def _block(p, cfg: ModelConfig, x: jnp.ndarray) -> jnp.ndarray:
     return x
 
 
+def token_mask(
+    cfg: ModelConfig,
+    b: int,
+    s: int,
+    p_: int,
+    patch_mask: jnp.ndarray | None,
+    frame_mask: jnp.ndarray | None,
+) -> jnp.ndarray | None:
+    """[B, S, T] bool validity mask (special tokens valid iff their frame
+    is), or None when nothing is padded."""
+    if patch_mask is None and frame_mask is None:
+        return None
+    ns = cfg.n_special_tokens
+    pm = (
+        jnp.ones((b, s, p_), bool)
+        if patch_mask is None
+        else patch_mask.astype(bool)
+    )
+    fm = (
+        jnp.ones((b, s), bool)
+        if frame_mask is None
+        else frame_mask.astype(bool)
+    )
+    pm = pm & fm[:, :, None]
+    spec = jnp.broadcast_to(fm[:, :, None], (b, s, ns))
+    return jnp.concatenate([spec, pm], axis=2)
+
+
 def forward(
     cfg: ModelConfig,
     params: dict,
     patch_embeds: jnp.ndarray,
     *,
+    patch_mask: jnp.ndarray | None = None,
+    frame_mask: jnp.ndarray | None = None,
     scan_unroll: bool = False,
     act_sharding=None,
     remat: bool = False,
 ) -> dict:
     """patch_embeds: [B, S, P, d] (stub DINO features).
+
+    ``patch_mask`` [B, S, P] / ``frame_mask`` [B, S] (bool) mark padded
+    patches/frames added by the serving engine's shape buckets: masked
+    tokens are excluded from every attention softmax, so valid-token
+    outputs equal the unpadded forward; head outputs at masked positions
+    are garbage and must be sliced off by the caller.
 
     Returns dict with pose [B,S,9], depth [B,S,P], points [B,S,P,3],
     conf [B,S,P], tokens [B,S,T,d].
@@ -108,16 +144,19 @@ def forward(
     spec = jnp.broadcast_to(params["special_tokens"], (b, s, ns, d)).astype(x.dtype)
     x = jnp.concatenate([spec, x], axis=2)  # [B, S, T, d], T = ns + P
     t = ns + p_
+    tmask = token_mask(cfg, b, s, p_, patch_mask, frame_mask)
+    fmask = None if tmask is None else tmask.reshape(b * s, t)
+    gmask = None if tmask is None else tmask.reshape(b, s * t)
 
     def group_body(carry, gp):
         xc = carry  # [B, S, T, d]
         # frame-wise attention
         xf = xc.reshape(b * s, t, d)
-        xf = _block(gp["frame"], cfg, xf)
+        xf = _block(gp["frame"], cfg, xf, kv_mask=fmask)
         xc = xf.reshape(b, s, t, d)
         # global attention over all frames' tokens
         xg = xc.reshape(b, s * t, d)
-        xg = _block(gp["global"], cfg, xg)
+        xg = _block(gp["global"], cfg, xg, kv_mask=gmask)
         xc = xg.reshape(b, s, t, d)
         if act_sharding is not None:
             xc = jax.lax.with_sharding_constraint(xc, act_sharding)

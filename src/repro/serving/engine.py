@@ -7,7 +7,8 @@ serves batched requests.  With a mesh, both steps run under pjit with the
 DP/TP/SP shardings from parallel/sharding.py.
 
 VGGT serving (single feed-forward pass per scene batch) is
-``vggt_serve`` below.
+``vggt_serve`` below — a thin jit-cached convenience; the production
+bucketed/micro-batched engine is ``serving.vggt_engine.VGGTEngine``.
 """
 from __future__ import annotations
 
@@ -89,7 +90,16 @@ class Engine:
         return np.asarray(res)
 
 
+# per-config jitted VGGT forwards — vggt_serve used to rebuild (and
+# therefore re-trace) jax.jit on every call; the cache makes repeat calls
+# hit the compiled executable.  VGGTEngine supersedes this for real
+# traffic (shape buckets, micro-batching, quantized fast path, stats).
+_VGGT_FWD: dict[ModelConfig, Any] = {}
+
+
 def vggt_serve(cfg: ModelConfig, params: Any, scenes: jnp.ndarray) -> dict:
     """One feed-forward 3D reconstruction pass: [B, S, P, d] -> geometry."""
-    fn = jax.jit(functools.partial(vggt_mod.forward, cfg))
+    fn = _VGGT_FWD.get(cfg)
+    if fn is None:
+        fn = _VGGT_FWD[cfg] = jax.jit(functools.partial(vggt_mod.forward, cfg))
     return fn(params, scenes)

@@ -1,0 +1,27 @@
+"""The headline example (examples/serve_vggt.py) must run end-to-end on
+CPU — train a couple of steps, quantize, serve through both engines."""
+import os
+import subprocess
+import sys
+
+from tests.helpers import REPO
+
+
+def test_serve_vggt_example_smoke():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(REPO, "src")
+    env.setdefault("JAX_PLATFORMS", "cpu")
+    r = subprocess.run(
+        [
+            sys.executable,
+            os.path.join(REPO, "examples", "serve_vggt.py"),
+            "--steps", "2", "--frames", "2", "--patches", "16", "--requests", "1",
+        ],
+        capture_output=True,
+        text=True,
+        env=env,
+        timeout=480,
+    )
+    assert r.returncode == 0, f"example failed:\nSTDOUT:{r.stdout}\nSTDERR:{r.stderr}"
+    assert "quant-vs-fp rel err" in r.stdout
+    assert "per-bucket stats" in r.stdout

@@ -33,6 +33,9 @@ def _quant(q, k, v):
         (2, 256, 64, 64, 64, 128),
         (1, 256, 128, 64, 64, 256),
         (4, 128, 64, 128, 64, 128),
+        (1, 64, 64, 64, 64, 64),  # single tile in every grid dim
+        (2, 192, 64, 48, 32, 96),  # mixed non-pow2 tiles, bkv < lk
+        (1, 128, 32, 32, 64, 128),  # bq < bk, stage-2 mega-tile == lk
     ],
 )
 def test_exact_vs_int_oracle(causal, bh, l, dh, bq, bk, bkv):
@@ -78,6 +81,84 @@ def test_stats_match_flash_semantics():
         qv, qq.scale, kq.values, kq.scale, vv, vs, causal=False
     )
     np.testing.assert_allclose(got, want.astype(jnp.float32), rtol=3e-4, atol=3e-4)
+
+
+# ---------------------------------------------------------------------------
+# Model-path usage: non-causal global attention over VGGT token counts
+# (S·(n_special+P) is not 64-divisible), per-head v_scale, divisor tiles.
+# ---------------------------------------------------------------------------
+
+
+def test_model_path_non_divisible_length_divisor_tiles():
+    """ops.two_stage_mha on L = 4·(5+64) = 276 — the serving engine's
+    global-attention length — picks divisor tiles and stays close to fp."""
+    from repro.kernels.ops import divisor_tile
+
+    b, h, l, dh = 1, 2, 276, 32
+    assert divisor_tile(l, 64) == 46 and divisor_tile(l, 2048) == 276
+    q = jnp.asarray(RNG.normal(size=(b, h, l, dh)), jnp.float32)
+    k = jnp.asarray(RNG.normal(size=(b, h, l, dh)), jnp.float32)
+    v = jnp.asarray(RNG.normal(size=(b, h, l, dh)), jnp.float32)
+    got = ops.two_stage_mha(q, k, v, causal=False)
+    fp = ref.attention_ref(q, k, v, causal=False)
+    rel = float(jnp.linalg.norm(got - fp) / jnp.linalg.norm(fp))
+    assert rel < 0.05, rel
+
+
+def test_model_path_per_head_v_scale_applied():
+    """Heads with very different V magnitudes must each come back at their
+    own scale (the kernel's per-head v_scale multiply)."""
+    bh, l, dh = 2, 128, 64
+    q, k, v = _qkv(bh, l, dh)
+    v = v.at[1].mul(37.0)  # second head's V 37x larger
+    qq, kq, vv, vs = _quant(q, k, v)
+    assert float(vs[1, 0, 0]) > 30 * float(vs[0, 0, 0])
+    want = ref.two_stage_attention_ref(
+        qq.values, qq.scale, kq.values, kq.scale, vv, vs, causal=False
+    )
+    got = two_stage_attention(
+        qq.values, qq.scale.astype(jnp.float32), kq.values,
+        kq.scale.astype(jnp.float32), vv, vs.astype(jnp.float32),
+        causal=False, bq=64, bk=64, bkv=128, interpret=True,
+    )
+    np.testing.assert_allclose(got, want.astype(jnp.float32), rtol=3e-4, atol=3e-4)
+
+
+def test_quantized_model_routes_global_attention_through_kernel(monkeypatch):
+    """attn_impl="two_stage" + QuantLinear weights must actually hit the
+    Pallas kernel wrapper (the serving fast path), and the result must
+    stay close to the quantized model under flash attention."""
+    import jax
+
+    from repro.configs import get_config
+    from repro.core.model_quant import quantize_vggt
+    from repro.core.versaq import W4A8
+    from repro.kernels import ops as kernel_ops
+    from repro.models import vggt
+
+    cfg = get_config("vggt-1b-smoke").with_(
+        n_layers=1, d_model=64, n_heads=2, n_kv_heads=2, head_dim=32, d_ff=128,
+        layerscale_init=0.2,
+    )
+    params = vggt.init_params(cfg, jax.random.PRNGKey(0))
+    qp = quantize_vggt(cfg, params, W4A8)
+    x = jnp.asarray(RNG.normal(size=(1, 2, 11, cfg.d_model)) * 0.3, jnp.float32)
+
+    calls = []
+    real = kernel_ops.two_stage_mha
+
+    def spy(*a, **kw):
+        calls.append(a[0].shape)
+        return real(*a, **kw)
+
+    monkeypatch.setattr(kernel_ops, "two_stage_mha", spy)
+    got = vggt.forward(cfg.with_(attn_impl="two_stage"), qp, x)
+    # frame [B·S, T] and global [B, S·T] attention, once per AA pair
+    assert len(calls) == 2 * cfg.n_layers, calls
+    want = vggt.forward(cfg, qp, x)
+    rel = float(jnp.linalg.norm(got["points"] - want["points"])
+                / jnp.linalg.norm(want["points"]))
+    assert rel < 0.15, rel
 
 
 def test_vmem_model_two_stage_smaller_than_flash():
