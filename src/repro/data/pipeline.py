@@ -103,3 +103,22 @@ class ShardedLoader:
         return {
             k: v[self._row0 : self._row0 + self._rows] for k, v in b.items()
         }
+
+
+def mixed_len_prompts(
+    vocab_size: int, requests: int, prompt_len: int, seed: int = 0
+) -> list[np.ndarray]:
+    """Serving demo traffic: alternating full and 3/4-length prompts.
+
+    The short length is deliberately NOT a power of two, so it pads into
+    the full prompt's length bucket and exercises the serving engine's
+    masked (length-padded) graph variants alongside warm bucket reuse.
+    Deterministic per (seed, request index), like every generator here.
+    """
+    lens = [prompt_len if r % 2 == 0 else max(prompt_len * 3 // 4, 1)
+            for r in range(requests)]
+    return [
+        np.random.default_rng(np.random.SeedSequence([seed, r]))
+        .integers(0, vocab_size, (l,)).astype(np.int32)
+        for r, l in enumerate(lens)
+    ]

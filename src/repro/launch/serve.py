@@ -1,9 +1,10 @@
-"""Serving launcher: quantize + serve batched requests.
+"""Serving launcher: quantize + serve batched requests through the
+bucketed engines behind the async server loop.
 
-LM prefill/decode serving:
+LM prefill/decode serving (prompt-length + batch buckets, micro-batched):
 
   PYTHONPATH=src python -m repro.launch.serve --arch qwen3-14b-smoke \
-      --policy w4a8 --batch 4 --prompt-len 16 --gen 32
+      --policy w4a8 --requests 8 --prompt-len 16 --gen 32
 
 VGGT feed-forward serving (bucketed + micro-batched engine):
 
@@ -11,22 +12,34 @@ VGGT feed-forward serving (bucketed + micro-batched engine):
       --policy w4a8 --requests 6 --frames 4 --patches 64 --attn-impl two_stage
 """
 import argparse
+import re
 
 import jax
 import jax.numpy as jnp
 
 from repro.configs import get_config
-from repro.core.model_quant import quantize_lm
 from repro.core.versaq import QuantPolicy
-from repro.data.pipeline import scene_batch
-from repro.models import lm
+from repro.data.pipeline import mixed_len_prompts, scene_batch
 from repro.serving.engine import Engine
+from repro.serving.server import AsyncServer
+
+_POLICY_RE = re.compile(r"w(\d+)a(\d+)")
 
 
 def _policy(args) -> QuantPolicy | None:
-    if args.policy == "fp":
+    """Parse ``--policy``: 'fp' or 'w<bits>a<bits>' (w4a8, w4a16, ...).
+    Indexing the string by position broke on anything but single-digit
+    bit-widths — w4a16 used to mis-parse as a_bits=1."""
+    s = args.policy.strip().lower()
+    if s == "fp":
         return None
-    return QuantPolicy(int(args.policy[1]), int(args.policy[3]), args.method)
+    m = _POLICY_RE.fullmatch(s)
+    if m is None:
+        raise ValueError(
+            f"--policy {args.policy!r}: expected 'fp' or 'w<bits>a<bits>' "
+            f"(e.g. w4a8, w4a16)"
+        )
+    return QuantPolicy(int(m.group(1)), int(m.group(2)), args.method)
 
 
 def serve_vggt(cfg, args) -> None:
@@ -40,28 +53,59 @@ def serve_vggt(cfg, args) -> None:
         policy=_policy(args),
         attn_impl=args.attn_impl,
         max_batch=args.batch,
+        max_wait_s=args.max_wait_s,
     )
-    reqs = []
-    for r in range(args.requests):
-        scenes = jnp.asarray(
-            scene_batch(args.scenes, args.frames, args.patches, cfg.d_model, r)["patches"]
-        )
-        reqs.append(eng.enqueue(scenes))
-    eng.flush()
-    out = reqs[-1].result()
+    with AsyncServer(eng) as srv:
+        reqs = [
+            srv.submit(jnp.asarray(
+                scene_batch(args.scenes, args.frames, args.patches, cfg.d_model, r)["patches"]
+            ))
+            for r in range(args.requests)
+        ]
+        outs = [srv.result(r, timeout=600) for r in reqs]
+    out = outs[-1]
     print(f"served {len(reqs)} requests -> poses{tuple(out['pose'].shape)} "
           f"points{tuple(out['points'].shape)}")
+    print(eng.stats.format())
+
+
+def serve_lm(cfg, args) -> None:
+    from repro.models import lm
+
+    key = jax.random.PRNGKey(0)
+    params = lm.init_params(cfg, key)
+    eng = Engine(
+        cfg,
+        params,
+        policy=_policy(args),
+        attn_impl=args.attn_impl,
+        max_len=args.prompt_len + args.gen,
+        max_batch=args.batch,
+        max_wait_s=args.max_wait_s,
+    )
+    # mixed-length traffic (full + non-pow2 short prompts) exercises the
+    # masked length-padded bucket variants alongside warm bucket reuse
+    prompts = mixed_len_prompts(cfg.vocab_size, args.requests, args.prompt_len)
+    with AsyncServer(eng) as srv:
+        reqs = [srv.submit(p, args.gen) for p in prompts]
+        outs = [srv.result(r, timeout=600) for r in reqs]
+    print(f"served {len(outs)} requests -> {sum(o.shape[-1] for o in outs)} tokens")
+    print(f"prefill {eng.stats.prefill_s*1e3:.1f}ms  "
+          f"decode {eng.stats.decode_s*1e3:.1f}ms  "
+          f"({eng.stats.decode_tokens_per_s:.0f} decode tok/s)")
     print(eng.stats.format())
 
 
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="qwen3-14b-smoke")
-    ap.add_argument("--policy", default="w4a8", help="w4a8|w4a4|fp")
+    ap.add_argument("--policy", default="w4a8", help="w<bits>a<bits> (w4a8, w4a16, ...) | fp")
     ap.add_argument("--method", default="versaq", help="versaq|quarot|rtn")
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=16)
     ap.add_argument("--gen", type=int, default=32)
+    ap.add_argument("--max-wait-s", type=float, default=0.005,
+                    help="micro-batch deadline driven by the async loop")
     # vggt serving
     ap.add_argument("--requests", type=int, default=4)
     ap.add_argument("--scenes", type=int, default=2, help="scenes per request")
@@ -74,20 +118,8 @@ def main():
     cfg = get_config(args.arch)
     if cfg.vggt:
         serve_vggt(cfg, args)
-        return
-
-    key = jax.random.PRNGKey(0)
-    params = lm.init_params(cfg, key)
-    pol = _policy(args)
-    if pol is not None:
-        params = quantize_lm(cfg, params, pol)
-    eng = Engine(cfg, params, max_len=args.prompt_len + args.gen)
-    prompts = jax.random.randint(key, (args.batch, args.prompt_len), 0, cfg.vocab_size)
-    out = eng.generate(prompts, args.gen)
-    print("generated:", out.shape)
-    print(f"prefill {eng.stats.prefill_s*1e3:.1f}ms  "
-          f"decode {eng.stats.decode_s*1e3:.1f}ms  "
-          f"({eng.stats.tokens/max(eng.stats.decode_s,1e-9):.0f} tok/s)")
+    else:
+        serve_lm(cfg, args)
 
 
 if __name__ == "__main__":

@@ -42,6 +42,14 @@ class KVCache(NamedTuple):
     length: jnp.ndarray
 
 
+def _pad_mask(pad_lens: jnp.ndarray, width: int) -> jnp.ndarray:
+    """Key-slot validity for LEFT-padded rows: slot s of a row with
+    ``pad_lens[b]`` leading pad positions is valid iff ``s >= pad_lens[b]``
+    (serving pads prompts on the left so the last real token always sits
+    in the last prompt slot).  Shape [B, width] bool."""
+    return jnp.arange(width)[None, :] >= pad_lens[:, None]
+
+
 def _quant_tokens(x: jnp.ndarray) -> tuple[jnp.ndarray, jnp.ndarray]:
     amax = jnp.max(jnp.abs(x), axis=-1, keepdims=True)
     scale = jnp.maximum(amax, 1e-8) / 127.0
@@ -260,6 +268,7 @@ def gqa_attention(
     cache: Optional[KVCache] = None,
     mode: str = "full",
     kv_mask: Optional[jnp.ndarray] = None,
+    pad_lens: Optional[jnp.ndarray] = None,
 ) -> tuple[jnp.ndarray, Optional[KVCache]]:
     b, lq, _ = x.shape
     h, hkv, dh = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
@@ -282,7 +291,14 @@ def gqa_attention(
         k = head_wht(k)
         # V arrives per-head-rotated from the offline W_v fusion.
 
+    if pad_lens is not None:
+        # left-padded serving buckets: derive the key mask; exclusive with
+        # an explicit kv_mask (VGGT patch masking)
+        assert kv_mask is None, "pass either kv_mask or pad_lens, not both"
+
     if mode == "full" or cache is None:
+        if pad_lens is not None:
+            kv_mask = _pad_mask(pad_lens, lq)
         o = None
         if (
             quantized
@@ -299,9 +315,9 @@ def gqa_attention(
             o = sdpa_dispatch(cfg, q, k, v, causal=causal, kv_mask=kv_mask)
         new_cache = None
     else:
-        # padding masks are a full/serving-path feature; the cache paths
-        # below do not apply them — fail loudly rather than silently
-        # attending to padded keys
+        # explicit kv_mask is a full/serving-path feature; the cache paths
+        # below only support the pad_lens-derived left-pad mask — fail
+        # loudly rather than silently attending to padded keys
         assert kv_mask is None, "kv_mask is not supported on prefill/decode cache paths"
         pos0 = cache.length
         kq, ks_ = _quant_tokens_like(k, cache.k.dtype)
@@ -317,12 +333,16 @@ def gqa_attention(
             # starts the cache: earlier slots are empty) — O(L·chunk) mem
             kf = kq.astype(jnp.float32) * ks_
             vf = vq.astype(jnp.float32) * vs_
-            o = sdpa_dispatch(cfg, q, kf, vf, causal=causal)
+            mask = _pad_mask(pad_lens, lq) if pad_lens is not None else None
+            o = sdpa_dispatch(cfg, q, kf, vf, causal=causal, kv_mask=mask)
         else:
-            # decode: scores are [*, 1, S] — linear, masked vanilla path
+            # decode: scores are [*, 1, S] — linear, masked vanilla path;
+            # left-pad slots written during a bucketed prefill are masked
             kf = kc.astype(jnp.float32) * ksc
             vf = vc.astype(jnp.float32) * vsc
-            o = _sdpa(q, kf, vf, causal=causal, q_offset=pos0, kv_len=new_len)
+            mask = _pad_mask(pad_lens, kc.shape[1]) if pad_lens is not None else None
+            o = _sdpa(q, kf, vf, causal=causal, q_offset=pos0, kv_len=new_len,
+                      kv_mask=mask)
     o = o.reshape(b, lq, h * dh).astype(x.dtype)
     return L.dense(p["wo"], o), new_cache
 
@@ -355,6 +375,7 @@ def mla_attention(
     positions: Optional[jnp.ndarray] = None,
     cache: Optional[KVCache] = None,
     mode: str = "full",
+    pad_lens: Optional[jnp.ndarray] = None,
 ) -> tuple[jnp.ndarray, Optional[KVCache]]:
     b, lq, _ = x.shape
     h = cfg.n_heads
@@ -383,7 +404,8 @@ def mla_attention(
             [k_nope, jnp.broadcast_to(k_rope[:, :, None, :], (b, lq, h, dr))], axis=-1
         )
         # pad V head_dim to match q_eff's (dn+dr) contract-free output dim
-        o = sdpa_dispatch(cfg, q_eff, k_eff, v, causal=causal)
+        mask = _pad_mask(pad_lens, lq) if pad_lens is not None else None
+        o = sdpa_dispatch(cfg, q_eff, k_eff, v, causal=causal, kv_mask=mask)
         new_cache = None
         if mode == "prefill" and cache is not None:
             pos0 = cache.length
@@ -420,6 +442,8 @@ def mla_attention(
         rows = pos0 + jnp.arange(lq)[:, None]
         cols = jnp.arange(c_all.shape[1])[None, :]
         s = jnp.where((rows >= cols) & (cols < new_len), s, -1e30)
+        if pad_lens is not None:  # left-pad slots from a bucketed prefill
+            s = jnp.where(_pad_mask(pad_lens, c_all.shape[1])[:, None, None, :], s, -1e30)
         att = jax.nn.softmax(s, axis=-1)
         o_lora = jnp.einsum("bhqk,bkr->bqhr", att, c_all)
         wvu = p["w_v_up"]["w"] if isinstance(p["w_v_up"], dict) else None

@@ -166,6 +166,7 @@ def _apply_layer(
     positions,
     cache=None,
     mode: str = "full",
+    pad_lens=None,
 ):
     h = L.norm(lp["mixer_norm"], x)
     new_cache = cache
@@ -173,7 +174,8 @@ def _apply_layer(
         fn = A.mla_attention if cfg.mla else A.gqa_attention
         kv = cache if isinstance(cache, A.KVCache) else None
         out, kv_new = fn(
-            lp["mixer"], cfg, h, causal=True, positions=positions, cache=kv, mode=mode
+            lp["mixer"], cfg, h, causal=True, positions=positions, cache=kv, mode=mode,
+            pad_lens=pad_lens,
         )
         new_cache = kv_new if kv is not None else cache
     elif kind == "mamba":
@@ -234,6 +236,7 @@ def forward(
     remat: bool = False,
     act_sharding=None,
     scan_unroll: bool = False,
+    pad_lens: Optional[jnp.ndarray] = None,
 ) -> tuple[jnp.ndarray, Optional[dict]]:
     """Full/prefill/decode forward.
 
@@ -241,11 +244,26 @@ def forward(
     ``remat``: activation-checkpoint each scan group (training memory).
     ``act_sharding``: PartitionSpec constraint on the residual stream at
     group boundaries (DP batch + optional TP-SP sequence sharding).
+    ``pad_lens``: [B] int32 LEFT-pad count per row — the serving engine's
+    prompt-length buckets pad prompts on the left so the last real token
+    always sits in the last slot.  Per-row RoPE/sincos positions shift
+    back by the pad and pad key slots are masked out of every attention
+    softmax, so real-token outputs match the unpadded forward.
+    Attention-pattern models only: a recurrent mixer (mamba/rwkv) would
+    carry the pad tokens through its state.
     Returns (logits [B, L, V], new_cache).
     """
+    if pad_lens is not None and any(k != "attn" for k in cfg.pattern):
+        raise ValueError(
+            f"pad_lens needs an attention-only layer pattern, got {cfg.pattern}"
+        )
     pos0 = cache["pos"] if cache is not None else 0
     lq = inputs.shape[1]
     positions = (jnp.asarray(pos0) + jnp.arange(lq))[None, :]
+    if pad_lens is not None:
+        # logical positions: slot s of a row with p leading pads holds
+        # token s - p (clamped for the masked pad slots themselves)
+        positions = jnp.maximum(positions - pad_lens[:, None], 0)
     x = _embed_inputs(cfg, params, inputs, positions)
 
     new_prefix = []
@@ -253,7 +271,7 @@ def forward(
         c = cache["prefix"][i] if cache is not None else None
         x, c2 = _apply_layer(
             cfg, lp, mixer_kind(cfg, i), ffn_kind(cfg, i), x,
-            positions=positions, cache=c, mode=mode,
+            positions=positions, cache=c, mode=mode, pad_lens=pad_lens,
         )
         new_prefix.append(c2)
 
@@ -269,7 +287,7 @@ def forward(
             c = gc[f"l{j}"] if gc is not None else None
             xc, c2 = _apply_layer(
                 cfg, gp[f"l{j}"], kind, fk, xc,
-                positions=positions, cache=c, mode=mode,
+                positions=positions, cache=c, mode=mode, pad_lens=pad_lens,
             )
             new_gc[f"l{j}"] = c2
         if act_sharding is not None:
@@ -303,8 +321,10 @@ def forward(
     return logits, new_cache
 
 
-def decode_step(cfg: ModelConfig, params: dict, token, cache: dict):
-    """One-token decode: token [B] int32 (or [B, 1, d] embeddings)."""
+def decode_step(cfg: ModelConfig, params: dict, token, cache: dict,
+                pad_lens: Optional[jnp.ndarray] = None):
+    """One-token decode: token [B] int32 (or [B, 1, d] embeddings).
+    ``pad_lens``: [B] left-pad counts carried over from a bucketed prefill."""
     if not cfg.embed_inputs:
         token = token[:, None] if token.ndim == 1 else token
-    return forward(cfg, params, token, cache=cache, mode="decode")
+    return forward(cfg, params, token, cache=cache, mode="decode", pad_lens=pad_lens)

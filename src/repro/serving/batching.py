@@ -1,0 +1,336 @@
+"""Shared serving-batching machinery for the bucketed engines.
+
+Both production engines — the feed-forward VGGT engine
+(``serving.vggt_engine.VGGTEngine``) and the LM prefill/decode engine
+(``serving.engine.Engine``) — serve traffic the same way:
+
+* requests are quantized onto **shape buckets** so each distinct compiled
+  executable is paid for exactly once (``Bucket`` subclasses name the
+  bucketed axes; engines keep their own jit caches keyed on
+  ``(bucket, masked)``);
+* requests **coalesce** in per-group pending queues and are flushed into
+  one forward when a group fills ``max_batch`` items, when its oldest
+  request passes the ``max_wait_s`` deadline (``poll()``, driven by
+  ``serving.server.AsyncServer``), or explicitly (``MicroBatchQueue``);
+* every flush lands in per-bucket **stats** — compile count, p50/p95
+  latency, throughput (``BucketStats`` / ``ServeStats``).
+
+This module holds the engine-agnostic pieces; the engines own the model
+calls, padding/masking, and result splitting.
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+import threading
+import time
+from typing import Any, Callable, ClassVar, Hashable, Optional
+
+import numpy as np
+
+__all__ = [
+    "Bucket",
+    "BucketStats",
+    "ServeStats",
+    "PendingRequest",
+    "MicroBatchQueue",
+    "next_pow2",
+    "pick_bucket",
+    "LATENCY_WINDOW",
+]
+
+
+def next_pow2(n: int, floor: int = 16) -> int:
+    """Smallest power-of-two bucket size >= n (never below ``floor``)."""
+    p = floor
+    while p < n:
+        p *= 2
+    return p
+
+
+def pick_bucket(ladder: tuple[int, ...], n: int) -> int:
+    """Smallest ladder entry >= n; an oversize request gets an exact-size
+    bucket of its own (it can never coalesce anyway)."""
+    return next((x for x in ladder if x >= n), n)
+
+
+@dataclasses.dataclass(frozen=True)
+class Bucket:
+    """Base class for one compiled shape.
+
+    Subclasses declare int size fields in display order (batch first) and
+    set ``AXES`` to the matching single-letter axis labels, e.g. the VGGT
+    bucket ``(batch, frames, patches)`` with axes ``("b", "s", "p")``
+    prints as ``b4xs2xp24``.
+    """
+
+    AXES: ClassVar[tuple[str, ...]] = ()
+
+    def sizes(self) -> tuple[int, ...]:
+        """The bucket's axis sizes — the *numeric* sort key for stats
+        tables (lexical ``str`` sorting would put b16 before b2)."""
+        return tuple(getattr(self, f.name) for f in dataclasses.fields(self))
+
+    def __str__(self) -> str:
+        return "x".join(f"{a}{n}" for a, n in zip(self.AXES, self.sizes()))
+
+
+LATENCY_WINDOW = 1024  # percentile window; totals keep the full history
+
+
+@dataclasses.dataclass
+class BucketStats:
+    """Per-bucket serving statistics.
+
+    ``items`` counts the engine's unit of work (scenes for VGGT,
+    sequences for the LM engine); ``tokens`` is only used by token
+    engines and stays 0 elsewhere.
+    """
+
+    compiles: int = 0
+    calls: int = 0
+    items: int = 0  # real items served
+    padded_items: int = 0  # bucket slack (padding waste)
+    tokens: int = 0  # decoded/prefilled tokens (LM engines)
+    total_s: float = 0.0
+    # bounded: a long-running engine must not grow per-call state forever
+    latencies_s: collections.deque = dataclasses.field(
+        default_factory=lambda: collections.deque(maxlen=LATENCY_WINDOW)
+    )
+
+    def _pct(self, q: float) -> float:
+        return float(np.percentile(self.latencies_s, q)) if self.latencies_s else 0.0
+
+    @property
+    def p50_ms(self) -> float:
+        return self._pct(50) * 1e3
+
+    @property
+    def p95_ms(self) -> float:
+        return self._pct(95) * 1e3
+
+    @property
+    def items_per_s(self) -> float:
+        return self.items / self.total_s if self.total_s > 0 else 0.0
+
+    @property
+    def tokens_per_s(self) -> float:
+        return self.tokens / self.total_s if self.total_s > 0 else 0.0
+
+    # ---- VGGT serving API aliases -------------------------------------
+    @property
+    def scenes(self) -> int:
+        return self.items
+
+    @property
+    def padded_scenes(self) -> int:
+        return self.padded_items
+
+    @property
+    def scenes_per_s(self) -> float:
+        return self.items_per_s
+
+    def summary(self) -> dict:
+        out = {
+            "compiles": self.compiles,
+            "calls": self.calls,
+            "items": self.items,
+            "padded_items": self.padded_items,
+            "p50_ms": round(self.p50_ms, 3),
+            "p95_ms": round(self.p95_ms, 3),
+            "items_per_s": round(self.items_per_s, 2),
+        }
+        if self.tokens:
+            out["tokens"] = self.tokens
+            out["tokens_per_s"] = round(self.tokens_per_s, 2)
+        return out
+
+
+class ServeStats:
+    """Per-bucket serving statistics container: compiles, latency
+    percentiles, throughput.  ``unit`` names the item column in
+    ``format()`` ("scenes", "seqs", ...)."""
+
+    unit = "items"
+
+    def __init__(self):
+        self.buckets: dict[Bucket, BucketStats] = {}
+
+    def bucket(self, b: Bucket) -> BucketStats:
+        return self.buckets.setdefault(b, BucketStats())
+
+    @property
+    def compiles(self) -> int:
+        return sum(s.compiles for s in self.buckets.values())
+
+    @property
+    def calls(self) -> int:
+        return sum(s.calls for s in self.buckets.values())
+
+    @property
+    def items(self) -> int:
+        return sum(s.items for s in self.buckets.values())
+
+    @property
+    def tokens(self) -> int:
+        return sum(s.tokens for s in self.buckets.values())
+
+    @property
+    def scenes(self) -> int:  # VGGT serving API alias
+        return self.items
+
+    def _sorted(self) -> list[tuple[Bucket, BucketStats]]:
+        # numeric shape order — sorting on str(bucket) renders b16 before
+        # b2; mixed bucket kinds (prefill vs decode) group by type name
+        return sorted(
+            self.buckets.items(),
+            key=lambda kv: (type(kv[0]).__name__, kv[0].sizes()),
+        )
+
+    def summary(self) -> dict:
+        return {str(b): s.summary() for b, s in self._sorted()}
+
+    def format(self) -> str:
+        unit = self.unit
+        with_tokens = any(s.tokens for s in self.buckets.values())
+        hdr = (
+            f"{'bucket':>16} {'compiles':>8} {'calls':>6} {unit:>7} "
+            f"{'pad':>5} {'p50ms':>8} {'p95ms':>8} {unit + '/s':>9}"
+        )
+        if with_tokens:
+            hdr += f" {'tok/s':>9}"
+        lines = [hdr]
+        for b, s in self._sorted():
+            line = (
+                f"{str(b):>16} {s.compiles:>8} {s.calls:>6} {s.items:>7} "
+                f"{s.padded_items:>5} {s.p50_ms:>8.1f} {s.p95_ms:>8.1f} "
+                f"{s.items_per_s:>9.1f}"
+            )
+            if with_tokens:
+                line += f" {s.tokens_per_s:>9.1f}"
+            lines.append(line)
+        return "\n".join(lines)
+
+
+@dataclasses.dataclass
+class PendingRequest:
+    """Base class for a queued request; ``result()`` is available after
+    the engine flushes the request's micro-batch group.
+
+    Engines deliver through ``_deliver``/``_fail`` so a waiter attached
+    by the async server (``_event``) is woken exactly when the result
+    lands.
+    """
+
+    t_enqueue: float = dataclasses.field(
+        default_factory=time.perf_counter, kw_only=True
+    )
+    _result: Optional[Any] = dataclasses.field(default=None, kw_only=True)
+    _error: Optional[BaseException] = dataclasses.field(default=None, kw_only=True)
+    _event: Optional[threading.Event] = dataclasses.field(
+        default=None, kw_only=True, repr=False
+    )
+
+    @property
+    def ready(self) -> bool:
+        return self._result is not None or self._error is not None
+
+    def result(self) -> Any:
+        if self._error is not None:
+            raise RuntimeError("request's micro-batch failed") from self._error
+        if self._result is None:
+            raise RuntimeError("request not flushed yet — call engine.flush()")
+        return self._result
+
+    def _deliver(self, result: Any) -> None:
+        self._result = result
+        if self._event is not None:
+            self._event.set()
+
+    def _fail(self, err: BaseException) -> None:
+        self._error = err
+        if self._event is not None:
+            self._event.set()
+
+
+class MicroBatchQueue:
+    """Per-group pending-request queues with ``max_batch`` coalescing and
+    deadline flushing.
+
+    ``run(group_key, requests)`` is the engine's flush callback: it must
+    execute the coalesced requests and ``_deliver`` each one's result.
+    ``add`` auto-flushes a group the moment it reaches ``max_batch``
+    items; ``poll`` flushes groups whose oldest request has waited past
+    ``max_wait_s`` (the async server drives this on a timer).
+    """
+
+    def __init__(
+        self,
+        run: Callable[[Hashable, list[PendingRequest]], None],
+        max_batch: int,
+        max_wait_s: float,
+    ):
+        self._run = run
+        self.max_batch = max_batch
+        self.max_wait_s = max_wait_s
+        self._queues: dict[Hashable, list[tuple[PendingRequest, int]]] = {}
+
+    @property
+    def pending(self) -> int:
+        return sum(len(q) for q in self._queues.values())
+
+    def add(self, key: Hashable, req: PendingRequest, size: int) -> PendingRequest:
+        q = self._queues.setdefault(key, [])
+        q.append((req, size))
+        if size >= self.max_batch or sum(s for _, s in q) >= self.max_batch:
+            self.flush_group(key)
+        return req
+
+    def poll(self) -> int:
+        """Flush groups whose oldest request has waited past the deadline.
+        Returns the number of groups flushed."""
+        now = time.perf_counter()
+        due = [
+            key
+            for key, q in self._queues.items()
+            if q and now - q[0][0].t_enqueue >= self.max_wait_s
+        ]
+        for key in due:
+            self.flush_group(key)
+        return len(due)
+
+    def flush(self) -> None:
+        """Flush every pending group."""
+        for key in [k for k, q in self._queues.items() if q]:
+            self.flush_group(key)
+
+    def fail_pending(self, err: BaseException) -> int:
+        """Fail every queued request without running it (server shutdown
+        without drain) so waiters wake with an error instead of blocking
+        on a request that will never be served.  Returns the count."""
+        n = 0
+        for q in self._queues.values():
+            for r, _ in q:
+                r._fail(err)
+                n += 1
+            q.clear()
+        return n
+
+    def flush_group(self, key: Hashable) -> None:
+        q = self._queues.get(key, [])
+        while q:
+            # take requests up to max_batch items (an oversize request
+            # runs alone in its own exact-size bucket)
+            take, n = [], 0
+            while q and (not take or n + q[0][1] <= self.max_batch):
+                r, s = q.pop(0)
+                take.append(r)
+                n += s
+            try:
+                self._run(key, take)
+            except Exception as e:
+                # deliver the failure to every coalesced owner instead of
+                # leaving popped requests forever un-ready
+                for r in take:
+                    r._fail(e)
+                raise

@@ -1,10 +1,40 @@
-"""Serving engine: batched prefill + decode with quantized KV caches.
+"""Production LM serving engine: bucketed prefill/decode + micro-batched
+request queue, on the shared ``serving.batching`` machinery.
 
-The paper's deployment mode is feed-forward inference; for the LM-family
-pool this means a prefill/decode server.  The engine jits one prefill and
-one decode step per (batch, length) bucket, holds the int8 KV cache, and
-serves batched requests.  With a mesh, both steps run under pjit with the
-DP/TP/SP shardings from parallel/sharding.py.
+The paper's deployment mode is quantized serving under tight latency
+budgets; for the LM-family pool that means a prefill/decode server.  The
+old engine re-jit'd implicitly on every new ``(batch, prompt_len)`` and
+served one call at a time — exactly the recompile cliff the VGGT engine
+already solved.  This engine mirrors ``serving.vggt_engine.VGGTEngine``:
+
+* **Prompt-length buckets** — prompts are LEFT-padded up to a bucket
+  length (powers of two by default, or an explicit ``prompt_buckets``
+  ladder).  Left padding keeps the last real token in the last slot, so
+  one ``logits[:, -1]`` read works for every row; per-row RoPE positions
+  and an attention length mask (``lm.forward(pad_lens=...)``) make the
+  real-token outputs match the unpadded forward exactly.  Recurrent
+  mixers (mamba/rwkv patterns) would carry pad tokens through their
+  state, so those archs serve exact-length buckets instead (batch
+  bucketing still applies — batch rows are independent).
+
+* **Batch buckets for prefill and decode** — the coalesced batch pads up
+  to a bucket size; one jitted prefill executable per
+  ``(batch, prompt_len, masked)`` and one jitted decode step per
+  ``(batch, masked)``, each compile counted in per-bucket stats.
+
+* **Micro-batching** — ``enqueue(prompt, n_steps)`` parks requests in a
+  per-length-bucket queue; groups flush at ``max_batch`` sequences, on
+  the ``max_wait_s`` deadline (``poll``, driven by
+  ``serving.server.AsyncServer``), or explicitly (``flush``).  Decode
+  runs the group's max ``n_steps``; each request gets its own rows and
+  first ``n_steps`` tokens back.
+
+* **Quantized fast path** — ``policy=W4A8`` serves the
+  ``model_quant.quantize_lm`` weights (per-token A8, int8 KV cache).
+
+``generate`` keeps the old synchronous API on the same bucketed
+executables (and is the only entry with sampling — per-request PRNG keys
+do not coalesce).
 
 VGGT serving (single feed-forward pass per scene batch) is
 ``vggt_serve`` below — a thin jit-cached convenience; the production
@@ -22,38 +52,257 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ModelConfig
+from repro.core.model_quant import quantize_lm
+from repro.core.versaq import QuantPolicy
 from repro.models import lm, vggt as vggt_mod
+from repro.serving import batching
+from repro.serving.batching import next_pow2, pick_bucket
+
+__all__ = [
+    "PrefillBucket",
+    "DecodeBucket",
+    "LMServeStats",
+    "LMRequest",
+    "Engine",
+    "vggt_serve",
+]
+
+DEFAULT_BATCH_BUCKETS = (1, 2, 4, 8)
+MIN_PROMPT_BUCKET = 8
+
+
+@dataclasses.dataclass(frozen=True)
+class PrefillBucket(batching.Bucket):
+    """One compiled prefill shape: coalesced batch (padded up) × bucketed
+    prompt length."""
+
+    batch: int
+    prompt_len: int
+
+    AXES = ("b", "l")
+
+    def __str__(self):
+        return f"prefill:b{self.batch}xl{self.prompt_len}"
+
+
+@dataclasses.dataclass(frozen=True)
+class DecodeBucket(batching.Bucket):
+    """One compiled decode step: batch only (the KV cache is always
+    ``max_len`` wide, so decode shape is length-independent)."""
+
+    batch: int
+
+    AXES = ("b",)
+
+    def __str__(self):
+        return f"decode:b{self.batch}"
+
+
+class LMServeStats(batching.ServeStats):
+    """Per-bucket LM serving stats.  Prefill buckets count sequences and
+    prompt tokens; decode buckets count per-step calls and *decode*
+    tokens — ``batch × (n_steps - 1)``, because the first generated token
+    comes out of prefill, not a decode step (counting it inflated
+    tokens/s)."""
+
+    unit = "seqs"
+
+    def _sum(self, kind, attr) -> float:
+        return sum(getattr(s, attr) for b, s in self.buckets.items()
+                   if isinstance(b, kind))
+
+    @property
+    def prefill_s(self) -> float:
+        return self._sum(PrefillBucket, "total_s")
+
+    @property
+    def decode_s(self) -> float:
+        return self._sum(DecodeBucket, "total_s")
+
+    @property
+    def prefill_tokens(self) -> int:
+        return int(self._sum(PrefillBucket, "tokens"))
+
+    @property
+    def decode_tokens(self) -> int:
+        return int(self._sum(DecodeBucket, "tokens"))
+
+    @property
+    def decode_tokens_per_s(self) -> float:
+        return self.decode_tokens / self.decode_s if self.decode_s > 0 else 0.0
 
 
 @dataclasses.dataclass
-class ServeStats:
-    prefill_s: float = 0.0
-    decode_s: float = 0.0
-    tokens: int = 0
+class LMRequest(batching.PendingRequest):
+    """A queued generation request; ``result()`` returns the generated
+    ids — [n_steps] for a single prompt, [b, n_steps] for a batch."""
+
+    prompts: jnp.ndarray  # [b, l] int32
+    n_steps: int
+    squeeze: bool = False  # enqueued as a single [l] prompt
 
 
 class Engine:
+    """Bucketed, micro-batched LM prefill/decode serving (see module
+    docstring).
+
+    Synchronous API (single-threaded, deterministic — the async server
+    loop drives ``enqueue``/``poll``):
+
+        eng = Engine(cfg, params, policy=W4A8, max_len=2048)
+        ids = eng.generate(prompts, n_steps=32)        # one call
+        reqs = [eng.enqueue(p, 32) for p in prompts]   # micro-batched
+        eng.flush()
+        outs = [r.result() for r in reqs]
+    """
+
     def __init__(
         self,
         cfg: ModelConfig,
         params: Any,
         *,
         max_len: int = 2048,
+        policy: Optional[QuantPolicy] = None,
+        attn_impl: Optional[str] = None,
+        prompt_buckets: Optional[tuple[int, ...]] = None,
+        batch_buckets: tuple[int, ...] = DEFAULT_BATCH_BUCKETS,
+        max_batch: Optional[int] = None,
+        max_wait_s: float = 0.005,
         donate_cache: bool = True,
     ):
-        self.cfg = cfg
-        self.params = params
+        if attn_impl is not None and attn_impl not in ("flash", "two_stage", "vanilla"):
+            raise ValueError(
+                f"attn_impl={attn_impl!r}: expected flash | two_stage | vanilla"
+            )
+        self.cfg = cfg.with_(attn_impl=attn_impl) if attn_impl is not None else cfg
+        cfg = self.cfg
+        self.policy = policy
+        self.params = quantize_lm(cfg, params, policy) if policy is not None else params
         self.max_len = max_len
-        self._prefill = jax.jit(
-            functools.partial(lm.forward, cfg, mode="prefill"),
-            static_argnames=(),
+        self.batch_buckets = tuple(sorted(batch_buckets))
+        self.prompt_buckets = tuple(sorted(prompt_buckets)) if prompt_buckets else None
+        self.max_batch = max_batch if max_batch is not None else self.batch_buckets[-1]
+        # prompt-length padding rides on the attention length mask;
+        # recurrent mixers would carry pad tokens through their state, so
+        # hybrid/rwkv archs get exact-length buckets (batch bucketing only)
+        self.pad_prompts = all(k == "attn" for k in cfg.pattern)
+        self.donate_cache = donate_cache
+        self.stats = LMServeStats()
+        self._fns: dict[tuple[batching.Bucket, bool], Any] = {}
+        self._queue = batching.MicroBatchQueue(self._run, self.max_batch, max_wait_s)
+
+    # ---- buckets ---------------------------------------------------------
+
+    def batch_bucket(self, b: int) -> int:
+        return pick_bucket(self.batch_buckets, b)
+
+    def prompt_bucket(self, l: int) -> int:
+        """Bucketed prompt length (an oversize prompt runs exact)."""
+        if not self.pad_prompts:
+            return l
+        if self.prompt_buckets is not None:
+            return pick_bucket(self.prompt_buckets, l)
+        # never bucket BELOW the real length: an over-long prompt must
+        # reach _check_fits with its true length and fail loudly there
+        return max(min(next_pow2(l, floor=MIN_PROMPT_BUCKET), self.max_len), l)
+
+    def _bucket_len(self, l: int, n_steps: int) -> int:
+        """Bucketed prompt length for a request; falls back to the exact
+        length when only the padding would overflow the KV cache."""
+        L = self.prompt_bucket(l)
+        if L + n_steps - 1 > self.max_len and l + n_steps - 1 <= self.max_len:
+            L = l
+        return L
+
+    def _check_fits(self, real_len: int, bucket_len: int, n_steps: int) -> None:
+        # jax.lax.dynamic_update_slice CLAMPS an out-of-range start index,
+        # so an over-long generation would silently overwrite earlier KV
+        # slots (corrupting every later token) instead of failing — reject
+        # it before prefill.  Prefill fills bucket_len slots and each of
+        # the n_steps-1 decode steps appends one more.
+        if n_steps < 1:
+            raise ValueError(f"n_steps must be >= 1, got {n_steps}")
+        need = bucket_len + n_steps - 1
+        if need > self.max_len:
+            bucketed = (f" (bucketed to {bucket_len})"
+                        if bucket_len != real_len else "")
+            raise ValueError(
+                f"prompt of length {real_len}{bucketed} + n_steps {n_steps} "
+                f"- 1 = {need} exceeds the KV cache (max_len={self.max_len}); "
+                f"the cache write would clamp and overwrite earlier slots"
+            )
+
+    def _bucket_fn(self, bucket: batching.Bucket, masked: bool, body, **jit_kwargs):
+        """The bucket's jitted executable; cache miss == one compile.
+        ``masked`` (length-padded) and unmasked calls are separate graphs
+        — both counted, mirroring the VGGT engine.  ``body(p, x, cache,
+        pad_lens)`` is the model call; the unmasked graph omits the
+        ``pad_lens`` argument entirely."""
+        fn = self._fns.get((bucket, masked))
+        if fn is None:
+            self.stats.bucket(bucket).compiles += 1
+            if masked:
+                fn = jax.jit(body, **jit_kwargs)
+            else:
+                fn = jax.jit(lambda p, x, cache: body(p, x, cache, None), **jit_kwargs)
+            self._fns[(bucket, masked)] = fn
+        return fn
+
+    def _prefill_fn(self, bucket: PrefillBucket, masked: bool):
+        return self._bucket_fn(
+            bucket, masked,
+            lambda p, toks, cache, pad: lm.forward(
+                self.cfg, p, toks, cache=cache, mode="prefill", pad_lens=pad
+            ),
         )
-        dargs = dict(donate_argnums=(2,)) if donate_cache else {}
-        self._decode = jax.jit(
-            lambda params, tok, cache: lm.decode_step(cfg, params, tok, cache),
+
+    def _decode_fn(self, bucket: DecodeBucket, masked: bool):
+        dargs = dict(donate_argnums=(2,)) if self.donate_cache else {}
+        return self._bucket_fn(
+            bucket, masked,
+            lambda p, tok, cache, pad: lm.decode_step(
+                self.cfg, p, tok, cache, pad_lens=pad
+            ),
             **dargs,
         )
-        self.stats = ServeStats()
+
+    # ---- request path ----------------------------------------------------
+
+    def enqueue(self, prompts: jnp.ndarray, n_steps: int) -> LMRequest:
+        """Queue a prompt ([l] int) or same-length prompt batch ([b, l]);
+        greedy decoding (sampling needs per-request keys, which do not
+        coalesce — use ``generate``).  Auto-flushes the length group the
+        moment it reaches ``max_batch`` sequences."""
+        prompts = jnp.asarray(prompts)
+        squeeze = prompts.ndim == 1
+        if squeeze:
+            prompts = prompts[None, :]
+        if prompts.ndim != 2:
+            raise ValueError(
+                f"prompts must be [l] or [b, l] token ids, got {prompts.shape}"
+                + (" (embed_inputs stub frontends are not servable: decode "
+                   "feeds generated ids back, not embeddings)"
+                   if self.cfg.embed_inputs else "")
+            )
+        prompts = prompts.astype(jnp.int32)
+        key = self._bucket_len(prompts.shape[1], n_steps)
+        self._check_fits(prompts.shape[1], key, n_steps)
+        req = LMRequest(prompts=prompts, n_steps=n_steps, squeeze=squeeze)
+        self._queue.add(key, req, prompts.shape[0])
+        return req
+
+    def poll(self) -> int:
+        """Flush groups whose oldest request has waited past the deadline.
+        Returns the number of groups flushed."""
+        return self._queue.poll()
+
+    def flush(self) -> None:
+        """Flush every pending group."""
+        self._queue.flush()
+
+    def abort(self, err: Optional[BaseException] = None) -> int:
+        """Fail every queued request without serving it (shutdown path)."""
+        return self._queue.fail_pending(err or RuntimeError("engine aborted"))
 
     def generate(
         self,
@@ -63,31 +312,119 @@ class Engine:
         greedy: bool = True,
         key: Optional[jax.Array] = None,
     ) -> np.ndarray:
-        """prompts: [B, L] int32 (or [B, L, d] embeddings). Returns
-        generated ids [B, n_steps]."""
-        b = prompts.shape[0]
-        cache = lm.init_cache(self.cfg, b, self.max_len)
+        """prompts: [B, L] int32.  Returns generated ids [B, n_steps].
+        Synchronous; runs alone (no coalescing) but on the same bucketed
+        executables, so repeat traffic stays warm."""
+        if not greedy and key is None:
+            # the old engine silently fell back to greedy here — a wrong
+            # answer, not an error.  Sampling needs an explicit key.
+            raise ValueError("generate(greedy=False) requires an explicit PRNG key")
+        prompts = jnp.asarray(prompts).astype(jnp.int32)
+        if prompts.ndim != 2:
+            raise ValueError(f"prompts must be [B, L] ints, got {prompts.shape}")
+        L = self._bucket_len(prompts.shape[1], n_steps)
+        self._check_fits(prompts.shape[1], L, n_steps)
+        req = LMRequest(prompts=prompts, n_steps=n_steps)
+        return self._execute(L, [req], greedy=greedy, key=key)
+
+    # ---- micro-batch execution -------------------------------------------
+
+    def _run(self, key: int, reqs: list[LMRequest]) -> None:
+        self._execute(key, reqs, greedy=True, key=None)
+
+    def _execute(
+        self,
+        L: int,
+        reqs: list[LMRequest],
+        *,
+        greedy: bool,
+        key: Optional[jax.Array],
+    ) -> np.ndarray:
+        n_real = sum(r.prompts.shape[0] for r in reqs)
+        bb = self.batch_bucket(n_real)
+        n_steps = max(r.n_steps for r in reqs)
+
+        parts, pads, n_prompt_toks = [], [], 0
+        for r in reqs:
+            x = r.prompts
+            pad = L - x.shape[1]
+            if pad:
+                x = jnp.pad(x, ((0, 0), (pad, 0)))  # LEFT pad (see module doc)
+            parts.append(x)
+            pads += [pad] * x.shape[0]
+            n_prompt_toks += r.prompts.shape[0] * r.prompts.shape[1]
+        # only real length padding needs the masked graph — batch-slack
+        # rows are garbage-in/garbage-out and get sliced off regardless
+        masked = any(p > 0 for p in pads)
+        if n_real < bb:
+            parts.append(jnp.zeros((bb - n_real, L), jnp.int32))
+            pads += [L] * (bb - n_real)
+        toks = jnp.concatenate(parts, axis=0)
+        pad_lens = jnp.asarray(pads, jnp.int32)
+
+        pbucket, dbucket = PrefillBucket(bb, L), DecodeBucket(bb)
+        pfn = self._prefill_fn(pbucket, masked)
+        cache = lm.init_cache(self.cfg, bb, self.max_len)
         t0 = time.perf_counter()
-        logits, cache = self._prefill(self.params, prompts, cache=cache)
+        if masked:
+            logits, cache = pfn(self.params, toks, cache, pad_lens)
+        else:
+            logits, cache = pfn(self.params, toks, cache)
         logits.block_until_ready()
-        self.stats.prefill_s += time.perf_counter() - t0
-        tok = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
+        dt = time.perf_counter() - t0
+        ps = self.stats.bucket(pbucket)
+        ps.calls += 1
+        ps.items += n_real
+        ps.padded_items += bb - n_real
+        ps.tokens += n_prompt_toks
+        ps.total_s += dt
+        ps.latencies_s.append(dt)
+
+        lg = logits[:, -1]
+        if greedy:
+            tok = jnp.argmax(lg, axis=-1).astype(jnp.int32)
+        else:  # the first generated token comes from prefill — sample it too
+            key, sub = jax.random.split(key)
+            tok = jax.random.categorical(sub, lg).astype(jnp.int32)
         out = [tok]
-        t0 = time.perf_counter()
-        for i in range(n_steps - 1):
-            logits, cache = self._decode(self.params, tok, cache)
-            lg = logits[:, 0]
-            if greedy or key is None:
-                tok = jnp.argmax(lg, axis=-1).astype(jnp.int32)
-            else:
-                key, sub = jax.random.split(key)
-                tok = jax.random.categorical(sub, lg).astype(jnp.int32)
-            out.append(tok)
-        res = jnp.stack(out, axis=1)
-        res.block_until_ready()
-        self.stats.decode_s += time.perf_counter() - t0
-        self.stats.tokens += b * n_steps
-        return np.asarray(res)
+        if n_steps > 1:
+            dfn = self._decode_fn(dbucket, masked)
+            t0 = time.perf_counter()
+            for _ in range(n_steps - 1):
+                if masked:
+                    logits, cache = dfn(self.params, tok, cache, pad_lens)
+                else:
+                    logits, cache = dfn(self.params, tok, cache)
+                lg = logits[:, 0]
+                if greedy:
+                    tok = jnp.argmax(lg, axis=-1).astype(jnp.int32)
+                else:
+                    key, sub = jax.random.split(key)
+                    tok = jax.random.categorical(sub, lg).astype(jnp.int32)
+                out.append(tok)
+            res = jnp.stack(out, axis=1)
+            res.block_until_ready()
+            dt = time.perf_counter() - t0
+            ds = self.stats.bucket(dbucket)
+            ds.calls += n_steps - 1
+            ds.items += n_real
+            # the first token comes from prefill — decode produced only
+            # n_steps-1 of them (counting all n_steps inflated tokens/s)
+            ds.tokens += n_real * (n_steps - 1)
+            ds.total_s += dt
+            ds.latencies_s.append(dt / (n_steps - 1))
+        else:
+            res = jnp.stack(out, axis=1)
+            res.block_until_ready()
+
+        arr = np.asarray(res)
+        i0 = 0
+        for r in reqs:
+            b = r.prompts.shape[0]
+            ids = arr[i0 : i0 + b, : r.n_steps]
+            r._deliver(ids[0] if r.squeeze else ids)
+            i0 += b
+        return arr[:n_real]
 
 
 # per-config jitted VGGT forwards — vggt_serve used to rebuild (and

@@ -1,0 +1,147 @@
+"""Async serving loop over the bucketed engines.
+
+Both production engines (``serving.engine.Engine`` for LM prefill/decode
+and ``serving.vggt_engine.VGGTEngine`` for feed-forward scenes) are
+deliberately single-threaded and deterministic: ``enqueue`` coalesces,
+``poll`` applies the ``max_wait_s`` deadline, ``flush`` drains.  The
+``AsyncServer`` wraps either one with the production driver the ROADMAP
+calls for:
+
+* a **background thread** calls ``engine.poll()`` on a timer, so a
+  half-full micro-batch group is flushed the moment its oldest request
+  passes the deadline — callers never have to drive the queue;
+* a thread-safe **submit/await interface**: ``submit(...)`` forwards to
+  ``engine.enqueue`` under the engine lock and attaches a waiter event;
+  ``result(req)`` blocks until the loop (or an auto-flush on a later
+  submit) delivers.
+
+All engine work runs under one lock — the engines are the unit of
+serialization (one device stream), the server is the unit of liveness.
+
+    eng = Engine(cfg, params, max_wait_s=0.002)
+    with AsyncServer(eng) as srv:
+        reqs = [srv.submit(p, n_steps=32) for p in prompts]
+        outs = [srv.result(r, timeout=60) for r in reqs]
+"""
+from __future__ import annotations
+
+import threading
+from typing import Any, Optional
+
+from repro.serving.batching import PendingRequest
+
+__all__ = ["AsyncServer"]
+
+
+class AsyncServer:
+    """Background deadline-flush loop + thread-safe submit/await over one
+    bucketed engine (LM or VGGT)."""
+
+    def __init__(self, engine: Any, poll_interval_s: Optional[float] = None):
+        self.engine = engine
+        if poll_interval_s is None:
+            # pace the loop off the engine's own deadline: ~4 polls per
+            # max_wait_s window bounds flush lateness at 25% of the
+            # deadline without spinning a 1 kHz wakeup on an idle server
+            wait = getattr(engine, "max_wait_s", 0.004)
+            poll_interval_s = min(max(wait / 4, 0.001), 0.05)
+        self.poll_interval_s = poll_interval_s
+        self._lock = threading.Lock()
+        self._stop = threading.Event()
+        self._thread: threading.Thread | None = None
+
+    # ---- lifecycle -------------------------------------------------------
+
+    @property
+    def running(self) -> bool:
+        return self._thread is not None and self._thread.is_alive()
+
+    def start(self) -> "AsyncServer":
+        if not self.running:
+            # each loop gets its own stop event: if a previous stop()'s
+            # join timed out (poll stuck in a long compile), the old
+            # thread still holds a set event and exits on its next check
+            # instead of being resurrected by a clear()
+            self._stop = stop = threading.Event()
+            self._thread = threading.Thread(
+                target=self._loop, args=(stop,), name="serve-loop", daemon=True
+            )
+            self._thread.start()
+        return self
+
+    def stop(self, drain: bool = True) -> None:
+        """Stop the loop.  With ``drain`` (default) flush every pending
+        group first; without it, queued requests are *failed* so their
+        waiters wake with an error instead of blocking forever."""
+        try:
+            with self._lock:
+                if drain:
+                    try:
+                        self.engine.flush()
+                    except BaseException:
+                        # one failing group must not strand the others:
+                        # flush() stops at the first error, so fail every
+                        # still-queued request (their waiters wake with an
+                        # error, not a full timeout), then propagate
+                        self.engine.abort(RuntimeError("server drain failed"))
+                        raise
+                else:
+                    self.engine.abort(RuntimeError("server stopped before drain"))
+        finally:
+            # a failing drain flush (micro-batch error re-raised after
+            # _fail-ing its owners) must still shut the loop down
+            self._stop.set()
+            if self._thread is not None:
+                self._thread.join(timeout=5.0)
+                if not self._thread.is_alive():
+                    self._thread = None
+                # else: the loop is stuck inside a long engine call; it
+                # will see its (set) stop event and exit on return —
+                # `running` stays True until then so start() can't
+                # double-spawn
+
+    def __enter__(self) -> "AsyncServer":
+        return self.start()
+
+    def __exit__(self, *exc) -> None:
+        self.stop(drain=exc == (None, None, None))
+
+    # ---- submit/await ----------------------------------------------------
+
+    def submit(self, *args, **kwargs) -> PendingRequest:
+        """Thread-safe ``engine.enqueue(...)``; returns the pending
+        request with a waiter attached (an auto-flush may already have
+        delivered it)."""
+        with self._lock:
+            req = self.engine.enqueue(*args, **kwargs)
+            if not req.ready:
+                # attached under the lock so the loop's delivery can never
+                # race past an unobserved event
+                req._event = threading.Event()
+        return req
+
+    def result(self, req: PendingRequest, timeout: float | None = None) -> Any:
+        """Block until the request's micro-batch is flushed; raises
+        ``TimeoutError`` after ``timeout`` seconds."""
+        if not req.ready:
+            if req._event is None or not req._event.wait(timeout):
+                if not req.ready:  # re-check: delivery may have just landed
+                    raise TimeoutError(
+                        f"request not served within {timeout}s (server "
+                        f"{'running' if self.running else 'stopped'})"
+                    )
+        return req.result()
+
+    # ---- loop ------------------------------------------------------------
+
+    def _loop(self, stop: threading.Event) -> None:
+        while not stop.is_set():
+            try:
+                with self._lock:
+                    self.engine.poll()
+            except Exception:
+                # flush_group already _fail-ed every owner of the broken
+                # micro-batch; the loop must survive to keep serving the
+                # other groups' deadlines
+                pass
+            stop.wait(self.poll_interval_s)

@@ -14,8 +14,9 @@ this engine is the production version:
   softmax via ``vggt.forward(patch_mask=...)``) which lets scenes with
   different patch counts share buckets and micro-batches.
 
-* **Micro-batching** — ``enqueue`` parks requests in a per-group queue;
-  a group is flushed into one forward as soon as it fills ``max_batch``
+* **Micro-batching** — ``enqueue`` parks requests in a per-group queue
+  (``serving.batching.MicroBatchQueue``, shared with the LM engine); a
+  group is flushed into one forward as soon as it fills ``max_batch``
   scenes, when its oldest request exceeds ``max_wait_s`` (``poll``), or
   explicitly (``flush``).  Results are split back per request, with
   padding rows/patches sliced off.
@@ -27,11 +28,10 @@ this engine is the production version:
   per-token Q/K scales.
 
 * **Stats** — per-bucket compile count, p50/p95 latency and scenes/s via
-  :class:`VGGTServeStats`.
+  :class:`VGGTServeStats` (the shared ``serving.batching`` stats type).
 """
 from __future__ import annotations
 
-import collections
 import dataclasses
 import functools
 import time
@@ -39,146 +39,53 @@ from typing import Any, Optional
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.configs.base import ModelConfig
 from repro.core.model_quant import quantize_vggt
 from repro.core.versaq import QuantPolicy
 from repro.models import vggt as vggt_mod
+from repro.serving import batching
+from repro.serving.batching import BucketStats, next_pow2, pick_bucket
 
 __all__ = ["Bucket", "BucketStats", "VGGTServeStats", "PendingRequest", "VGGTEngine"]
 
 DEFAULT_BATCH_BUCKETS = (1, 2, 4, 8, 16)
 
 
-def _next_pow2(n: int, floor: int = 16) -> int:
-    p = floor
-    while p < n:
-        p *= 2
-    return p
-
-
 @dataclasses.dataclass(frozen=True)
-class Bucket:
+class Bucket(batching.Bucket):
     """One compiled shape: batch is padded up, frames exact, patches
-    padded only with ``pad_patches``."""
+    padded only with ``pad_patches``.  Prints as ``b4xs2xp24``."""
 
     batch: int
     frames: int
     patches: int
 
-    def __str__(self):
-        return f"b{self.batch}xs{self.frames}xp{self.patches}"
+    AXES = ("b", "s", "p")
 
 
-LATENCY_WINDOW = 1024  # percentile window; totals keep the full history
+class VGGTServeStats(batching.ServeStats):
+    """Per-bucket VGGT serving statistics; ``items`` == scenes (the
+    ``scenes``/``padded_scenes`` aliases on the shared type keep the
+    feed-forward vocabulary)."""
 
-
-@dataclasses.dataclass
-class BucketStats:
-    compiles: int = 0
-    calls: int = 0
-    scenes: int = 0  # real scenes served
-    padded_scenes: int = 0  # bucket slack (padding waste)
-    total_s: float = 0.0
-    # bounded: a long-running engine must not grow per-call state forever
-    latencies_s: collections.deque = dataclasses.field(
-        default_factory=lambda: collections.deque(maxlen=LATENCY_WINDOW)
-    )
-
-    def _pct(self, q: float) -> float:
-        return float(np.percentile(self.latencies_s, q)) if self.latencies_s else 0.0
-
-    @property
-    def p50_ms(self) -> float:
-        return self._pct(50) * 1e3
-
-    @property
-    def p95_ms(self) -> float:
-        return self._pct(95) * 1e3
-
-    @property
-    def scenes_per_s(self) -> float:
-        return self.scenes / self.total_s if self.total_s > 0 else 0.0
-
-    def summary(self) -> dict:
-        return {
-            "compiles": self.compiles,
-            "calls": self.calls,
-            "scenes": self.scenes,
-            "padded_scenes": self.padded_scenes,
-            "p50_ms": round(self.p50_ms, 3),
-            "p95_ms": round(self.p95_ms, 3),
-            "scenes_per_s": round(self.scenes_per_s, 2),
-        }
-
-
-class VGGTServeStats:
-    """Per-bucket serving statistics: compiles, latency percentiles,
-    throughput.  (Deliberately a separate type from the LM engine's
-    flat ``serving.engine.ServeStats`` — feed-forward scene serving has
-    no prefill/decode split.)"""
-
-    def __init__(self):
-        self.buckets: dict[Bucket, BucketStats] = {}
-
-    def bucket(self, b: Bucket) -> BucketStats:
-        return self.buckets.setdefault(b, BucketStats())
-
-    @property
-    def compiles(self) -> int:
-        return sum(s.compiles for s in self.buckets.values())
-
-    @property
-    def calls(self) -> int:
-        return sum(s.calls for s in self.buckets.values())
-
-    @property
-    def scenes(self) -> int:
-        return sum(s.scenes for s in self.buckets.values())
-
-    def summary(self) -> dict:
-        return {str(b): s.summary() for b, s in sorted(self.buckets.items(), key=lambda kv: str(kv[0]))}
-
-    def format(self) -> str:
-        lines = [f"{'bucket':>16} {'compiles':>8} {'calls':>6} {'scenes':>7} "
-                 f"{'pad':>5} {'p50ms':>8} {'p95ms':>8} {'scenes/s':>9}"]
-        for b, s in sorted(self.buckets.items(), key=lambda kv: str(kv[0])):
-            lines.append(
-                f"{str(b):>16} {s.compiles:>8} {s.calls:>6} {s.scenes:>7} "
-                f"{s.padded_scenes:>5} {s.p50_ms:>8.1f} {s.p95_ms:>8.1f} {s.scenes_per_s:>9.1f}"
-            )
-        return "\n".join(lines)
+    unit = "scenes"
 
 
 @dataclasses.dataclass
-class PendingRequest:
+class PendingRequest(batching.PendingRequest):
     """A queued scene batch; ``result()`` is available after the engine
     flushes the request's micro-batch group."""
 
     scenes: jnp.ndarray  # [b, S, P, d]
     n_patches: int  # real (unpadded) patch count
-    t_enqueue: float
-    _result: Optional[dict] = None
-    _error: Optional[BaseException] = None
-
-    @property
-    def ready(self) -> bool:
-        return self._result is not None or self._error is not None
-
-    def result(self) -> dict:
-        if self._error is not None:
-            raise RuntimeError("request's micro-batch failed") from self._error
-        if self._result is None:
-            raise RuntimeError("request not flushed yet — call engine.flush()")
-        return self._result
 
 
 class VGGTEngine:
     """Bucketed, micro-batched VGGT serving (see module docstring).
 
     Synchronous API (single-threaded, deterministic — the async server
-    loop drives ``enqueue``/``poll``):
+    loop, ``serving.server.AsyncServer``, drives ``enqueue``/``poll``):
 
         eng = VGGTEngine(cfg, params, policy=W4A8, attn_impl="two_stage")
         out = eng.infer(scenes)                  # one request
@@ -213,15 +120,15 @@ class VGGTEngine:
         self.max_wait_s = max_wait_s
         self.pad_patches = pad_patches
         self.stats = VGGTServeStats()
-        self._fns: dict[Bucket, Any] = {}
+        self._fns: dict[tuple[Bucket, bool], Any] = {}
         # micro-batch queues, one per (frames, bucketed patches) group
-        self._queues: dict[tuple[int, int], list[PendingRequest]] = {}
+        self._queue = batching.MicroBatchQueue(self._run, self.max_batch, max_wait_s)
 
     # ---- buckets ---------------------------------------------------------
 
     def bucket_for(self, batch: int, frames: int, patches: int) -> Bucket:
-        b = next((x for x in self.batch_buckets if x >= batch), batch)
-        p = _next_pow2(patches) if self.pad_patches else patches
+        b = pick_bucket(self.batch_buckets, batch)
+        p = next_pow2(patches) if self.pad_patches else patches
         return Bucket(batch=b, frames=frames, patches=p)
 
     def _bucket_fn(self, bucket: Bucket, masked: bool):
@@ -246,7 +153,7 @@ class VGGTEngine:
 
     def _group_key(self, scenes: jnp.ndarray) -> tuple[int, int]:
         s, p_ = scenes.shape[1], scenes.shape[2]
-        return (s, _next_pow2(p_) if self.pad_patches else p_)
+        return (s, next_pow2(p_) if self.pad_patches else p_)
 
     def infer(self, scenes: jnp.ndarray) -> dict:
         """Serve one request synchronously (still bucket-padded/cached).
@@ -254,7 +161,7 @@ class VGGTEngine:
         other shapes keep coalescing."""
         req = self.enqueue(scenes)
         if not req.ready:
-            self._flush_group(self._group_key(req.scenes))
+            self._queue.flush_group(self._group_key(req.scenes))
         return req.result()
 
     def enqueue(self, scenes: jnp.ndarray) -> PendingRequest:
@@ -264,52 +171,24 @@ class VGGTEngine:
         if scenes.ndim != 4:
             raise ValueError(f"scenes must be [b, S, P, d], got {scenes.shape}")
         b, _, p_, _ = scenes.shape
-        key = self._group_key(scenes)
-        req = PendingRequest(scenes=scenes, n_patches=p_, t_enqueue=time.perf_counter())
-        q = self._queues.setdefault(key, [])
-        q.append(req)
-        if b >= self.max_batch or sum(r.scenes.shape[0] for r in q) >= self.max_batch:
-            self._flush_group(key)
+        req = PendingRequest(scenes=scenes, n_patches=p_)
+        self._queue.add(self._group_key(scenes), req, b)
         return req
 
     def poll(self) -> int:
         """Flush groups whose oldest request has waited past the deadline.
         Returns the number of groups flushed."""
-        now = time.perf_counter()
-        due = [
-            key
-            for key, q in self._queues.items()
-            if q and now - q[0].t_enqueue >= self.max_wait_s
-        ]
-        for key in due:
-            self._flush_group(key)
-        return len(due)
+        return self._queue.poll()
 
     def flush(self) -> None:
         """Flush every pending group."""
-        for key in [k for k, q in self._queues.items() if q]:
-            self._flush_group(key)
+        self._queue.flush()
+
+    def abort(self, err: Optional[BaseException] = None) -> int:
+        """Fail every queued request without serving it (shutdown path)."""
+        return self._queue.fail_pending(err or RuntimeError("engine aborted"))
 
     # ---- micro-batch execution -------------------------------------------
-
-    def _flush_group(self, key: tuple[int, int]) -> None:
-        q = self._queues.get(key, [])
-        while q:
-            # take requests up to max_batch scenes (an oversize request
-            # runs alone in its own exact-size bucket)
-            take, n = [], 0
-            while q and (not take or n + q[0].scenes.shape[0] <= self.max_batch):
-                r = q.pop(0)
-                take.append(r)
-                n += r.scenes.shape[0]
-            try:
-                self._run(key, take)
-            except Exception as e:
-                # deliver the failure to every coalesced owner instead of
-                # leaving popped requests forever un-ready
-                for r in take:
-                    r._error = e
-                raise
 
     def _run(self, key: tuple[int, int], reqs: list[PendingRequest]) -> None:
         frames, p_bucket = key
@@ -350,8 +229,8 @@ class VGGTEngine:
 
         bs = self.stats.bucket(bucket)
         bs.calls += 1
-        bs.scenes += n_real
-        bs.padded_scenes += bucket.batch - n_real
+        bs.items += n_real
+        bs.padded_items += bucket.batch - n_real
         bs.total_s += dt
         bs.latencies_s.append(dt)
 
@@ -359,7 +238,7 @@ class VGGTEngine:
         ns = self.cfg.n_special_tokens
         for r in reqs:
             b = r.scenes.shape[0]
-            r._result = _slice_result(out, i0, b, r.n_patches, ns)
+            r._deliver(_slice_result(out, i0, b, r.n_patches, ns))
             i0 += b
 
 

@@ -1,0 +1,28 @@
+"""The LM serving example (examples/serve_lm.py) must run end-to-end on
+CPU — train a couple of steps, quantize, serve mixed-length traffic
+through the async server over both engines."""
+import os
+import subprocess
+import sys
+
+from tests.helpers import REPO
+
+
+def test_serve_lm_example_smoke():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(REPO, "src")
+    env.setdefault("JAX_PLATFORMS", "cpu")
+    r = subprocess.run(
+        [
+            sys.executable,
+            os.path.join(REPO, "examples", "serve_lm.py"),
+            "--steps", "2", "--requests", "3", "--prompt-len", "12", "--gen", "4",
+        ],
+        capture_output=True,
+        text=True,
+        env=env,
+        timeout=480,
+    )
+    assert r.returncode == 0, f"example failed:\nSTDOUT:{r.stdout}\nSTDERR:{r.stderr}"
+    assert "greedy agreement" in r.stdout
+    assert "per-bucket stats" in r.stdout

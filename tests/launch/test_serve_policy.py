@@ -1,0 +1,39 @@
+"""REGRESSION: launch.serve._policy parsed bit-widths by string index
+(args.policy[1] / args.policy[3]) — w4a16 mis-parsed as a_bits=1 and any
+malformed string crashed with an IndexError or produced garbage bits."""
+import argparse
+
+import pytest
+
+from repro.core.versaq import QuantPolicy
+from repro.launch.serve import _policy
+
+
+def _args(policy, method="versaq"):
+    return argparse.Namespace(policy=policy, method=method)
+
+
+def test_fp_is_none():
+    assert _policy(_args("fp")) is None
+
+
+def test_single_digit_bits():
+    assert _policy(_args("w4a8")) == QuantPolicy(4, 8, "versaq")
+    assert _policy(_args("w4a4", method="rtn")) == QuantPolicy(4, 4, "rtn")
+
+
+def test_multi_digit_bits():
+    # the old string-index parse read a_bits='1' out of 'w4a16'
+    assert _policy(_args("w4a16")) == QuantPolicy(4, 16, "versaq")
+    assert _policy(_args("w8a16")) == QuantPolicy(8, 16, "versaq")
+
+
+def test_case_and_whitespace_tolerant():
+    assert _policy(_args(" W4A8 ")) == QuantPolicy(4, 8, "versaq")
+
+
+@pytest.mark.parametrize("bad", ["w4", "a8", "w4b8", "4a8", "w4a", "quux",
+                                 "w4a8x", "", "wXaY"])
+def test_malformed_policy_raises(bad):
+    with pytest.raises(ValueError, match="policy"):
+        _policy(_args(bad))

@@ -1,0 +1,106 @@
+"""Shared serving-batching machinery: stats ordering (regression — bucket
+tables used to sort lexically), queue coalescing, and request delivery."""
+import pytest
+
+from repro.serving import batching
+from repro.serving.engine import DecodeBucket, LMServeStats, PrefillBucket
+from repro.serving.vggt_engine import Bucket, VGGTServeStats
+
+
+def test_stats_buckets_sort_numerically():
+    """REGRESSION: summary()/format() sorted buckets by str(), printing
+    b16x... before b2x...; the shared stats type sorts by the numeric
+    (batch, frames, patches) key."""
+    stats = VGGTServeStats()
+    for b in (Bucket(16, 2, 8), Bucket(2, 2, 8), Bucket(4, 2, 8), Bucket(2, 3, 8)):
+        stats.bucket(b).calls += 1
+    assert list(stats.summary()) == ["b2xs2xp8", "b2xs3xp8", "b4xs2xp8", "b16xs2xp8"]
+    lines = stats.format().splitlines()[1:]
+    assert [l.split()[0] for l in lines] == [
+        "b2xs2xp8", "b2xs3xp8", "b4xs2xp8", "b16xs2xp8"
+    ]
+
+
+def test_lm_stats_sort_numerically_within_kind():
+    stats = LMServeStats()
+    for b in (PrefillBucket(16, 8), PrefillBucket(2, 16), DecodeBucket(16),
+              DecodeBucket(2), PrefillBucket(2, 8)):
+        stats.bucket(b).calls += 1
+    assert list(stats.summary()) == [
+        "decode:b2", "decode:b16",
+        "prefill:b2xl8", "prefill:b2xl16", "prefill:b16xl8",
+    ]
+
+
+def test_bucket_str_and_sizes():
+    b = Bucket(4, 2, 24)
+    assert str(b) == "b4xs2xp24"
+    assert b.sizes() == (4, 2, 24)
+    assert b.batch == 4 and b.frames == 2 and b.patches == 24
+
+
+def test_stats_scene_aliases():
+    stats = VGGTServeStats()
+    s = stats.bucket(Bucket(2, 2, 8))
+    s.items += 3
+    s.padded_items += 1
+    assert s.scenes == 3 and s.padded_scenes == 1
+    assert stats.scenes == 3
+
+
+def test_queue_coalesces_to_max_batch():
+    runs = []
+    q = batching.MicroBatchQueue(lambda k, reqs: runs.append((k, list(reqs))),
+                                 max_batch=4, max_wait_s=10.0)
+    reqs = [batching.PendingRequest() for _ in range(3)]
+    for r in reqs[:2]:
+        q.add("g", r, 1)
+    assert not runs and q.pending == 2
+    q.add("g", reqs[2], 2)  # 1+1+2 == max_batch -> auto-flush
+    assert len(runs) == 1 and runs[0][1] == reqs
+    assert q.pending == 0
+
+
+def test_queue_oversize_runs_alone():
+    runs = []
+    q = batching.MicroBatchQueue(lambda k, reqs: runs.append(list(reqs)),
+                                 max_batch=2, max_wait_s=10.0)
+    small = batching.PendingRequest()
+    big = batching.PendingRequest()
+    q.add("g", small, 1)
+    q.add("g", big, 3)  # oversize triggers a flush: [small] then [big] alone
+    assert runs == [[small], [big]]
+
+
+def test_queue_poll_deadline():
+    runs = []
+    q = batching.MicroBatchQueue(lambda k, reqs: runs.append(k),
+                                 max_batch=8, max_wait_s=0.0)
+    q.add("a", batching.PendingRequest(), 1)
+    q.add("b", batching.PendingRequest(), 1)
+    assert q.poll() == 2
+    assert sorted(runs) == ["a", "b"]
+    assert q.poll() == 0
+
+
+def test_queue_failure_fans_out_to_all_owners():
+    def boom(k, reqs):
+        raise RuntimeError("kernel fell over")
+
+    q = batching.MicroBatchQueue(boom, max_batch=8, max_wait_s=10.0)
+    a = q.add("g", batching.PendingRequest(), 1)
+    b = q.add("g", batching.PendingRequest(), 1)
+    with pytest.raises(RuntimeError):
+        q.flush()
+    assert a.ready and b.ready
+    with pytest.raises(RuntimeError, match="micro-batch failed"):
+        a.result()
+
+
+def test_pending_request_lifecycle():
+    r = batching.PendingRequest()
+    assert not r.ready
+    with pytest.raises(RuntimeError, match="not flushed"):
+        r.result()
+    r._deliver({"x": 1})
+    assert r.ready and r.result() == {"x": 1}

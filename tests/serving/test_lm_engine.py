@@ -1,0 +1,259 @@
+"""Bucketed LM Engine: compile-count discipline, padded-prompt parity
+with the unbatched forward, micro-batch split/merge, and the serving-path
+bugfix regressions (cache overflow, sampling key, token accounting)."""
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core.versaq import W4A8
+from repro.models import lm
+from repro.serving.engine import DecodeBucket, Engine, PrefillBucket
+
+KEY = jax.random.PRNGKey(0)
+TINY = dict(d_model=64, n_heads=4, n_kv_heads=2, head_dim=16, d_ff=128, vocab_size=64)
+MAX_LEN = 32
+
+
+@functools.lru_cache(maxsize=1)
+def _fixture():
+    cfg = get_config("qwen3-14b-smoke").with_(**TINY)
+    return cfg, lm.init_params(cfg, KEY)
+
+
+def _prompts(b, l, seed=0):
+    cfg, _ = _fixture()
+    return jax.random.randint(jax.random.PRNGKey(seed), (b, l), 0, cfg.vocab_size)
+
+
+def _ref_generate(cfg, params, prompts, n_steps, max_len=MAX_LEN):
+    """Unbatched/unpadded reference: plain prefill + greedy decode loop
+    (the seed engine's exact semantics)."""
+    cache = lm.init_cache(cfg, prompts.shape[0], max_len)
+    logits, cache = lm.forward(cfg, params, prompts, cache=cache, mode="prefill")
+    tok = jnp.argmax(logits[:, -1], -1).astype(jnp.int32)
+    out = [tok]
+    for _ in range(n_steps - 1):
+        logits, cache = lm.decode_step(cfg, params, tok, cache)
+        tok = jnp.argmax(logits[:, 0], -1).astype(jnp.int32)
+        out.append(tok)
+    return np.asarray(jnp.stack(out, axis=1))
+
+
+# ---------------------------------------------------------------------------
+# padded-prompt correctness
+# ---------------------------------------------------------------------------
+
+
+def test_generate_padded_prompt_matches_unpadded_reference():
+    """l=12 pads into the l16 bucket (masked variant); generated ids must
+    be identical to the unpadded prefill+decode."""
+    cfg, params = _fixture()
+    eng = Engine(cfg, params, max_len=MAX_LEN, batch_buckets=(2,))
+    prompts = _prompts(2, 12, seed=1)
+    got = eng.generate(prompts, 6)
+    assert np.array_equal(got, _ref_generate(cfg, params, prompts, 6))
+    # the masked l16 bucket really was used (not an exact-length one)
+    assert PrefillBucket(2, 16) in eng.stats.buckets
+
+
+def test_batch_padding_matches_unpadded_reference():
+    """3 rows pad into the b4 batch bucket; slack rows are sliced off and
+    real rows are untouched (no length padding -> unmasked variant)."""
+    cfg, params = _fixture()
+    eng = Engine(cfg, params, max_len=MAX_LEN, batch_buckets=(4,))
+    prompts = _prompts(3, 16, seed=2)
+    got = eng.generate(prompts, 5)
+    assert got.shape == (3, 5)
+    assert np.array_equal(got, _ref_generate(cfg, params, prompts, 5))
+    assert eng.stats.bucket(PrefillBucket(4, 16)).padded_items == 1
+
+
+def test_mla_padded_prompt_matches_unpadded_reference():
+    """The MLA (absorbed-decode) cache path honors the left-pad mask too.
+    MoE capacity is boosted so expert routing can't drop tokens — pad
+    tokens still occupy router capacity (documented engine caveat)."""
+    cfg = get_config("deepseek-v2-lite-16b-smoke")
+    cfg = cfg.with_(capacity_factor=float(cfg.n_experts))
+    params = lm.init_params(cfg, KEY)
+    eng = Engine(cfg, params, max_len=MAX_LEN, batch_buckets=(2,))
+    prompts = jax.random.randint(KEY, (2, 12), 0, cfg.vocab_size)
+    got = eng.generate(prompts, 4)
+    assert np.array_equal(got, _ref_generate(cfg, params, prompts, 4))
+
+
+def test_recurrent_pattern_serves_exact_length_buckets():
+    """Hybrid/rwkv archs can't mask pad tokens out of recurrent state —
+    the engine falls back to exact prompt lengths (batch bucketing only)."""
+    cfg = get_config("rwkv6-1.6b-smoke")
+    params = lm.init_params(cfg, KEY)
+    eng = Engine(cfg, params, max_len=MAX_LEN, batch_buckets=(2,))
+    assert not eng.pad_prompts
+    prompts = jax.random.randint(KEY, (2, 11), 0, cfg.vocab_size)
+    got = eng.generate(prompts, 4)
+    assert np.array_equal(got, _ref_generate(cfg, params, prompts, 4))
+    assert PrefillBucket(2, 11) in eng.stats.buckets  # exact, not pow2
+
+
+def test_quantized_engine_padded_matches_quantized_reference():
+    """W4A8 params through the padded bucket == W4A8 params unpadded."""
+    cfg, params = _fixture()
+    eng = Engine(cfg, params, policy=W4A8, max_len=MAX_LEN, batch_buckets=(1,))
+    prompts = _prompts(1, 10, seed=3)
+    got = eng.generate(prompts, 5)
+    assert np.array_equal(got, _ref_generate(cfg, eng.params, prompts, 5))
+
+
+# ---------------------------------------------------------------------------
+# compile-count discipline
+# ---------------------------------------------------------------------------
+
+
+def test_mixed_traffic_compiles_bounded_per_bucket_variant():
+    """Two prompt lengths × two batch sizes, repeated: at most one
+    compile per (bucket, masked) variant, and every request's result is
+    identical to its own unbatched forward."""
+    cfg, params = _fixture()
+    eng = Engine(cfg, params, max_len=MAX_LEN, batch_buckets=(2, 4))
+
+    def wave(seed):
+        cases = [(2, 12), (4, 12), (2, 16), (4, 16)]
+        for i, (b, l) in enumerate(cases):
+            prompts = _prompts(b, l, seed=seed + i)
+            got = eng.generate(prompts, 4)
+            assert np.array_equal(got, _ref_generate(cfg, params, prompts, 4)), (b, l)
+
+    wave(100)
+    compiles = eng.stats.compiles
+    # l=12 pads into l16 (masked) and l=16 is exact (unmasked): per batch
+    # bucket that's 2 prefill variants + 2 decode variants
+    assert eng.stats.bucket(PrefillBucket(2, 16)).compiles <= 2
+    assert eng.stats.bucket(PrefillBucket(4, 16)).compiles <= 2
+    assert eng.stats.bucket(DecodeBucket(2)).compiles <= 2
+    assert eng.stats.bucket(DecodeBucket(4)).compiles <= 2
+    assert compiles <= 8
+    # repeat identical mixed traffic: warm buckets, zero new compiles
+    wave(200)
+    assert eng.stats.compiles == compiles
+
+
+# ---------------------------------------------------------------------------
+# micro-batching
+# ---------------------------------------------------------------------------
+
+
+def test_microbatch_coalesce_split_roundtrip():
+    """Coalesced same-bucket requests run as ONE prefill and each caller
+    gets exactly its own tokens back."""
+    cfg, params = _fixture()
+    eng = Engine(cfg, params, max_len=MAX_LEN, batch_buckets=(4,), max_batch=4)
+    singles = [_prompts(1, 10, seed=30 + i)[0] for i in range(3)]
+    reqs = [eng.enqueue(p, 4) for p in singles]
+    assert not any(r.ready for r in reqs)
+    batch2 = _prompts(1, 12, seed=40)  # same l16 group; 3+1 == max_batch
+    r4 = eng.enqueue(batch2, 4)
+    assert all(r.ready for r in reqs) and r4.ready  # auto-flush on fill
+    assert eng.stats.bucket(PrefillBucket(4, 16)).calls == 1
+    for i, (p, r) in enumerate(zip(singles, reqs)):
+        want = _ref_generate(cfg, params, p[None, :], 4)[0]
+        assert np.array_equal(r.result(), want), i
+    assert np.array_equal(r4.result(), _ref_generate(cfg, params, batch2, 4))
+
+
+def test_poll_flushes_after_deadline():
+    cfg, params = _fixture()
+    eng = Engine(cfg, params, max_len=MAX_LEN, max_batch=8, max_wait_s=0.0)
+    req = eng.enqueue(_prompts(1, 8, seed=50)[0], 3)
+    assert not req.ready
+    assert eng.poll() == 1
+    assert req.ready
+
+
+def test_mixed_n_steps_coalesce():
+    """Requests with different n_steps share a flush; each gets only its
+    own first n_steps tokens."""
+    cfg, params = _fixture()
+    eng = Engine(cfg, params, max_len=MAX_LEN, max_batch=8)
+    a = eng.enqueue(_prompts(1, 8, seed=60)[0], 3)
+    b = eng.enqueue(_prompts(1, 8, seed=61)[0], 6)
+    eng.flush()
+    assert a.result().shape == (3,)
+    assert b.result().shape == (6,)
+    want_a = _ref_generate(cfg, params, _prompts(1, 8, seed=60), 6)[0, :3]
+    assert np.array_equal(a.result(), want_a)
+
+
+# ---------------------------------------------------------------------------
+# bugfix regressions
+# ---------------------------------------------------------------------------
+
+
+def test_generate_rejects_cache_overflow():
+    """REGRESSION: prompt_len + n_steps - 1 > max_len used to clamp the
+    dynamic_update_slice start index and silently overwrite earlier KV
+    slots; now it raises before prefill."""
+    cfg, params = _fixture()
+    eng = Engine(cfg, params, max_len=16, batch_buckets=(1,))
+    prompts = _prompts(1, 8, seed=70)
+    # boundary: 8 + 9 - 1 == 16 fits exactly
+    assert eng.generate(prompts, 9).shape == (1, 9)
+    with pytest.raises(ValueError, match="overwrite"):
+        eng.generate(prompts, 10)
+    with pytest.raises(ValueError, match="overwrite"):
+        eng.enqueue(prompts[0], 10)
+    with pytest.raises(ValueError, match="n_steps"):
+        eng.generate(prompts, 0)
+    # a prompt longer than max_len must fail at enqueue with its REAL
+    # length, not slip past the guard via the max_len-capped bucket
+    with pytest.raises(ValueError, match="overwrite"):
+        eng.enqueue(_prompts(1, 20, seed=71)[0], 1)
+
+
+def test_sampling_requires_key():
+    """REGRESSION: generate(greedy=False) without a key used to silently
+    fall back to greedy decoding."""
+    cfg, params = _fixture()
+    eng = Engine(cfg, params, max_len=MAX_LEN, batch_buckets=(1,))
+    prompts = _prompts(1, 8, seed=80)
+    with pytest.raises(ValueError, match="PRNG key"):
+        eng.generate(prompts, 4, greedy=False)
+    out = eng.generate(prompts, 4, greedy=False, key=jax.random.PRNGKey(7))
+    assert out.shape == (1, 4)
+    assert (out >= 0).all() and (out < cfg.vocab_size).all()
+    # same key -> same sample
+    again = eng.generate(prompts, 4, greedy=False, key=jax.random.PRNGKey(7))
+    assert np.array_equal(out, again)
+
+
+def test_first_token_is_sampled_not_greedy():
+    """The first generated token comes from the prefill logits — with
+    greedy=False it must be sampled like every other token, not argmax'd."""
+    cfg, params = _fixture()
+    eng = Engine(cfg, params, max_len=MAX_LEN, batch_buckets=(1,))
+    prompts = _prompts(1, 8, seed=81)
+    greedy_first = eng.generate(prompts, 1)[0, 0]
+    sampled_first = [
+        eng.generate(prompts, 1, greedy=False, key=jax.random.PRNGKey(k))[0, 0]
+        for k in range(8)
+    ]
+    assert any(t != greedy_first for t in sampled_first), sampled_first
+
+
+def test_decode_token_accounting():
+    """REGRESSION: the old engine counted b * n_steps decode tokens, but
+    the first generated token comes from prefill — decode produces only
+    b * (n_steps - 1)."""
+    cfg, params = _fixture()
+    eng = Engine(cfg, params, max_len=MAX_LEN, batch_buckets=(4,))
+    eng.generate(_prompts(4, 8, seed=90), 8)
+    assert eng.stats.decode_tokens == 4 * 7
+    assert eng.stats.prefill_tokens == 4 * 8
+    assert eng.stats.bucket(DecodeBucket(4)).calls == 7
+    # n_steps=1: prefill only, no decode bucket at all
+    eng2 = Engine(cfg, params, max_len=MAX_LEN, batch_buckets=(4,))
+    eng2.generate(_prompts(4, 8, seed=91), 1)
+    assert eng2.stats.decode_tokens == 0
+    assert eng2.stats.decode_s == 0.0

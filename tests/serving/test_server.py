@@ -1,0 +1,168 @@
+"""AsyncServer: the background deadline-flush loop serves submitted
+requests without any caller-side flush, for both engine families."""
+import functools
+import threading
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.data.pipeline import scene_batch
+from repro.models import lm, vggt
+from repro.serving.engine import Engine
+from repro.serving.server import AsyncServer
+from repro.serving.vggt_engine import VGGTEngine
+
+KEY = jax.random.PRNGKey(0)
+TINY = dict(d_model=64, n_heads=4, n_kv_heads=2, head_dim=16, d_ff=128, vocab_size=64)
+
+
+@functools.lru_cache(maxsize=1)
+def _lm_fixture():
+    cfg = get_config("qwen3-14b-smoke").with_(**TINY)
+    return cfg, lm.init_params(cfg, KEY)
+
+
+@functools.lru_cache(maxsize=1)
+def _vggt_fixture():
+    cfg = get_config("vggt-1b-smoke").with_(
+        n_layers=1, d_model=64, n_heads=2, n_kv_heads=2, head_dim=32, d_ff=128,
+        layerscale_init=0.2,
+    )
+    return cfg, vggt.init_params(cfg, KEY)
+
+
+def test_background_loop_flushes_lm_requests():
+    """A single submitted request (half-full micro-batch) is served by
+    the loop's deadline poll — the caller never flushes."""
+    cfg, params = _lm_fixture()
+    eng = Engine(cfg, params, max_len=32, max_batch=8, max_wait_s=0.0)
+    with AsyncServer(eng, poll_interval_s=0.0005) as srv:
+        prompt = jax.random.randint(KEY, (10,), 0, cfg.vocab_size)
+        req = srv.submit(prompt, 4)
+        ids = srv.result(req, timeout=300)
+    assert ids.shape == (4,)
+    # loop-served result == synchronous engine result (warm bucket)
+    want = eng.generate(prompt[None, :], 4)[0]
+    assert np.array_equal(ids, want)
+
+
+def test_background_loop_flushes_vggt_requests():
+    cfg, params = _vggt_fixture()
+    eng = VGGTEngine(cfg, params, max_batch=8, max_wait_s=0.0)
+    scenes = jnp.asarray(scene_batch(1, 2, 24, cfg.d_model, 0)["patches"])
+    with AsyncServer(eng, poll_interval_s=0.0005) as srv:
+        req = srv.submit(scenes)
+        out = srv.result(req, timeout=300)
+    want = vggt.forward(cfg, params, scenes)
+    np.testing.assert_allclose(out["points"], want["points"], rtol=1e-5, atol=1e-5)
+
+
+def test_submit_from_worker_threads():
+    """Concurrent submitters coalesce through the engine lock; every
+    caller gets its own result."""
+    cfg, params = _lm_fixture()
+    eng = Engine(cfg, params, max_len=32, max_batch=4, max_wait_s=0.0)
+    results = {}
+    with AsyncServer(eng, poll_interval_s=0.0005) as srv:
+        def work(i):
+            p = jax.random.randint(jax.random.PRNGKey(i), (8,), 0, cfg.vocab_size)
+            results[i] = (p, srv.result(srv.submit(p, 3), timeout=300))
+
+        threads = [threading.Thread(target=work, args=(i,)) for i in range(4)]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+    assert len(results) == 4
+    for i, (p, ids) in results.items():
+        want = eng.generate(p[None, :], 3)[0]
+        assert np.array_equal(ids, want), i
+
+
+def test_stop_drains_pending():
+    cfg, params = _lm_fixture()
+    # deadline far away: only stop()'s drain can deliver
+    eng = Engine(cfg, params, max_len=32, max_batch=8, max_wait_s=3600.0)
+    srv = AsyncServer(eng, poll_interval_s=0.0005).start()
+    req = srv.submit(jax.random.randint(KEY, (8,), 0, cfg.vocab_size), 3)
+    assert not req.ready
+    srv.stop(drain=True)
+    assert not srv.running
+    assert req.ready and req.result().shape == (3,)
+
+
+def test_loop_survives_failed_flush():
+    """A micro-batch that fails at flush time _fail-s its owners but must
+    not kill the background loop — later requests still get served."""
+    cfg, params = _vggt_fixture()
+    eng = VGGTEngine(cfg, params, max_batch=8, max_wait_s=0.0)
+    good_scenes = jnp.asarray(scene_batch(1, 2, 24, cfg.d_model, 1)["patches"])
+    with AsyncServer(eng, poll_interval_s=0.0005) as srv:
+        bad = srv.submit(jnp.zeros((1, 2, 24, cfg.d_model + 1)))  # wrong d_model
+        with pytest.raises(RuntimeError, match="micro-batch failed"):
+            srv.result(bad, timeout=300)
+        good = srv.submit(good_scenes)
+        out = srv.result(good, timeout=300)
+    np.testing.assert_allclose(
+        out["points"], vggt.forward(cfg, params, good_scenes)["points"],
+        rtol=1e-5, atol=1e-5,
+    )
+
+
+def test_stop_drain_failure_still_stops_loop():
+    """REGRESSION: a failing drain flush inside stop() must still set the
+    stop event and join — not leak a live poll thread — and must fail the
+    OTHER pending groups' requests rather than stranding their waiters."""
+    cfg, params = _vggt_fixture()
+    eng = VGGTEngine(cfg, params, max_batch=8, max_wait_s=3600.0)
+    srv = AsyncServer(eng, poll_interval_s=0.0005).start()
+    bad = srv.submit(jnp.zeros((1, 2, 24, cfg.d_model + 1)))  # wrong d_model
+    # different (frames) group, flushed after the bad one raises
+    stranded = srv.submit(jnp.asarray(scene_batch(1, 3, 24, cfg.d_model, 2)["patches"]))
+    with pytest.raises(Exception):
+        srv.stop(drain=True)
+    assert not srv.running
+    assert bad.ready and stranded.ready
+    with pytest.raises(RuntimeError, match="micro-batch failed"):
+        stranded.result()
+
+
+def test_result_timeout():
+    cfg, params = _lm_fixture()
+    eng = Engine(cfg, params, max_len=32, max_batch=8, max_wait_s=3600.0)
+    srv = AsyncServer(eng, poll_interval_s=0.0005).start()
+    try:
+        req = srv.submit(jax.random.randint(KEY, (8,), 0, cfg.vocab_size), 3)
+        with pytest.raises(TimeoutError):
+            srv.result(req, timeout=0.05)
+    finally:
+        srv.stop(drain=False)
+
+
+def test_stop_without_drain_fails_pending_waiters():
+    """REGRESSION: stop(drain=False) used to leave queued requests
+    forever un-ready — a waiter blocked in result() would hang; now the
+    pending requests are failed and the waiter wakes with the error."""
+    cfg, params = _lm_fixture()
+    eng = Engine(cfg, params, max_len=32, max_batch=8, max_wait_s=3600.0)
+    srv = AsyncServer(eng, poll_interval_s=0.0005).start()
+    req = srv.submit(jax.random.randint(KEY, (8,), 0, cfg.vocab_size), 3)
+    caught = {}
+
+    def waiter():
+        try:
+            srv.result(req, timeout=60)
+        except Exception as e:
+            caught["err"] = e
+
+    t = threading.Thread(target=waiter)
+    t.start()
+    time.sleep(0.05)
+    srv.stop(drain=False)
+    t.join(timeout=10)
+    assert not t.is_alive()
+    assert isinstance(caught["err"], RuntimeError)

@@ -63,7 +63,10 @@ def test_serving_engine_generates():
     out = eng.generate(prompts, n_steps=8)
     assert out.shape == (4, 8)
     assert (out >= 0).all() and (out < 64).all()
-    assert eng.stats.tokens == 32
+    # the first generated token comes from prefill; decode produced the
+    # other 7 per row (the old engine counted all 8 against decode time)
+    assert eng.stats.decode_tokens == 4 * 7
+    assert eng.stats.prefill_tokens == 4 * 8
 
 
 def test_vggt_feedforward_reconstruction_pipeline():
