@@ -2,7 +2,13 @@
 
 Paper claims: RTN degrades sharply below A5/W5; VersaQ stays stable down
 to A4 and W3.
+
+Extended with the mixed-precision point: the ``core.precision``
+sensitivity planner's per-site plan, evaluated on the whole-model proxy
+reconstruction error at equal modeled weight bytes as uniform W4A4 —
+the per-layer reconfigurability axis the uniform sweep cannot reach.
 """
+import jax
 import jax.numpy as jnp
 
 from benchmarks import common
@@ -18,6 +24,35 @@ def _err(policy):
     return tot / 3
 
 
+def _mixed_point():
+    """Planned mixed policy vs the uniform ladder on a tiny VGGT."""
+    from repro.configs import get_config
+    from repro.core.precision import plan_model, proxy_recon_error, uniform_weight_bytes
+    from repro.models import vggt
+
+    cfg = get_config("vggt-1b-smoke")
+    params = vggt.init_params(cfg, jax.random.PRNGKey(0))
+    plan, report = plan_model(cfg, params)
+    levels = {
+        "w4a4": V.W4A4,
+        "w4a8": V.W4A8,
+        "w8a8": V.W8A8,
+        f"planned[{'+'.join(f'{k}:{v}' for k, v in sorted(report['level_counts'].items()))}]": plan,
+    }
+    w4a4_bytes = uniform_weight_bytes(cfg, params, "w4a4")
+    for name, pol in levels.items():
+        err = proxy_recon_error(cfg, params, pol)
+        mb = (
+            report["weight_bytes"]
+            if name.startswith("planned")
+            else uniform_weight_bytes(cfg, params, name)
+        )
+        common.emit(
+            f"fig10.mixed.{name}", 0.0,
+            f"recon_err={err:.5f} weight_bytes={mb:.0f} vs_w4a4_bytes=x{mb / w4a4_bytes:.2f}",
+        )
+
+
 def main():
     for a in (8, 6, 5, 4, 3):
         r = _err(V.QuantPolicy(4, a, "rtn"))
@@ -27,6 +62,7 @@ def main():
         r = _err(V.QuantPolicy(w, 8, "rtn"))
         v = _err(V.QuantPolicy(w, 8, "versaq"))
         common.emit(f"fig10.sweepW.w{w}a8", 0.0, f"rtn={r:.4f} versaq={v:.4f} gain=x{r/v:.2f}")
+    _mixed_point()
 
 
 if __name__ == "__main__":

@@ -4,7 +4,12 @@ Prints ``name,us_per_call,derived`` CSV lines.  Accuracy benchmarks are
 structured proxies (no pretrained VGGT/Co3Dv2 offline — see DESIGN.md §6);
 runtime benchmarks are roofline-model numbers plus interpret-mode kernel
 timings (CPU container; TPU v5e is the target).
+
+``--only key1,key2`` runs a subset (substring match on the module title)
+— CI's benchmarks-smoke job uses this to catch kernel/benchmark drift on
+the fast modules without paying for the trained-fixture ones.
 """
+import argparse
 import sys
 import time
 import traceback
@@ -32,10 +37,24 @@ MODULES = [
 ]
 
 
-def main() -> None:
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument(
+        "--only", default=None,
+        help="comma-separated substrings; run only matching module titles "
+             "(e.g. --only fig10,kernels)",
+    )
+    args = ap.parse_args(argv)
+    modules = MODULES
+    if args.only:
+        keys = [k.strip().lower() for k in args.only.split(",") if k.strip()]
+        modules = [(t, m) for t, m in MODULES if any(k in t.lower() for k in keys)]
+        if not modules:
+            titles = [t for t, _ in MODULES]
+            raise SystemExit(f"--only {args.only!r} matched none of {titles}")
     print("name,us_per_call,derived")
     failures = []
-    for title, mod in MODULES:
+    for title, mod in modules:
         t0 = time.time()
         print(f"# --- {title} ---")
         try:

@@ -26,6 +26,19 @@ its stream stays unrotated and every projection uses the online-WHT path.
 
 Baselines: ``method="rtn"`` disables all transforms, ``"quarot"``
 disables only the DCT — same walker, same flow.
+
+**Mixed precision**: both walkers accept a
+``core.precision.plan.PrecisionPlan`` wherever they accept a uniform
+``QuantPolicy``.  Every prepared projection carries a dotted *site* name
+(``blocks.l0.mixer.wq``, ``frame.ffn.w_down`` — see ``core/precision``)
+and the plan resolves each site to its own level: ``bf16`` sites get the
+transform-fused full-precision dict (``prepare_linear_fp`` — they still
+consume/produce the rotated stream and keep the V/O Hadamard pair
+matched), quantized sites get a per-site ``QuantLinear`` at that level's
+``(w_bits, a_bits)``.  Because site preparation depends only on the
+site's own level (γ-folds and rotations are method-wide, not
+bits-wide), a mixed tree is leaf-for-leaf identical to the uniform tree
+of each site's level — the property the precision tests pin down.
 """
 from __future__ import annotations
 
@@ -43,9 +56,44 @@ from repro.core.versaq import (
     QuantPolicy,
     make_folded_norm,
     prepare_linear,
+    prepare_linear_fp,
     rotate_cols,
 )
 from repro.models import lm
+
+_USE_WHT_METHODS = ("quarot", "versaq")
+
+
+class _Resolver:
+    """Uniform ``QuantPolicy`` or per-site ``PrecisionPlan`` behind one
+    interface.  Duck-typed on ``policy_for`` (a plan) vs ``w_bits`` (a
+    policy) so ``core.model_quant`` never imports ``core.precision`` (the
+    planner imports this module for its proxy-error loop)."""
+
+    def __init__(self, policy):
+        if hasattr(policy, "policy_for"):  # PrecisionPlan
+            self._plan = policy
+            self.method = policy.method
+            self.use_kernel = bool(getattr(policy, "use_kernel", False))
+        elif isinstance(policy, QuantPolicy):
+            self._plan = None
+            self._policy = policy
+            self.method = policy.method
+            self.use_kernel = False
+        else:
+            raise TypeError(
+                f"policy must be a QuantPolicy or PrecisionPlan, got {type(policy)!r}"
+            )
+
+    @property
+    def use_wht(self) -> bool:
+        return self.method in _USE_WHT_METHODS
+
+    def at(self, site: str) -> Optional[QuantPolicy]:
+        """The site's policy; None means bf16 passthrough."""
+        if self._plan is None:
+            return self._policy
+        return self._plan.policy_for(site)
 
 
 def _vmapped(fn, n_lead: int):
@@ -56,29 +104,33 @@ def _vmapped(fn, n_lead: int):
     return fn
 
 
-def _prep(w, policy, lead=0, **kw):
-    """prepare_linear, vmapped over ``lead`` leading stacked dims.
+def _prep(w, pol: _Resolver, site: str, lead=0, **kw):
+    """Per-site prepare (quantized or bf16-fused), vmapped over ``lead``
+    stacked leading dims.
 
     Array kwargs (gamma/beta/bias/out_scale) must carry the same leading
     dims; None kwargs are closed over.
     """
+    site_policy = pol.at(site)
     arr_keys = [k for k in ("gamma", "beta", "bias", "out_scale") if kw.get(k) is not None]
     static_kw = {k: v for k, v in kw.items() if k not in arr_keys}
 
     def go(w_, *arrs):
         d = dict(zip(arr_keys, arrs))
-        return _prepare_with_scale(w_, policy, **static_kw, **d)
+        return _prepare_site(w_, pol, site_policy, **static_kw, **d)
 
     fn = _vmapped(go, lead)
     return fn(w, *[kw[k] for k in arr_keys])
 
 
-def _prepare_with_scale(w, policy, *, out_scale=None, **kw):
+def _prepare_site(w, pol: _Resolver, site_policy, *, out_scale=None, **kw):
     if out_scale is not None:
         w = w * out_scale[None, :]
         if kw.get("bias") is not None:
             kw["bias"] = kw["bias"] * out_scale
-    return prepare_linear(w, policy, **kw)
+    if site_policy is None:  # bf16 passthrough site
+        return prepare_linear_fp(w, use_wht=pol.use_wht, **kw)
+    return prepare_linear(w, site_policy, use_kernel=pol.use_kernel, **kw)
 
 
 def _fold_fp(w, gamma=None, beta=None, bias=None, rotate_in=False):
@@ -111,10 +163,12 @@ def _norm_b(n: Norm):
     return n.b
 
 
-def quantize_lm(cfg: ModelConfig, params: dict, policy: QuantPolicy) -> dict:
-    """Quantize an lm.py parameter tree. Returns a new tree; the forward
-    code is unchanged (dispatch happens on leaf types)."""
-    rotated = policy.use_wht and "rwkv" not in cfg.pattern
+def quantize_lm(cfg: ModelConfig, params: dict, policy) -> dict:
+    """Quantize an lm.py parameter tree with a uniform ``QuantPolicy`` or
+    a per-site ``PrecisionPlan``.  Returns a new tree; the forward code is
+    unchanged (dispatch happens on leaf types)."""
+    pol = _Resolver(policy)
+    rotated = pol.use_wht and "rwkv" not in cfg.pattern
     q = dict(params)
 
     # ---- stream entry: rotate the embedding / frontend output ----
@@ -134,7 +188,10 @@ def quantize_lm(cfg: ModelConfig, params: dict, policy: QuantPolicy) -> dict:
 
     # ---- prefix layers (not stacked) + scanned groups (stacked) ----
     q["prefix"] = [
-        _quantize_layer(cfg, lp, lm.mixer_kind(cfg, i), lm.ffn_kind(cfg, i), policy, rotated, lead=0)
+        _quantize_layer(
+            cfg, lp, lm.mixer_kind(cfg, i), lm.ffn_kind(cfg, i), pol, rotated,
+            lead=0, pfx=f"prefix.{i}",
+        )
         for i, lp in enumerate(params["prefix"])
     ]
     period = len(cfg.pattern)
@@ -143,7 +200,7 @@ def quantize_lm(cfg: ModelConfig, params: dict, policy: QuantPolicy) -> dict:
         gi = cfg.first_dense + j
         blocks[f"l{j}"] = _quantize_layer(
             cfg, params["blocks"][f"l{j}"], lm.mixer_kind(cfg, gi), lm.ffn_kind(cfg, gi),
-            policy, rotated, lead=1,
+            pol, rotated, lead=1, pfx=f"blocks.l{j}",
         )
     q["blocks"] = blocks
 
@@ -159,7 +216,7 @@ def quantize_lm(cfg: ModelConfig, params: dict, policy: QuantPolicy) -> dict:
     return q
 
 
-def _quantize_layer(cfg, lp, kind, fk, policy, rotated, *, lead):
+def _quantize_layer(cfg, lp, kind, fk, pol: _Resolver, rotated, *, lead, pfx):
     out = dict(lp)
     mn: Norm = lp["mixer_norm"]
     fnm: Norm = lp["ffn_norm"]
@@ -179,44 +236,53 @@ def _quantize_layer(cfg, lp, kind, fk, policy, rotated, *, lead):
     if kind == "attn":
         mx = dict(lp["mixer"])
         if cfg.mla:
-            mx["wq"] = _prep(lp["mixer"]["wq"]["w"], policy, lead, gamma=g1, beta=b1,
+            mx["wq"] = _prep(lp["mixer"]["wq"]["w"], pol, f"{pfx}.mixer.wq", lead,
+                             gamma=g1, beta=b1,
                              bias=lp["mixer"]["wq"].get("b"), **common)
             # kv_down: rotate the lora columns so the cache lives rotated
             wkv = lp["mixer"]["w_kv_down"]["w"]
             rank = cfg.kv_lora_rank
+            kvdown_policy = pol.at(f"{pfx}.mixer.w_kv_down")
 
             def prep_kvdown(w_, *arrs):
                 d = dict(zip([k for k, v in (("gamma", g1), ("beta", b1)) if v is not None], arrs))
                 lora, rope = w_[:, :rank], w_[:, rank:]
-                if policy.use_wht:
+                if pol.use_wht:
                     lora = rotate_cols(lora)
                 w2 = jnp.concatenate([lora, rope], axis=1)
-                return prepare_linear(w2, policy, bias=None, **common, **d)
+                if kvdown_policy is None:
+                    return prepare_linear_fp(w2, use_wht=pol.use_wht, bias=None, **common, **d)
+                return prepare_linear(w2, kvdown_policy, bias=None,
+                                      use_kernel=pol.use_kernel, **common, **d)
 
             arrs = [a for a in (g1, b1) if a is not None]
             mx["w_kv_down"] = _vmapped(prep_kvdown, lead)(wkv, *arrs)
             kvn: Norm = lp["mixer"]["kv_norm"]
-            gkv = kvn.g if policy.use_wht else None
-            if policy.use_wht:
+            gkv = kvn.g if pol.use_wht else None
+            if pol.use_wht:
                 mx["kv_norm"] = _folded("rms", rank, groups)
-            mx["w_k_up"] = _prep(lp["mixer"]["w_k_up"]["w"], policy, lead, gamma=gkv,
-                                 rotate_in_offline=policy.use_wht, rotate_input_online=False)
-            mx["w_v_up"] = _prep(lp["mixer"]["w_v_up"]["w"], policy, lead, gamma=gkv,
-                                 rotate_in_offline=policy.use_wht, rotate_input_online=False,
+            mx["w_k_up"] = _prep(lp["mixer"]["w_k_up"]["w"], pol, f"{pfx}.mixer.w_k_up",
+                                 lead, gamma=gkv,
+                                 rotate_in_offline=pol.use_wht, rotate_input_online=False)
+            mx["w_v_up"] = _prep(lp["mixer"]["w_v_up"]["w"], pol, f"{pfx}.mixer.w_v_up",
+                                 lead, gamma=gkv,
+                                 rotate_in_offline=pol.use_wht, rotate_input_online=False,
                                  head_rot_out=(cfg.n_heads, cfg.v_head_dim))
-            mx["wo"] = _prep(lp["mixer"]["wo"]["w"], policy, lead,
+            mx["wo"] = _prep(lp["mixer"]["wo"]["w"], pol, f"{pfx}.mixer.wo", lead,
                              bias=lp["mixer"]["wo"].get("b"), out_scale=ls1,
                              head_rot_in=(cfg.n_heads, cfg.v_head_dim),
                              rotate_out_offline=rotated)
         else:
             dh = cfg.head_dim
             for name in ("wq", "wk"):
-                mx[name] = _prep(lp["mixer"][name]["w"], policy, lead, gamma=g1, beta=b1,
+                mx[name] = _prep(lp["mixer"][name]["w"], pol, f"{pfx}.mixer.{name}",
+                                 lead, gamma=g1, beta=b1,
                                  bias=lp["mixer"][name].get("b"), **common)
-            mx["wv"] = _prep(lp["mixer"]["wv"]["w"], policy, lead, gamma=g1, beta=b1,
+            mx["wv"] = _prep(lp["mixer"]["wv"]["w"], pol, f"{pfx}.mixer.wv", lead,
+                             gamma=g1, beta=b1,
                              bias=lp["mixer"]["wv"].get("b"),
                              head_rot_out=(cfg.n_kv_heads, dh), **common)
-            mx["wo"] = _prep(lp["mixer"]["wo"]["w"], policy, lead,
+            mx["wo"] = _prep(lp["mixer"]["wo"]["w"], pol, f"{pfx}.mixer.wo", lead,
                              bias=lp["mixer"]["wo"].get("b"), out_scale=ls1,
                              head_rot_in=(cfg.n_heads, dh),
                              rotate_out_offline=rotated)
@@ -225,14 +291,16 @@ def _quantize_layer(cfg, lp, kind, fk, policy, rotated, *, lead):
             out.pop("ls1", None)
     elif kind == "mamba":
         mx = dict(lp["mixer"])
-        mx["w_in"] = _prep(lp["mixer"]["w_in"]["w"], policy, lead, gamma=g1, beta=b1, **common)
-        mx["w_out"] = _prep(lp["mixer"]["w_out"]["w"], policy, lead,
+        mx["w_in"] = _prep(lp["mixer"]["w_in"]["w"], pol, f"{pfx}.mixer.w_in", lead,
+                           gamma=g1, beta=b1, **common)
+        mx["w_out"] = _prep(lp["mixer"]["w_out"]["w"], pol, f"{pfx}.mixer.w_out", lead,
                             rotate_input_online=True, rotate_out_offline=rotated)
         out["mixer"] = mx  # Δ/B/C/conv/a_log stay fp (bf16 islands)
     elif kind == "rwkv":
         mx = dict(lp["mixer"])
         for name in ("wr", "wk", "wv", "wg", "wo"):
-            mx[name] = _prep(lp["mixer"][name]["w"], policy, lead, rotate_input_online=True)
+            mx[name] = _prep(lp["mixer"][name]["w"], pol, f"{pfx}.mixer.{name}",
+                             lead, rotate_input_online=True)
         out["mixer"] = mx  # mu/decay LoRA/bonus/ln_x stay fp
 
     # ---- FFN ----
@@ -240,9 +308,10 @@ def _quantize_layer(cfg, lp, kind, fk, policy, rotated, *, lead):
         f = dict(lp["ffn"])
         for name in ("w_gate", "w_up"):
             if name in lp["ffn"]:
-                f[name] = _prep(lp["ffn"][name]["w"], policy, lead, gamma=g2, beta=b2,
+                f[name] = _prep(lp["ffn"][name]["w"], pol, f"{pfx}.ffn.{name}", lead,
+                                gamma=g2, beta=b2,
                                 bias=lp["ffn"][name].get("b"), **common)
-        f["w_down"] = _prep(lp["ffn"]["w_down"]["w"], policy, lead,
+        f["w_down"] = _prep(lp["ffn"]["w_down"]["w"], pol, f"{pfx}.ffn.w_down", lead,
                             bias=lp["ffn"]["w_down"].get("b"), out_scale=ls2,
                             rotate_input_online=True, rotate_out_offline=rotated)
         out["ffn"] = f
@@ -261,26 +330,30 @@ def _quantize_layer(cfg, lp, kind, fk, policy, rotated, *, lead):
         nex = dict(ex)
         for name in ("w_gate", "w_up"):
             if name in ex:
-                nex[name] = _prep(ex[name], policy, lead + 1,
+                nex[name] = _prep(ex[name], pol, f"{pfx}.ffn.experts.{name}", lead + 1,
                                   gamma=_bcast(g2, cfg.n_experts), beta=_bcast(b2, cfg.n_experts),
                                   **common)
-        nex["w_down"] = _prep(ex["w_down"], policy, lead + 1,
+        nex["w_down"] = _prep(ex["w_down"], pol, f"{pfx}.ffn.experts.w_down", lead + 1,
                               rotate_input_online=True, rotate_out_offline=rotated)
         f["experts"] = nex
         if "shared" in lp["ffn"]:
             sh = dict(lp["ffn"]["shared"])
             for name in ("w_gate", "w_up"):
                 if name in lp["ffn"]["shared"]:
-                    sh[name] = _prep(lp["ffn"]["shared"][name]["w"], policy, lead,
+                    sh[name] = _prep(lp["ffn"]["shared"][name]["w"], pol,
+                                     f"{pfx}.ffn.shared.{name}", lead,
                                      gamma=g2, beta=b2, **common)
-            sh["w_down"] = _prep(lp["ffn"]["shared"]["w_down"]["w"], policy, lead,
+            sh["w_down"] = _prep(lp["ffn"]["shared"]["w_down"]["w"], pol,
+                                 f"{pfx}.ffn.shared.w_down", lead,
                                  rotate_input_online=True, rotate_out_offline=rotated)
             f["shared"] = sh
         out["ffn"] = f
     elif fk == "rwkv_channel":
         f = dict(lp["ffn"])
-        f["w_up"] = _prep(lp["ffn"]["w_up"]["w"], policy, lead, rotate_input_online=True)
-        f["w_down"] = _prep(lp["ffn"]["w_down"]["w"], policy, lead, rotate_input_online=True)
+        f["w_up"] = _prep(lp["ffn"]["w_up"]["w"], pol, f"{pfx}.ffn.w_up", lead,
+                          rotate_input_online=True)
+        f["w_down"] = _prep(lp["ffn"]["w_down"]["w"], pol, f"{pfx}.ffn.w_down", lead,
+                            rotate_input_online=True)
         out["ffn"] = f
     return out
 
@@ -304,11 +377,13 @@ def _folded(kind: str, dim: int, groups: int | None) -> FoldedNorm:
 # ---------------------------------------------------------------------------
 
 
-def quantize_vggt(cfg: ModelConfig, params: dict, policy: QuantPolicy) -> dict:
-    """Quantize the VGGT tree (models/vggt.py): rotated stream via the
-    patch projection + rotated special tokens; AA blocks fully quantized
-    with LayerScale folded; heads stay fp with final-norm fold."""
-    rotated = policy.use_wht
+def quantize_vggt(cfg: ModelConfig, params: dict, policy) -> dict:
+    """Quantize the VGGT tree (models/vggt.py) with a uniform
+    ``QuantPolicy`` or a per-site ``PrecisionPlan``: rotated stream via the
+    patch projection + rotated special tokens; AA blocks quantized per
+    site with LayerScale folded; heads stay fp with final-norm fold."""
+    pol = _Resolver(policy)
+    rotated = pol.use_wht
     q = dict(params)
     if rotated:
         pp = params["patch_proj"]
@@ -318,7 +393,7 @@ def quantize_vggt(cfg: ModelConfig, params: dict, policy: QuantPolicy) -> dict:
         }
         q["special_tokens"] = rotate_cols(params["special_tokens"].astype(jnp.float32))
 
-    def quant_block(bp):
+    def quant_block(bp, pfx):
         an: Norm = bp["attn_norm"]
         fn: Norm = bp["ffn_norm"]
         g1, b1 = (an.g, an.b) if rotated else (None, None)
@@ -332,20 +407,24 @@ def quantize_vggt(cfg: ModelConfig, params: dict, policy: QuantPolicy) -> dict:
         at = dict(bp["attn"])
         dh = cfg.head_dim
         for name in ("wq", "wk"):
-            at[name] = _prep(bp["attn"][name]["w"], policy, 1, gamma=g1, beta=b1,
+            at[name] = _prep(bp["attn"][name]["w"], pol, f"{pfx}.attn.{name}", 1,
+                             gamma=g1, beta=b1,
                              bias=bp["attn"][name].get("b"), **common)
-        at["wv"] = _prep(bp["attn"]["wv"]["w"], policy, 1, gamma=g1, beta=b1,
+        at["wv"] = _prep(bp["attn"]["wv"]["w"], pol, f"{pfx}.attn.wv", 1,
+                         gamma=g1, beta=b1,
                          bias=bp["attn"]["wv"].get("b"), head_rot_out=(cfg.n_kv_heads, dh), **common)
-        at["wo"] = _prep(bp["attn"]["wo"]["w"], policy, 1, bias=bp["attn"]["wo"].get("b"),
+        at["wo"] = _prep(bp["attn"]["wo"]["w"], pol, f"{pfx}.attn.wo", 1,
+                         bias=bp["attn"]["wo"].get("b"),
                          out_scale=bp.get("ls1"), head_rot_in=(cfg.n_heads, dh),
                          rotate_out_offline=rotated)
         nb["attn"] = at
         ff = dict(bp["ffn"])
         for name in ("w_gate", "w_up"):
             if name in bp["ffn"]:
-                ff[name] = _prep(bp["ffn"][name]["w"], policy, 1, gamma=g2, beta=b2,
+                ff[name] = _prep(bp["ffn"][name]["w"], pol, f"{pfx}.ffn.{name}", 1,
+                                 gamma=g2, beta=b2,
                                  bias=bp["ffn"][name].get("b"), **common)
-        ff["w_down"] = _prep(bp["ffn"]["w_down"]["w"], policy, 1,
+        ff["w_down"] = _prep(bp["ffn"]["w_down"]["w"], pol, f"{pfx}.ffn.w_down", 1,
                              bias=bp["ffn"]["w_down"].get("b"), out_scale=bp.get("ls2"),
                              rotate_input_online=True, rotate_out_offline=rotated)
         nb["ffn"] = ff
@@ -354,8 +433,8 @@ def quantize_vggt(cfg: ModelConfig, params: dict, policy: QuantPolicy) -> dict:
         return nb
 
     blocks = dict(params["blocks"])
-    blocks["frame"] = quant_block(params["blocks"]["frame"])
-    blocks["global"] = quant_block(params["blocks"]["global"])
+    blocks["frame"] = quant_block(params["blocks"]["frame"], "frame")
+    blocks["global"] = quant_block(params["blocks"]["global"], "global")
     q["blocks"] = blocks
 
     fn: Norm = params["final_norm"]

@@ -1,0 +1,52 @@
+"""Reconfigurable mixed-precision subsystem (paper §IV "versatile
+quantization" made per-layer).
+
+The paper's accelerator runs BF16, INT8, and INT4 *side by side*:
+precision-sensitive operators stay high precision while the bulk of the
+network runs 4-bit.  This package is the software realization:
+
+* ``plan``    — the policy model: named weight sites (per-block attention
+  qkv/o, ffn projections, MoE experts) mapped to one of the precision
+  levels ``bf16 | w8a8 | w4a8 | w4a4`` via glob-style overrides, with
+  JSON serialization (:class:`PrecisionPlan`, :class:`LayerPolicy`).
+* ``planner`` — a calibration-free sensitivity planner: each site is
+  scored by quantization error on synthetic saturated-channel
+  activations pushed through the site's orthogonal transform (the
+  paper's scene-agnostic premise), then bits are assigned greedily under
+  a modeled weight-bytes + latency budget (``launch/roofline_util``
+  hardware constants).
+
+Dispatch lives in ``core/model_quant``: ``quantize_lm`` / ``quantize_vggt``
+accept a :class:`PrecisionPlan` wherever they accept a uniform
+``QuantPolicy``, and emit per-site ``QuantLinear`` leaves (int8 MXU path,
+packed-int4 path, or a transform-fused bf16 passthrough).
+"""
+from repro.core.precision.plan import (
+    LEVELS,
+    LayerPolicy,
+    PrecisionPlan,
+    level_policy,
+    parse_level,
+)
+from repro.core.precision.planner import (
+    SiteInfo,
+    enumerate_sites,
+    plan_model,
+    proxy_recon_error,
+    score_sites,
+    uniform_weight_bytes,
+)
+
+__all__ = [
+    "LEVELS",
+    "LayerPolicy",
+    "PrecisionPlan",
+    "level_policy",
+    "parse_level",
+    "SiteInfo",
+    "enumerate_sites",
+    "plan_model",
+    "proxy_recon_error",
+    "score_sites",
+    "uniform_weight_bytes",
+]

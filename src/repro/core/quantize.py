@@ -97,7 +97,6 @@ def pack_int4(v: jnp.ndarray, axis: int = 0) -> jnp.ndarray:
     """Pack int4-range int8 values two-per-uint8 along ``axis``."""
     assert v.dtype == jnp.int8
     assert v.shape[axis] % 2 == 0, v.shape
-    lo, hi = jnp.split(v.astype(jnp.uint8) & 0xF, 2, axis=axis) if False else (None, None)
     # interleave-free layout: first half of axis in low nibble, second in high
     n = v.shape[axis] // 2
     a = jax.lax.slice_in_dim(v, 0, n, axis=axis).astype(jnp.uint8) & 0xF

@@ -50,9 +50,11 @@ __all__ = [
     "apply_linear",
     "apply_norm",
     "prepare_linear",
+    "prepare_linear_fp",
     "online_wht",
     "W4A8",
     "W4A4",
+    "W8A8",
 ]
 
 DCT_BLOCK = 64
@@ -79,6 +81,7 @@ class QuantPolicy:
         return f"{self.method}-w{self.w_bits}a{self.a_bits}"
 
 
+W8A8 = QuantPolicy(8, 8, "versaq")
 W4A8 = QuantPolicy(4, 8, "versaq")
 W4A4 = QuantPolicy(4, 4, "versaq")
 
@@ -103,6 +106,11 @@ class QuantLinear:
     rotate_input: bool = dataclasses.field(metadata=dict(static=True), default=False)
     idct: bool = dataclasses.field(metadata=dict(static=True), default=False)
     dct_block: int = dataclasses.field(metadata=dict(static=True), default=DCT_BLOCK)
+    # Route the integer matmul through the Pallas kernel
+    # (kernels/quant_matmul: int8 MXU path or packed-int4 path) instead of
+    # the jnp emulation.  Numerics are identical; the kernel is the TPU hot
+    # path, the emulation the portable/autodiff path.
+    use_kernel: bool = dataclasses.field(metadata=dict(static=True), default=False)
 
 
 @jax.tree_util.register_dataclass
@@ -163,14 +171,47 @@ def _int_matmul(xq: QTensor, wq: QTensor, out_dtype) -> jnp.ndarray:
     return out.astype(out_dtype)
 
 
+def _kernel_tiles(m: int, k: int, n: int, packed: bool) -> tuple[int, int, int]:
+    """Largest divisor tiles ≤ the kernel defaults for arbitrary serving
+    shapes (token counts like S·(n_special+P) are rarely tile-aligned)."""
+    from repro.kernels.ops import divisor_tile
+
+    bm = divisor_tile(m, 256)
+    bn = divisor_tile(n, 256)
+    bk = divisor_tile(k, 512)
+    if packed and bk % 2:
+        bk = k  # packed layout needs an even K tile; K itself is even
+    return bm, bn, bk
+
+
 def apply_linear(p: Any, x: jnp.ndarray) -> jnp.ndarray:
-    """Dispatching linear: plain {"w": ...} dict or QuantLinear."""
+    """Dispatching linear: plain {"w": ...} dict or QuantLinear.
+
+    A QuantLinear runs per-token activation quantization at its own
+    ``a_bits`` and the integer matmul on its own weight format — the
+    per-site reconfigurability of the paper's PE array: int8, packed
+    int4, or (for sites a PrecisionPlan left at bf16) the plain dict
+    path below.  ``use_kernel`` sites route to the Pallas kernel.
+    """
     if isinstance(p, QuantLinear):
         dtype = x.dtype
         if p.rotate_input:
             x = online_wht(x)
-        xq = quantize_per_token(x, p.a_bits)
-        y = _int_matmul(xq, p.qw, jnp.float32)
+        if p.use_kernel and p.qw.bits <= 8 and p.a_bits <= 8:
+            from repro.kernels import ops as kernel_ops
+
+            m = 1
+            for s in x.shape[:-1]:
+                m *= s
+            kdim = x.shape[-1]
+            bm, bn, bk = _kernel_tiles(m, kdim, p.qw.shape[-1], p.qw.packed)
+            y = kernel_ops.quant_linear_matmul(
+                x, p.qw, a_bits=p.a_bits, out_dtype=jnp.float32,
+                bm=bm, bn=bn, bk=bk,
+            )
+        else:
+            xq = quantize_per_token(x, p.a_bits)
+            y = _int_matmul(xq, p.qw, jnp.float32)
         if p.idct:
             d = transforms.dct_matrix(p.dct_block, dtype=jnp.float32)
             y = transforms.apply_blocked(y, d, p.dct_block)  # ŷ·D cancels offline ·Dᵀ
@@ -247,6 +288,43 @@ def dct_cols(w: jnp.ndarray, block: int = DCT_BLOCK) -> jnp.ndarray:
     return w.reshape(lead + (d_out,))
 
 
+def _fuse_weight(
+    w: jnp.ndarray,
+    *,
+    use_wht: bool,
+    gamma: Optional[jnp.ndarray],
+    beta: Optional[jnp.ndarray],
+    bias: Optional[jnp.ndarray],
+    rotate_in: bool,
+    rotate_out_offline: bool,
+    head_rot_in: tuple[int, int] | None,
+    head_rot_out: tuple[int, int] | None,
+    in_block: int | None,
+) -> tuple[jnp.ndarray, jnp.ndarray, bool]:
+    """Shared offline fusion (Eq. 6/7 minus the DCT): γ/β fold, per-head
+    Hadamards, input-side Hᵀ, output-side H.  Returns (w, b, has_bias)."""
+    w = w.astype(jnp.float32)
+    b = jnp.zeros((w.shape[-1],), jnp.float32) if bias is None else bias.astype(jnp.float32)
+    has_bias = bias is not None
+    if beta is not None:  # β @ W with the original W
+        b = b + beta.astype(jnp.float32) @ w
+        has_bias = True
+    if gamma is not None:
+        w = w * gamma.astype(jnp.float32)[:, None]
+    if head_rot_in is not None and use_wht:
+        nh, hd = head_rot_in
+        w = fold_head_hadamard_in(w, nh, hd)
+    if rotate_in and use_wht:
+        w = rotate_rows(w, in_block or transforms.block_size_for(w.shape[0]))
+    if head_rot_out is not None and use_wht:
+        nh, hd = head_rot_out
+        w = fold_head_hadamard_out(w, nh, hd)
+    if rotate_out_offline and use_wht:
+        w = rotate_cols(w)
+        b = rotate_cols(b[None, :])[0]
+    return w, b, has_bias
+
+
 def prepare_linear(
     w: jnp.ndarray,
     policy: QuantPolicy,
@@ -260,6 +338,7 @@ def prepare_linear(
     head_rot_in: tuple[int, int] | None = None,
     head_rot_out: tuple[int, int] | None = None,
     in_block: int | None = None,
+    use_kernel: bool = False,
 ) -> QuantLinear:
     """Fuse transforms into a [in, out] weight and quantize (Eq. 7).
 
@@ -274,27 +353,20 @@ def prepare_linear(
     the rotated residual domain (paper Stage 4); bias is rotated to match.
     ``head_rot_in``/``head_rot_out``: (n_heads, head_dim) per-head Hadamard
     on the input/output side (V/O projections).
+    ``use_kernel``: route this site's matmul through the Pallas kernel.
     """
-    w = w.astype(jnp.float32)
-    b = jnp.zeros((w.shape[-1],), jnp.float32) if bias is None else bias.astype(jnp.float32)
-    has_bias = bias is not None
-    if beta is not None:  # β @ W with the original W
-        b = b + beta.astype(jnp.float32) @ w
-        has_bias = True
-    if gamma is not None:
-        w = w * gamma.astype(jnp.float32)[:, None]
-    if head_rot_in is not None and policy.use_wht:
-        nh, hd = head_rot_in
-        w = fold_head_hadamard_in(w, nh, hd)
-    use_wht = policy.use_wht and (rotate_in_offline or rotate_input_online)
-    if use_wht:
-        w = rotate_rows(w, in_block or transforms.block_size_for(w.shape[0]))
-    if head_rot_out is not None and policy.use_wht:
-        nh, hd = head_rot_out
-        w = fold_head_hadamard_out(w, nh, hd)
-    if rotate_out_offline and policy.use_wht:
-        w = rotate_cols(w)
-        b = rotate_cols(b[None, :])[0]
+    w, b, has_bias = _fuse_weight(
+        w,
+        use_wht=policy.use_wht,
+        gamma=gamma,
+        beta=beta,
+        bias=bias,
+        rotate_in=rotate_in_offline or rotate_input_online,
+        rotate_out_offline=rotate_out_offline,
+        head_rot_in=head_rot_in,
+        head_rot_out=head_rot_out,
+        in_block=in_block,
+    )
     idct = False
     if policy.use_dct and w.shape[-1] % DCT_BLOCK == 0:
         w = dct_cols(w, DCT_BLOCK)
@@ -307,7 +379,49 @@ def prepare_linear(
         a_bits=policy.a_bits,
         rotate_input=policy.use_wht and rotate_input_online,
         idct=idct,
+        use_kernel=use_kernel,
     )
+
+
+def prepare_linear_fp(
+    w: jnp.ndarray,
+    *,
+    use_wht: bool = True,
+    gamma: Optional[jnp.ndarray] = None,
+    beta: Optional[jnp.ndarray] = None,
+    bias: Optional[jnp.ndarray] = None,
+    rotate_in_offline: bool = False,
+    rotate_input_online: bool = False,
+    rotate_out_offline: bool = False,
+    head_rot_in: tuple[int, int] | None = None,
+    head_rot_out: tuple[int, int] | None = None,
+    in_block: int | None = None,
+) -> dict:
+    """bf16-passthrough site preparation for mixed-precision plans.
+
+    Same offline fusion as :func:`prepare_linear` — the site must keep
+    consuming the rotated residual stream and producing into it, and the
+    V/O per-head Hadamard pair must stay matched with its (possibly
+    quantized) partner — but no DCT (it only helps quantization) and no
+    quantization.  ``rotate_input_online`` is accepted for signature
+    parity and *ignored*: with no quantizer between them the online
+    WHT/offline Hᵀ pair would cancel exactly, so neither is applied.
+    Returns the plain ``{"w", "b"}`` dict ``apply_linear`` dispatches on.
+    """
+    del rotate_input_online
+    w, b, has_bias = _fuse_weight(
+        w,
+        use_wht=use_wht,
+        gamma=gamma,
+        beta=beta,
+        bias=bias,
+        rotate_in=rotate_in_offline,
+        rotate_out_offline=rotate_out_offline,
+        head_rot_in=head_rot_in,
+        head_rot_out=head_rot_out,
+        in_block=in_block,
+    )
+    return {"w": w, "b": b if has_bias else None}
 
 
 def fold_head_hadamard_out(w: jnp.ndarray, n_heads: int, head_dim: int) -> jnp.ndarray:

@@ -10,9 +10,17 @@ VGGT feed-forward serving (bucketed + micro-batched engine):
 
   PYTHONPATH=src python -m repro.launch.serve --arch vggt-1b-smoke \
       --policy w4a8 --requests 6 --frames 4 --patches 64 --attn-impl two_stage
+
+Precision tiers (one engine, several quantization levels; requests are
+assigned tiers round-robin and only coalesce within their tier):
+
+  PYTHONPATH=src python -m repro.launch.serve --arch vggt-1b-smoke \
+      --tiers quality=fp,balanced=w4a8,fast=plan --requests 6
+
+Tier specs: ``fp`` (full precision), ``w<bits>a<bits>`` (uniform), or
+``plan`` (the ``core.precision`` sensitivity planner's mixed plan).
 """
 import argparse
-import re
 
 import jax
 import jax.numpy as jnp
@@ -23,23 +31,59 @@ from repro.data.pipeline import mixed_len_prompts, scene_batch
 from repro.serving.engine import Engine
 from repro.serving.server import AsyncServer
 
-_POLICY_RE = re.compile(r"w(\d+)a(\d+)")
+def _parse_policy(s: str, method: str) -> QuantPolicy | None:
+    """'fp'/'bf16' or 'w<bits>a<bits>' (w4a8, w4a16, ...), via the one
+    level grammar in ``core.precision.plan`` (a second local regex here
+    would drift as the ladder grows)."""
+    from repro.core.precision.plan import level_policy
+
+    s = s.strip().lower()
+    if s == "fp":
+        return None
+    try:
+        return level_policy(s, method)
+    except ValueError as e:
+        raise ValueError(
+            f"policy {s!r}: expected 'fp' or 'w<bits>a<bits>' (e.g. w4a8, w4a16)"
+        ) from e
 
 
 def _policy(args) -> QuantPolicy | None:
-    """Parse ``--policy``: 'fp' or 'w<bits>a<bits>' (w4a8, w4a16, ...).
-    Indexing the string by position broke on anything but single-digit
-    bit-widths — w4a16 used to mis-parse as a_bits=1."""
-    s = args.policy.strip().lower()
-    if s == "fp":
+    return _parse_policy(args.policy, args.method)
+
+
+def _tiers(args, cfg, params) -> dict | None:
+    """Parse ``--tiers name=spec,...``; ``plan`` runs the sensitivity
+    planner on the freshly-initialized weights."""
+    if not args.tiers:
         return None
-    m = _POLICY_RE.fullmatch(s)
-    if m is None:
-        raise ValueError(
-            f"--policy {args.policy!r}: expected 'fp' or 'w<bits>a<bits>' "
-            f"(e.g. w4a8, w4a16)"
-        )
-    return QuantPolicy(int(m.group(1)), int(m.group(2)), args.method)
+    tiers: dict[str, object] = {}
+    for part in args.tiers.split(","):
+        name, _, spec = part.partition("=")
+        name, spec = name.strip(), spec.strip().lower()
+        if not name or not spec:
+            raise ValueError(f"--tiers entry {part!r}: expected name=spec")
+        if name in tiers:
+            raise ValueError(f"--tiers names tier {name!r} twice")
+        if spec == "plan":
+            from repro.core.precision import plan_model
+
+            plan, report = plan_model(cfg, params, method=args.method, name=name)
+            print(f"tier {name!r}: planned mixed precision "
+                  f"{report['level_counts']} "
+                  f"({report['weight_bytes']/1e6:.2f}MB modeled weights)")
+            tiers[name] = plan
+        else:
+            tiers[name] = _parse_policy(spec, args.method)
+    return tiers
+
+
+def _tier_cycle(tiers: dict | None, n: int) -> list[str | None]:
+    """Round-robin tier assignment for n requests (None = default path)."""
+    if not tiers:
+        return [None] * n
+    names = list(tiers)
+    return [names[i % len(names)] for i in range(n)]
 
 
 def serve_vggt(cfg, args) -> None:
@@ -47,19 +91,22 @@ def serve_vggt(cfg, args) -> None:
     from repro.serving.vggt_engine import VGGTEngine
 
     params = vggt.init_params(cfg, jax.random.PRNGKey(0))
+    tiers = _tiers(args, cfg, params)
     eng = VGGTEngine(
         cfg,
         params,
-        policy=_policy(args),
+        policy=None if tiers else _policy(args),
+        tiers=tiers,
         attn_impl=args.attn_impl,
         max_batch=args.batch,
         max_wait_s=args.max_wait_s,
     )
+    assign = _tier_cycle(tiers, args.requests)
     with AsyncServer(eng) as srv:
         reqs = [
             srv.submit(jnp.asarray(
                 scene_batch(args.scenes, args.frames, args.patches, cfg.d_model, r)["patches"]
-            ))
+            ), tier=assign[r])
             for r in range(args.requests)
         ]
         outs = [srv.result(r, timeout=600) for r in reqs]
@@ -74,10 +121,12 @@ def serve_lm(cfg, args) -> None:
 
     key = jax.random.PRNGKey(0)
     params = lm.init_params(cfg, key)
+    tiers = _tiers(args, cfg, params)
     eng = Engine(
         cfg,
         params,
-        policy=_policy(args),
+        policy=None if tiers else _policy(args),
+        tiers=tiers,
         attn_impl=args.attn_impl,
         max_len=args.prompt_len + args.gen,
         max_batch=args.batch,
@@ -86,8 +135,9 @@ def serve_lm(cfg, args) -> None:
     # mixed-length traffic (full + non-pow2 short prompts) exercises the
     # masked length-padded bucket variants alongside warm bucket reuse
     prompts = mixed_len_prompts(cfg.vocab_size, args.requests, args.prompt_len)
+    assign = _tier_cycle(tiers, len(prompts))
     with AsyncServer(eng) as srv:
-        reqs = [srv.submit(p, args.gen) for p in prompts]
+        reqs = [srv.submit(p, args.gen, tier=t) for p, t in zip(prompts, assign)]
         outs = [srv.result(r, timeout=600) for r in reqs]
     print(f"served {len(outs)} requests -> {sum(o.shape[-1] for o in outs)} tokens")
     print(f"prefill {eng.stats.prefill_s*1e3:.1f}ms  "
@@ -100,6 +150,9 @@ def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="qwen3-14b-smoke")
     ap.add_argument("--policy", default="w4a8", help="w<bits>a<bits> (w4a8, w4a16, ...) | fp")
+    ap.add_argument("--tiers", default=None,
+                    help="serve precision tiers: name=spec[,name=spec...], "
+                         "spec in {fp, w<bits>a<bits>, plan}; overrides --policy")
     ap.add_argument("--method", default="versaq", help="versaq|quarot|rtn")
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=16)

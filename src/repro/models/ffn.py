@@ -66,12 +66,34 @@ def init_moe(key, cfg: ModelConfig, dtype=jnp.float32):
     return p
 
 
-def _moe_block(p: dict, cfg: ModelConfig, xt: jnp.ndarray) -> jnp.ndarray:
-    """Route one block of tokens [tb, d] through the top-k experts."""
+def _moe_block(
+    p: dict, cfg: ModelConfig, xt: jnp.ndarray, mask: jnp.ndarray | None = None
+) -> jnp.ndarray:
+    """Route one block of tokens [tb, d] through the top-k experts.
+
+    ``mask`` [tb] bool marks *real* tokens.  Masked-out tokens (the
+    serving engine's LEFT-pad slots) are excluded from routing entirely:
+    they consume no expert capacity and contribute nothing to the
+    combine, so real tokens keep exactly the slots they would get in the
+    unpadded forward.  Capacity is likewise computed from the *real*
+    token count (dynamically), matching the unpadded block's static cap
+    whenever the real tokens fit one dispatch block.
+    """
     tb, d = xt.shape
     e, k = cfg.n_experts, cfg.top_k
-    cap = max(1, -(-tb * k * int(4 * cfg.capacity_factor) // (4 * e)))  # ceil
-    cap = min(cap, tb)
+
+    def _cap(n):  # ceil(n·k·cf/e), cf quantized to quarters
+        return -(-n * k * int(4 * cfg.capacity_factor) // (4 * e))
+
+    cap = min(max(1, _cap(tb)), tb)  # static: buffer slots
+    if mask is None:
+        cap_eff = cap
+    else:
+        # pad tokens must not shrink nor grow capacity: use the formula
+        # the unpadded forward would apply to the real-token count (both
+        # terms are monotone in n, so cap_eff <= the static cap above)
+        n_real = jnp.sum(mask.astype(jnp.int32))
+        cap_eff = jnp.minimum(jnp.maximum(1, _cap(n_real)), n_real)
 
     logits = L.dense(p["router"], xt).astype(jnp.float32)
     probs = jax.nn.softmax(logits, axis=-1)
@@ -81,9 +103,14 @@ def _moe_block(p: dict, cfg: ModelConfig, xt: jnp.ndarray) -> jnp.ndarray:
     # capacity-based slotting: rank of each (token, expert) assignment
     flat_e = idx.reshape(-1)  # [tb*k]
     onehot = jax.nn.one_hot(flat_e, e, dtype=jnp.int32)
+    if mask is not None:
+        valid = jnp.repeat(mask, k)  # [tb*k]
+        onehot = onehot * valid[:, None].astype(jnp.int32)  # pads rank-invisible
     rank = jnp.cumsum(onehot, axis=0) - 1  # running count per expert
     my_rank = jnp.take_along_axis(rank, flat_e[:, None], axis=1)[:, 0]
-    keep = my_rank < cap
+    keep = my_rank < cap_eff
+    if mask is not None:
+        keep = keep & valid
     token_id = jnp.repeat(jnp.arange(tb), k)
     slot = jnp.where(keep, my_rank, cap)  # overflow -> scratch slot
 
@@ -120,7 +147,12 @@ def _moe_block(p: dict, cfg: ModelConfig, xt: jnp.ndarray) -> jnp.ndarray:
     return out[:tb]
 
 
-def moe_ffn(p: dict, cfg: ModelConfig, x: jnp.ndarray) -> jnp.ndarray:
+def moe_ffn(
+    p: dict,
+    cfg: ModelConfig,
+    x: jnp.ndarray,
+    token_mask: jnp.ndarray | None = None,
+) -> jnp.ndarray:
     """Top-k routed experts + always-on shared experts (DeepSeekMoE §3).
 
     Dispatch runs in **token blocks** (``cfg.moe_dispatch_blocks``, auto by
@@ -129,19 +161,30 @@ def moe_ffn(p: dict, cfg: ModelConfig, x: jnp.ndarray) -> jnp.ndarray:
     compute sharded (data × experts) instead of replicating the global
     gather — see EXPERIMENTS.md §Perf (deepseek-moe train hillclimb).
     Block-local capacity also bounds worst-case routing skew.
+
+    ``token_mask`` [B, L] bool marks real tokens; padded slots (bucketed
+    serving) are excluded from routing and expert capacity, so real
+    tokens route exactly as in the unpadded forward (per dispatch
+    block).  Masked slots get only the shared-expert output, which the
+    caller discards along with the rest of the padded positions.
     """
     b, l, d = x.shape
     t = b * l
     xt = x.reshape(t, d)
+    mt = None if token_mask is None else token_mask.reshape(t).astype(bool)
     nb = cfg.moe_dispatch_blocks or max(1, t // 4096)
     while t % nb:
         nb -= 1
     if nb > 1:
         xb = xt.reshape(nb, t // nb, d)
-        yb = jax.vmap(lambda xx: _moe_block(p, cfg, xx))(xb)
+        if mt is None:
+            yb = jax.vmap(lambda xx: _moe_block(p, cfg, xx))(xb)
+        else:
+            mb = mt.reshape(nb, t // nb)
+            yb = jax.vmap(lambda xx, mm: _moe_block(p, cfg, xx, mm))(xb, mb)
         y = yb.reshape(b, l, d).astype(x.dtype)
     else:
-        y = _moe_block(p, cfg, xt).reshape(b, l, d).astype(x.dtype)
+        y = _moe_block(p, cfg, xt, mt).reshape(b, l, d).astype(x.dtype)
 
     if "shared" in p:
         y = y + dense_ffn(p["shared"], cfg.act, x)

@@ -167,6 +167,7 @@ def _apply_layer(
     cache=None,
     mode: str = "full",
     pad_lens=None,
+    token_mask=None,
 ):
     h = L.norm(lp["mixer_norm"], x)
     new_cache = cache
@@ -196,7 +197,7 @@ def _apply_layer(
 
     h = L.norm(lp["ffn_norm"], x)
     if fk == "moe":
-        out = F.moe_ffn(lp["ffn"], cfg, h)
+        out = F.moe_ffn(lp["ffn"], cfg, h, token_mask=token_mask)
     elif fk == "rwkv_channel":
         prev = new_cache.cshift if isinstance(new_cache, R.RWKVState) else None
         out, cshift = R.rwkv_channel_mix(lp["ffn"], cfg, h, prev=prev)
@@ -259,11 +260,17 @@ def forward(
         )
     pos0 = cache["pos"] if cache is not None else 0
     lq = inputs.shape[1]
-    positions = (jnp.asarray(pos0) + jnp.arange(lq))[None, :]
+    slots = (jnp.asarray(pos0) + jnp.arange(lq))[None, :]
+    positions = slots
+    token_mask = None
     if pad_lens is not None:
         # logical positions: slot s of a row with p leading pads holds
         # token s - p (clamped for the masked pad slots themselves)
-        positions = jnp.maximum(positions - pad_lens[:, None], 0)
+        positions = jnp.maximum(slots - pad_lens[:, None], 0)
+        # slot validity: the first pad_lens slots of a row are padding —
+        # MoE routing must not let them consume expert capacity.  Decode
+        # steps (slot index >= prompt length > pad) are always real.
+        token_mask = slots >= pad_lens[:, None]
     x = _embed_inputs(cfg, params, inputs, positions)
 
     new_prefix = []
@@ -272,6 +279,7 @@ def forward(
         x, c2 = _apply_layer(
             cfg, lp, mixer_kind(cfg, i), ffn_kind(cfg, i), x,
             positions=positions, cache=c, mode=mode, pad_lens=pad_lens,
+            token_mask=token_mask,
         )
         new_prefix.append(c2)
 
@@ -288,6 +296,7 @@ def forward(
             xc, c2 = _apply_layer(
                 cfg, gp[f"l{j}"], kind, fk, xc,
                 positions=positions, cache=c, mode=mode, pad_lens=pad_lens,
+                token_mask=token_mask,
             )
             new_gc[f"l{j}"] = c2
         if act_sharding is not None:

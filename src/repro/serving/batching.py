@@ -34,10 +34,61 @@ __all__ = [
     "ServeStats",
     "PendingRequest",
     "MicroBatchQueue",
+    "TierSet",
     "next_pow2",
     "pick_bucket",
     "LATENCY_WINDOW",
 ]
+
+
+class TierSet:
+    """Named precision tiers for a serving engine.
+
+    Maps tier name -> quantization spec (``QuantPolicy`` | ``PrecisionPlan``
+    | ``None`` for full precision) and lazily materializes each tier's
+    parameter tree through the engine-supplied ``quantize`` callable on
+    first use — a tier that never sees traffic costs nothing, including
+    the default tier.  Shared by both engines so tier validation and the
+    lazy cache cannot diverge between them.
+    """
+
+    def __init__(self, *, tiers, policy, default_tier, raw_params, quantize):
+        if tiers is not None and policy is not None:
+            raise ValueError("pass either policy= (one tier) or tiers=, not both")
+        self.tiers = dict(tiers) if tiers is not None else {"default": policy}
+        if not self.tiers:
+            raise ValueError("tiers must name at least one tier")
+        self.default_tier = (
+            default_tier if default_tier is not None else next(iter(self.tiers))
+        )
+        if self.default_tier not in self.tiers:
+            raise ValueError(
+                f"default_tier {self.default_tier!r} not in tiers {sorted(self.tiers)}"
+            )
+        self._raw = raw_params
+        self._quantize = quantize
+        self._params: dict[str, Any] = {}
+
+    @property
+    def default_policy(self):
+        return self.tiers[self.default_tier]
+
+    def resolve(self, tier: Optional[str]) -> str:
+        """Tier name with None -> default; unknown names raise."""
+        t = self.default_tier if tier is None else tier
+        if t not in self.tiers:
+            raise KeyError(f"unknown tier {t!r}: expected one of {sorted(self.tiers)}")
+        return t
+
+    def params(self, tier: Optional[str]):
+        """The tier's parameter tree (quantized lazily on first use)."""
+        t = self.resolve(tier)
+        p = self._params.get(t)
+        if p is None:
+            pol = self.tiers[t]
+            p = self._raw if pol is None else self._quantize(pol)
+            self._params[t] = p
+        return p
 
 
 def next_pow2(n: int, floor: int = 16) -> int:
@@ -62,17 +113,32 @@ class Bucket:
     set ``AXES`` to the matching single-letter axis labels, e.g. the VGGT
     bucket ``(batch, frames, patches)`` with axes ``("b", "s", "p")``
     prints as ``b4xs2xp24``.
+
+    Tiered engines add a trailing ``tier: str = "default"`` field — it is
+    part of the bucket's identity (each precision tier owns its own
+    compiled executables and stats row) but not an axis: ``sizes()``
+    skips it and ``__str__`` prefixes it only for non-default tiers.
     """
 
     AXES: ClassVar[tuple[str, ...]] = ()
 
-    def sizes(self) -> tuple[int, ...]:
+    def sizes(self) -> tuple:
         """The bucket's axis sizes — the *numeric* sort key for stats
-        tables (lexical ``str`` sorting would put b16 before b2)."""
-        return tuple(getattr(self, f.name) for f in dataclasses.fields(self))
+        tables (lexical ``str`` sorting would put b16 before b2).  A
+        non-default tier (a string) sorts last, grouping tier variants of
+        one shape together without perturbing untired buckets."""
+        vals = tuple(
+            getattr(self, f.name)
+            for f in dataclasses.fields(self)
+            if f.name != "tier"
+        )
+        tier = getattr(self, "tier", "default")
+        return vals if tier == "default" else vals + (tier,)
 
     def __str__(self) -> str:
-        return "x".join(f"{a}{n}" for a, n in zip(self.AXES, self.sizes()))
+        s = "x".join(f"{a}{n}" for a, n in zip(self.AXES, self.sizes()))
+        tier = getattr(self, "tier", "default")
+        return s if tier == "default" else f"{tier}:{s}"
 
 
 LATENCY_WINDOW = 1024  # percentile window; totals keep the full history

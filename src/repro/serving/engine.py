@@ -74,28 +74,33 @@ MIN_PROMPT_BUCKET = 8
 @dataclasses.dataclass(frozen=True)
 class PrefillBucket(batching.Bucket):
     """One compiled prefill shape: coalesced batch (padded up) × bucketed
-    prompt length."""
+    prompt length, per precision tier."""
 
     batch: int
     prompt_len: int
+    tier: str = "default"
 
     AXES = ("b", "l")
 
     def __str__(self):
-        return f"prefill:b{self.batch}xl{self.prompt_len}"
+        s = f"prefill:b{self.batch}xl{self.prompt_len}"
+        return s if self.tier == "default" else f"{self.tier}:{s}"
 
 
 @dataclasses.dataclass(frozen=True)
 class DecodeBucket(batching.Bucket):
     """One compiled decode step: batch only (the KV cache is always
-    ``max_len`` wide, so decode shape is length-independent)."""
+    ``max_len`` wide, so decode shape is length-independent), per
+    precision tier."""
 
     batch: int
+    tier: str = "default"
 
     AXES = ("b",)
 
     def __str__(self):
-        return f"decode:b{self.batch}"
+        s = f"decode:b{self.batch}"
+        return s if self.tier == "default" else f"{self.tier}:{s}"
 
 
 class LMServeStats(batching.ServeStats):
@@ -140,6 +145,7 @@ class LMRequest(batching.PendingRequest):
     prompts: jnp.ndarray  # [b, l] int32
     n_steps: int
     squeeze: bool = False  # enqueued as a single [l] prompt
+    tier: str = "default"  # precision tier (engine ``tiers`` key)
 
 
 class Engine:
@@ -154,6 +160,20 @@ class Engine:
         reqs = [eng.enqueue(p, 32) for p in prompts]   # micro-batched
         eng.flush()
         outs = [r.result() for r in reqs]
+
+    Precision tiers (see docs/serving.md "Precision tiers"): one engine
+    can serve several quantization levels concurrently —
+
+        eng = Engine(cfg, params, tiers={
+            "quality": None,          # full precision
+            "balanced": W4A8,         # uniform quantization
+            "fast": mixed_plan,       # core.precision PrecisionPlan
+        })
+        eng.enqueue(p, 32, tier="fast")
+
+    Tier is part of the bucket identity, so each tier owns its own jit
+    cache entries (warm cross-tier traffic never recompiles) and its own
+    stats rows; tier weights are quantized lazily on first use.
     """
 
     def __init__(
@@ -163,6 +183,8 @@ class Engine:
         *,
         max_len: int = 2048,
         policy: Optional[QuantPolicy] = None,
+        tiers: Optional[dict[str, Any]] = None,
+        default_tier: Optional[str] = None,
         attn_impl: Optional[str] = None,
         prompt_buckets: Optional[tuple[int, ...]] = None,
         batch_buckets: tuple[int, ...] = DEFAULT_BATCH_BUCKETS,
@@ -176,8 +198,19 @@ class Engine:
             )
         self.cfg = cfg.with_(attn_impl=attn_impl) if attn_impl is not None else cfg
         cfg = self.cfg
-        self.policy = policy
-        self.params = quantize_lm(cfg, params, policy) if policy is not None else params
+        # ``tiers`` maps tier name -> QuantPolicy | PrecisionPlan | None
+        # (None = full precision).  One engine serves every tier: tier is
+        # part of the bucket identity, so each tier owns its own jitted
+        # executables (no cross-tier recompiles) and its own stats rows,
+        # while sharing the queue, the deadline loop, and the fp weights.
+        self._tierset = batching.TierSet(
+            tiers=tiers, policy=policy, default_tier=default_tier,
+            raw_params=params,
+            quantize=lambda pol: quantize_lm(self.cfg, params, pol),
+        )
+        self.tiers = self._tierset.tiers
+        self.default_tier = self._tierset.default_tier
+        self.policy = self._tierset.default_policy
         self.max_len = max_len
         self.batch_buckets = tuple(sorted(batch_buckets))
         self.prompt_buckets = tuple(sorted(prompt_buckets)) if prompt_buckets else None
@@ -190,6 +223,21 @@ class Engine:
         self.stats = LMServeStats()
         self._fns: dict[tuple[batching.Bucket, bool], Any] = {}
         self._queue = batching.MicroBatchQueue(self._run, self.max_batch, max_wait_s)
+
+    # ---- tiers -----------------------------------------------------------
+
+    @property
+    def params(self) -> Any:
+        """The default tier's parameter tree (quantized lazily, like
+        every other tier's)."""
+        return self._tierset.params(None)
+
+    def tier_params(self, tier: str) -> Any:
+        """The tier's (lazily quantized) parameter tree."""
+        return self._tierset.params(tier)
+
+    def _tier(self, tier: Optional[str]) -> str:
+        return self._tierset.resolve(tier)
 
     # ---- buckets ---------------------------------------------------------
 
@@ -268,11 +316,15 @@ class Engine:
 
     # ---- request path ----------------------------------------------------
 
-    def enqueue(self, prompts: jnp.ndarray, n_steps: int) -> LMRequest:
+    def enqueue(
+        self, prompts: jnp.ndarray, n_steps: int, tier: Optional[str] = None
+    ) -> LMRequest:
         """Queue a prompt ([l] int) or same-length prompt batch ([b, l]);
         greedy decoding (sampling needs per-request keys, which do not
         coalesce — use ``generate``).  Auto-flushes the length group the
-        moment it reaches ``max_batch`` sequences."""
+        moment it reaches ``max_batch`` sequences.  ``tier`` selects the
+        precision tier; requests only coalesce within their tier."""
+        tier = self._tier(tier)
         prompts = jnp.asarray(prompts)
         squeeze = prompts.ndim == 1
         if squeeze:
@@ -285,10 +337,10 @@ class Engine:
                    if self.cfg.embed_inputs else "")
             )
         prompts = prompts.astype(jnp.int32)
-        key = self._bucket_len(prompts.shape[1], n_steps)
-        self._check_fits(prompts.shape[1], key, n_steps)
-        req = LMRequest(prompts=prompts, n_steps=n_steps, squeeze=squeeze)
-        self._queue.add(key, req, prompts.shape[0])
+        L = self._bucket_len(prompts.shape[1], n_steps)
+        self._check_fits(prompts.shape[1], L, n_steps)
+        req = LMRequest(prompts=prompts, n_steps=n_steps, squeeze=squeeze, tier=tier)
+        self._queue.add((tier, L), req, prompts.shape[0])
         return req
 
     def poll(self) -> int:
@@ -311,6 +363,7 @@ class Engine:
         *,
         greedy: bool = True,
         key: Optional[jax.Array] = None,
+        tier: Optional[str] = None,
     ) -> np.ndarray:
         """prompts: [B, L] int32.  Returns generated ids [B, n_steps].
         Synchronous; runs alone (no coalescing) but on the same bucketed
@@ -319,18 +372,20 @@ class Engine:
             # the old engine silently fell back to greedy here — a wrong
             # answer, not an error.  Sampling needs an explicit key.
             raise ValueError("generate(greedy=False) requires an explicit PRNG key")
+        tier = self._tier(tier)
         prompts = jnp.asarray(prompts).astype(jnp.int32)
         if prompts.ndim != 2:
             raise ValueError(f"prompts must be [B, L] ints, got {prompts.shape}")
         L = self._bucket_len(prompts.shape[1], n_steps)
         self._check_fits(prompts.shape[1], L, n_steps)
-        req = LMRequest(prompts=prompts, n_steps=n_steps)
-        return self._execute(L, [req], greedy=greedy, key=key)
+        req = LMRequest(prompts=prompts, n_steps=n_steps, tier=tier)
+        return self._execute(L, [req], greedy=greedy, key=key, tier=tier)
 
     # ---- micro-batch execution -------------------------------------------
 
-    def _run(self, key: int, reqs: list[LMRequest]) -> None:
-        self._execute(key, reqs, greedy=True, key=None)
+    def _run(self, key: tuple[str, int], reqs: list[LMRequest]) -> None:
+        tier, L = key
+        self._execute(L, reqs, greedy=True, key=None, tier=tier)
 
     def _execute(
         self,
@@ -339,7 +394,9 @@ class Engine:
         *,
         greedy: bool,
         key: Optional[jax.Array],
+        tier: str = "default",
     ) -> np.ndarray:
+        params = self.tier_params(tier)
         n_real = sum(r.prompts.shape[0] for r in reqs)
         bb = self.batch_bucket(n_real)
         n_steps = max(r.n_steps for r in reqs)
@@ -362,14 +419,14 @@ class Engine:
         toks = jnp.concatenate(parts, axis=0)
         pad_lens = jnp.asarray(pads, jnp.int32)
 
-        pbucket, dbucket = PrefillBucket(bb, L), DecodeBucket(bb)
+        pbucket, dbucket = PrefillBucket(bb, L, tier), DecodeBucket(bb, tier)
         pfn = self._prefill_fn(pbucket, masked)
         cache = lm.init_cache(self.cfg, bb, self.max_len)
         t0 = time.perf_counter()
         if masked:
-            logits, cache = pfn(self.params, toks, cache, pad_lens)
+            logits, cache = pfn(params, toks, cache, pad_lens)
         else:
-            logits, cache = pfn(self.params, toks, cache)
+            logits, cache = pfn(params, toks, cache)
         logits.block_until_ready()
         dt = time.perf_counter() - t0
         ps = self.stats.bucket(pbucket)
@@ -392,9 +449,9 @@ class Engine:
             t0 = time.perf_counter()
             for _ in range(n_steps - 1):
                 if masked:
-                    logits, cache = dfn(self.params, tok, cache, pad_lens)
+                    logits, cache = dfn(params, tok, cache, pad_lens)
                 else:
-                    logits, cache = dfn(self.params, tok, cache)
+                    logits, cache = dfn(params, tok, cache)
                 lg = logits[:, 0]
                 if greedy:
                     tok = jnp.argmax(lg, axis=-1).astype(jnp.int32)

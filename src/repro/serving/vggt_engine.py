@@ -55,11 +55,13 @@ DEFAULT_BATCH_BUCKETS = (1, 2, 4, 8, 16)
 @dataclasses.dataclass(frozen=True)
 class Bucket(batching.Bucket):
     """One compiled shape: batch is padded up, frames exact, patches
-    padded only with ``pad_patches``.  Prints as ``b4xs2xp24``."""
+    padded only with ``pad_patches``; per precision tier.  Prints as
+    ``b4xs2xp24`` (``fast:b4xs2xp24`` for a non-default tier)."""
 
     batch: int
     frames: int
     patches: int
+    tier: str = "default"
 
     AXES = ("b", "s", "p")
 
@@ -79,6 +81,7 @@ class PendingRequest(batching.PendingRequest):
 
     scenes: jnp.ndarray  # [b, S, P, d]
     n_patches: int  # real (unpadded) patch count
+    tier: str = "default"  # precision tier (engine ``tiers`` key)
 
 
 class VGGTEngine:
@@ -92,6 +95,14 @@ class VGGTEngine:
         reqs = [eng.enqueue(s) for s in many]    # micro-batched
         eng.flush()
         outs = [r.result() for r in reqs]
+
+    Precision tiers (docs/serving.md "Precision tiers"): one engine, many
+    quantization levels —
+
+        eng = VGGTEngine(cfg, params, tiers={
+            "quality": None, "balanced": W4A8, "fast": mixed_plan,
+        })
+        out = eng.infer(scenes, tier="fast")
     """
 
     def __init__(
@@ -100,6 +111,8 @@ class VGGTEngine:
         params: Any,
         *,
         policy: Optional[QuantPolicy] = None,
+        tiers: Optional[dict[str, Any]] = None,
+        default_tier: Optional[str] = None,
         attn_impl: Optional[str] = None,
         batch_buckets: tuple[int, ...] = DEFAULT_BATCH_BUCKETS,
         max_batch: Optional[int] = None,
@@ -111,10 +124,18 @@ class VGGTEngine:
                 f"attn_impl={attn_impl!r}: expected flash | two_stage | vanilla"
             )
         self.cfg = cfg.with_(attn_impl=attn_impl) if attn_impl is not None else cfg
-        self.policy = policy
-        self.params = (
-            quantize_vggt(self.cfg, params, policy) if policy is not None else params
+        # ``tiers``: tier name -> QuantPolicy | PrecisionPlan | None (fp).
+        # One engine, many precisions: tier is part of the bucket identity
+        # (own jit cache entries + stats rows per tier) and of the queue
+        # group key (requests only coalesce within their tier).
+        self._tierset = batching.TierSet(
+            tiers=tiers, policy=policy, default_tier=default_tier,
+            raw_params=params,
+            quantize=lambda pol: quantize_vggt(self.cfg, params, pol),
         )
+        self.tiers = self._tierset.tiers
+        self.default_tier = self._tierset.default_tier
+        self.policy = self._tierset.default_policy
         self.batch_buckets = tuple(sorted(batch_buckets))
         self.max_batch = max_batch if max_batch is not None else self.batch_buckets[-1]
         self.max_wait_s = max_wait_s
@@ -124,12 +145,29 @@ class VGGTEngine:
         # micro-batch queues, one per (frames, bucketed patches) group
         self._queue = batching.MicroBatchQueue(self._run, self.max_batch, max_wait_s)
 
+    # ---- tiers -----------------------------------------------------------
+
+    @property
+    def params(self) -> Any:
+        """The default tier's parameter tree (quantized lazily, like
+        every other tier's)."""
+        return self._tierset.params(None)
+
+    def tier_params(self, tier: str) -> Any:
+        """The tier's (lazily quantized) parameter tree."""
+        return self._tierset.params(tier)
+
+    def _tier(self, tier: Optional[str]) -> str:
+        return self._tierset.resolve(tier)
+
     # ---- buckets ---------------------------------------------------------
 
-    def bucket_for(self, batch: int, frames: int, patches: int) -> Bucket:
+    def bucket_for(
+        self, batch: int, frames: int, patches: int, tier: str = "default"
+    ) -> Bucket:
         b = pick_bucket(self.batch_buckets, batch)
         p = next_pow2(patches) if self.pad_patches else patches
-        return Bucket(batch=b, frames=frames, patches=p)
+        return Bucket(batch=b, frames=frames, patches=p, tier=tier)
 
     def _bucket_fn(self, bucket: Bucket, masked: bool):
         """The bucket's jitted forward; cache miss == one compile.
@@ -151,28 +189,30 @@ class VGGTEngine:
 
     # ---- request path ----------------------------------------------------
 
-    def _group_key(self, scenes: jnp.ndarray) -> tuple[int, int]:
+    def _group_key(self, scenes: jnp.ndarray, tier: str) -> tuple[str, int, int]:
         s, p_ = scenes.shape[1], scenes.shape[2]
-        return (s, next_pow2(p_) if self.pad_patches else p_)
+        return (tier, s, next_pow2(p_) if self.pad_patches else p_)
 
-    def infer(self, scenes: jnp.ndarray) -> dict:
+    def infer(self, scenes: jnp.ndarray, tier: Optional[str] = None) -> dict:
         """Serve one request synchronously (still bucket-padded/cached).
         Flushes only this request's group — pending micro-batches of
-        other shapes keep coalescing."""
-        req = self.enqueue(scenes)
+        other shapes/tiers keep coalescing."""
+        req = self.enqueue(scenes, tier=tier)
         if not req.ready:
-            self._queue.flush_group(self._group_key(req.scenes))
+            self._queue.flush_group(self._group_key(req.scenes, req.tier))
         return req.result()
 
-    def enqueue(self, scenes: jnp.ndarray) -> PendingRequest:
+    def enqueue(self, scenes: jnp.ndarray, tier: Optional[str] = None) -> PendingRequest:
         """Queue a [b, S, P, d] scene batch; auto-flushes a group the
-        moment it reaches ``max_batch`` scenes."""
+        moment it reaches ``max_batch`` scenes.  ``tier`` selects the
+        precision tier; requests only coalesce within their tier."""
+        tier = self._tier(tier)
         scenes = jnp.asarray(scenes)
         if scenes.ndim != 4:
             raise ValueError(f"scenes must be [b, S, P, d], got {scenes.shape}")
         b, _, p_, _ = scenes.shape
-        req = PendingRequest(scenes=scenes, n_patches=p_)
-        self._queue.add(self._group_key(scenes), req, b)
+        req = PendingRequest(scenes=scenes, n_patches=p_, tier=tier)
+        self._queue.add(self._group_key(scenes, tier), req, b)
         return req
 
     def poll(self) -> int:
@@ -190,10 +230,11 @@ class VGGTEngine:
 
     # ---- micro-batch execution -------------------------------------------
 
-    def _run(self, key: tuple[int, int], reqs: list[PendingRequest]) -> None:
-        frames, p_bucket = key
+    def _run(self, key: tuple[str, int, int], reqs: list[PendingRequest]) -> None:
+        tier, frames, p_bucket = key
+        params = self.tier_params(tier)
         n_real = sum(r.scenes.shape[0] for r in reqs)
-        bucket = self.bucket_for(n_real, frames, p_bucket)
+        bucket = self.bucket_for(n_real, frames, p_bucket, tier)
         d = reqs[0].scenes.shape[-1]
         dtype = reqs[0].scenes.dtype
 
@@ -221,9 +262,9 @@ class VGGTEngine:
 
         t0 = time.perf_counter()
         if masked:
-            out = fn(self.params, x, jnp.concatenate(mask_parts, axis=0))
+            out = fn(params, x, jnp.concatenate(mask_parts, axis=0))
         else:
-            out = fn(self.params, x)
+            out = fn(params, x)
         jax.block_until_ready(out)
         dt = time.perf_counter() - t0
 

@@ -1,0 +1,231 @@
+"""Mixed-precision subsystem: plan model, per-site dispatch, planner.
+
+Pins the PR's acceptance properties:
+
+* a plan mixing bf16/w8a8/w4a8/w4a4 sites is *leaf-for-leaf identical*
+  to quantizing each site uniformly at that site's level (per-site
+  dispatch consistency);
+* the sensitivity planner's mixed plan beats uniform W4A4 on proxy
+  reconstruction error at equal-or-lower modeled weight bytes.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core.model_quant import quantize_lm, quantize_vggt
+from repro.core.precision import (
+    PrecisionPlan,
+    enumerate_sites,
+    plan_model,
+    proxy_recon_error,
+    uniform_weight_bytes,
+)
+from repro.core.precision.plan import level_policy, parse_level
+from repro.core.precision.planner import site_weight_bytes
+from repro.core.versaq import W4A4, QuantLinear
+from repro.models import lm, vggt
+
+KEY = jax.random.PRNGKey(0)
+
+
+# ---------------------------------------------------------------------------
+# plan model
+# ---------------------------------------------------------------------------
+
+
+def test_parse_level():
+    assert parse_level("bf16") is None
+    assert parse_level("w4a8") == (4, 8)
+    assert parse_level("W8A8") == (8, 8)
+    with pytest.raises(ValueError):
+        parse_level("fp32")
+    pol = level_policy("w4a4", "quarot")
+    assert (pol.w_bits, pol.a_bits, pol.method) == (4, 4, "quarot")
+    assert level_policy("bf16") is None
+
+
+def test_plan_resolution_last_match_wins():
+    plan = PrecisionPlan(
+        default="w4a4",
+        overrides=(("frame.*", "w4a8"), ("*.wo", "w8a8"), ("frame.attn.wq", "bf16")),
+    )
+    assert plan.resolve("global.ffn.w_down") == "w4a4"
+    assert plan.resolve("frame.ffn.w_up") == "w4a8"
+    assert plan.resolve("frame.attn.wo") == "w8a8"  # later glob overrides earlier
+    assert plan.resolve("frame.attn.wq") == "bf16"
+
+
+def test_plan_json_roundtrip():
+    plan = PrecisionPlan(
+        default="w4a8",
+        overrides=(("*.w_down", "w8a8"), ("frame.attn.*", "bf16")),
+        method="quarot",
+        use_kernel=True,
+        name="tiered",
+    )
+    assert PrecisionPlan.from_json(plan.to_json()) == plan
+
+
+def test_plan_rejects_bad_levels():
+    with pytest.raises(ValueError):
+        PrecisionPlan(default="int3")
+    with pytest.raises(ValueError):
+        PrecisionPlan(overrides=(("*", "w4a"),))
+
+
+# ---------------------------------------------------------------------------
+# per-site dispatch consistency (acceptance criterion)
+# ---------------------------------------------------------------------------
+
+
+def _vggt_site_leaf(tree, site):
+    node = tree["blocks"]
+    for part in site.split("."):
+        node = node[part]
+    return node
+
+
+def _assert_same_leaf(a, b, site, level):
+    if level == "bf16":
+        assert isinstance(a, dict) and not isinstance(a, QuantLinear), (site, type(a))
+        np.testing.assert_array_equal(a["w"], b["w"])
+        if a.get("b") is not None or b.get("b") is not None:
+            np.testing.assert_array_equal(a["b"], b["b"])
+    else:
+        assert isinstance(a, QuantLinear), (site, type(a))
+        assert (a.qw.bits, a.a_bits, a.qw.packed) == (b.qw.bits, b.a_bits, b.qw.packed)
+        np.testing.assert_array_equal(a.qw.values, b.qw.values)
+        np.testing.assert_array_equal(a.qw.scale, b.qw.scale)
+        if a.bias is not None or b.bias is not None:
+            np.testing.assert_array_equal(a.bias, b.bias)
+
+
+def test_vggt_mixed_sites_match_uniform():
+    """Mixing all four levels in one plan produces, site for site, the
+    exact leaves of the corresponding uniform quantization."""
+    cfg = get_config("vggt-1b-smoke")
+    params = vggt.init_params(cfg, KEY)
+    mixed = PrecisionPlan(
+        default="w4a8",
+        overrides=(
+            ("frame.attn.*", "w8a8"),
+            ("*.ffn.w_down", "w4a4"),
+            ("global.attn.wq", "bf16"),
+        ),
+    )
+    qm = quantize_vggt(cfg, params, mixed)
+    sites = [s.site for s in enumerate_sites(cfg, params)]
+    levels = {mixed.resolve(s) for s in sites}
+    assert levels == {"bf16", "w8a8", "w4a8", "w4a4"}  # genuinely mixed
+    uniform = {
+        lv: quantize_vggt(cfg, params, PrecisionPlan(default=lv)) for lv in levels
+    }
+    for s in sites:
+        lv = mixed.resolve(s)
+        _assert_same_leaf(_vggt_site_leaf(qm, s), _vggt_site_leaf(uniform[lv], s), s, lv)
+
+    # and the mixed tree serves: finite outputs, sane error vs fp
+    x = jax.random.normal(KEY, (1, 2, 32, cfg.d_model), jnp.float32)
+    ref = vggt.forward(cfg, params, x)
+    got = vggt.forward(cfg, qm, x)
+    for k in ("points", "depth", "pose"):
+        assert bool(jnp.isfinite(got[k]).all())
+        err = float(jnp.linalg.norm(got[k] - ref[k]) / (jnp.linalg.norm(ref[k]) + 1e-9))
+        assert err < 0.1, (k, err)
+
+
+def test_lm_all_bf16_plan_is_lossless():
+    """A plan of pure bf16 sites (transform-fused fp dicts) must
+    reproduce the unquantized model — the fp fusion path keeps the
+    rotated stream, folded norms, and head-Hadamard pairs consistent."""
+    cfg = get_config("qwen3-14b-smoke")
+    params = lm.init_params(cfg, KEY)
+    q = quantize_lm(cfg, params, PrecisionPlan(default="bf16"))
+    toks = jax.random.randint(KEY, (2, 16), 0, cfg.vocab_size)
+    ref, _ = lm.forward(cfg, params, toks)
+    got, _ = lm.forward(cfg, q, toks)
+    err = float(jnp.linalg.norm(got - ref) / jnp.linalg.norm(ref))
+    assert err < 5e-3, err
+
+
+def test_lm_uniform_plan_equals_uniform_policy():
+    """PrecisionPlan(default=lv) and the equivalent uniform QuantPolicy
+    walk to identical trees (modulo the kernel-routing flag default)."""
+    cfg = get_config("qwen3-14b-smoke")
+    params = lm.init_params(cfg, KEY)
+    a = quantize_lm(cfg, params, PrecisionPlan(default="w4a8"))
+    from repro.core.versaq import W4A8
+
+    b = quantize_lm(cfg, params, W4A8)
+    la, lb = jax.tree.leaves(a), jax.tree.leaves(b)
+    assert len(la) == len(lb)
+    for x, y in zip(la, lb):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+def test_lm_mixed_plan_with_moe_sites():
+    """Site resolution reaches MoE expert / shared-expert stacks."""
+    cfg = get_config("deepseek-moe-16b-smoke").with_(
+        capacity_factor=float(8)
+    )
+    params = lm.init_params(cfg, KEY)
+    plan = PrecisionPlan(
+        default="w4a8", overrides=(("*.ffn.experts.*", "w8a8"), ("*.mixer.wo", "bf16"))
+    )
+    q = quantize_lm(cfg, params, plan)
+    blk = q["blocks"]["l0"]
+    assert isinstance(blk["ffn"]["experts"]["w_down"], QuantLinear)
+    assert blk["ffn"]["experts"]["w_down"].qw.bits == 8
+    assert isinstance(blk["mixer"]["wo"], dict)  # bf16 passthrough
+    toks = jax.random.randint(KEY, (2, 8), 0, cfg.vocab_size)
+    got, _ = lm.forward(cfg, q, toks)
+    assert bool(jnp.isfinite(got).all())
+
+
+# ---------------------------------------------------------------------------
+# sensitivity planner (acceptance criterion)
+# ---------------------------------------------------------------------------
+
+
+def test_planner_beats_uniform_w4a4_at_equal_bytes():
+    cfg = get_config("vggt-1b-smoke")
+    params = vggt.init_params(cfg, KEY)
+    plan, report = plan_model(cfg, params)
+    w4a4_bytes = uniform_weight_bytes(cfg, params, "w4a4")
+    assert report["weight_bytes"] <= w4a4_bytes * (1 + 1e-9)
+    e_plan = proxy_recon_error(cfg, params, plan)
+    e_w4a4 = proxy_recon_error(cfg, params, W4A4)
+    assert e_plan < e_w4a4, (e_plan, e_w4a4)
+    # and it is a genuinely mixed assignment, not uniform
+    assert len(report["level_counts"]) >= 2, report["level_counts"]
+
+
+def test_planner_respects_latency_budget():
+    cfg = get_config("vggt-1b-smoke")
+    params = vggt.init_params(cfg, KEY)
+    _, report = plan_model(cfg, params)
+    assert report["modeled_latency_s"] <= report["latency_budget_s"] * (1 + 1e-9)
+
+
+def test_planner_opens_high_precision_with_budget():
+    """With unconstrained budgets every site climbs to bf16 (zero error
+    dominates any cost)."""
+    cfg = get_config("vggt-1b-smoke")
+    params = vggt.init_params(cfg, KEY)
+    plan, report = plan_model(
+        cfg, params, weight_bytes_budget=float("inf"), latency_budget_s=float("inf")
+    )
+    assert set(report["assignment"].values()) == {"bf16"}
+
+
+def test_enumerate_sites_weight_bytes_consistency():
+    cfg = get_config("vggt-1b-smoke")
+    params = vggt.init_params(cfg, KEY)
+    sites = enumerate_sites(cfg, params)
+    # n_layers AA pairs, each pair has frame+global blocks stacked
+    assert all(s.count == cfg.n_layers for s in sites)
+    total_elems = sum(s.n_elems for s in sites)
+    by_level = sum(site_weight_bytes(s, "w8a8") for s in sites)
+    assert by_level == total_elems  # 8 bits == 1 byte/elem

@@ -1,0 +1,29 @@
+"""examples/mixed_precision.py must run end-to-end on CPU: plan a tiny
+VGGT, print the bit map, serve one scene per precision tier."""
+import os
+import subprocess
+import sys
+
+from tests.helpers import REPO
+
+
+def test_mixed_precision_example_smoke():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(REPO, "src")
+    env.setdefault("JAX_PLATFORMS", "cpu")
+    r = subprocess.run(
+        [
+            sys.executable,
+            os.path.join(REPO, "examples", "mixed_precision.py"),
+            "--frames", "2", "--patches", "16",
+        ],
+        capture_output=True,
+        text=True,
+        env=env,
+        timeout=480,
+    )
+    assert r.returncode == 0, f"example failed:\nSTDOUT:{r.stdout}\nSTDERR:{r.stderr}"
+    assert "per-site bit map" in r.stdout
+    assert "plan beats w4a4: True" in r.stdout
+    for tier in ("quality", "balanced", "fast"):
+        assert f"tier {tier}" in r.stdout

@@ -37,3 +37,44 @@ def test_case_and_whitespace_tolerant():
 def test_malformed_policy_raises(bad):
     with pytest.raises(ValueError, match="policy"):
         _policy(_args(bad))
+
+
+def _targs(tiers, method="versaq"):
+    return argparse.Namespace(tiers=tiers, method=method)
+
+
+def test_tiers_none_passthrough():
+    from repro.launch.serve import _tiers
+
+    assert _tiers(_targs(None), None, None) is None
+    assert _tiers(_targs(""), None, None) is None
+
+
+def test_tiers_parse_fp_and_uniform():
+    from repro.launch.serve import _tiers
+
+    t = _tiers(_targs("quality=fp, balanced=W4A8"), None, None)
+    assert t == {"quality": None, "balanced": QuantPolicy(4, 8, "versaq")}
+
+
+def test_tiers_parse_plan_runs_planner():
+    import jax
+
+    from repro.configs import get_config
+    from repro.core.precision import PrecisionPlan
+    from repro.launch.serve import _tiers
+    from repro.models import vggt
+
+    cfg = get_config("vggt-1b-smoke")
+    params = vggt.init_params(cfg, jax.random.PRNGKey(0))
+    t = _tiers(_targs("fast=plan"), cfg, params)
+    assert isinstance(t["fast"], PrecisionPlan)
+    assert t["fast"].name == "fast"
+
+
+@pytest.mark.parametrize("bad", ["fast", "=w4a8", "fast=", "fast=w4b8"])
+def test_tiers_malformed_raises(bad):
+    from repro.launch.serve import _tiers
+
+    with pytest.raises(ValueError):
+        _tiers(_targs(bad), None, None)

@@ -72,3 +72,45 @@ def test_moe_grads_flow_to_experts():
     g = jax.grad(lambda pp: jnp.sum(F.moe_ffn(pp, cfg, x) ** 2))(p)
     gnorm = jnp.sqrt(sum(jnp.sum(t**2) for t in jax.tree.leaves(g["experts"])))
     assert float(gnorm) > 0
+
+
+def test_pad_tokens_excluded_from_capacity():
+    """Serving's LEFT-padded prompts must not consume expert capacity:
+    with tight capacity and pad_lens set, real-token logits equal the
+    unpadded forward exactly (pad tokens are masked out of routing, and
+    capacity is computed from the real-token count)."""
+    from repro.models import lm
+
+    cfg = _cfg(capacity_factor=1.0)
+    params = lm.init_params(cfg, KEY)
+    rng = np.random.default_rng(0)
+    L = 12
+    toks = jnp.asarray(rng.integers(0, cfg.vocab_size, (2, L)), jnp.int32)
+    ref, _ = lm.forward(cfg, params, toks)
+    for pad in (4, 7):
+        padded = jnp.pad(toks, ((0, 0), (pad, 0)))
+        got, _ = lm.forward(
+            cfg, params, padded, pad_lens=jnp.asarray([pad, pad], jnp.int32)
+        )
+        err = float(jnp.linalg.norm(got[:, pad:] - ref) / jnp.linalg.norm(ref))
+        assert err < 1e-5, (pad, err)
+
+
+def test_moe_token_mask_zeroes_masked_routing():
+    """Directly at the ffn level: masked tokens receive only the
+    shared-expert output and free their capacity slots for real tokens."""
+    cfg = _cfg(capacity_factor=1e-9, n_shared_experts=0)  # cap=1 per expert
+    p = F.init_moe(KEY, cfg)
+    x = jnp.broadcast_to(
+        jax.random.normal(KEY, (1, 1, cfg.d_model)), (1, 8, cfg.d_model)
+    )  # identical tokens -> identical routing -> one winner per expert
+    mask = jnp.zeros((1, 8), bool).at[0, 5].set(True)  # only token 5 is real
+    y = F.moe_ffn(p, cfg, x, token_mask=mask)
+    # masked tokens: zero routed output; the real token wins its slots
+    np.testing.assert_allclose(np.asarray(y[0, :5]), 0.0, atol=1e-7)
+    np.testing.assert_allclose(np.asarray(y[0, 6:]), 0.0, atol=1e-7)
+    assert float(jnp.linalg.norm(y[0, 5])) > 0
+    # and it matches routing the real token alone
+    alone = F.moe_ffn(p, cfg, x[:, 5:6])
+    np.testing.assert_allclose(np.asarray(y[0, 5]), np.asarray(alone[0, 0]),
+                               rtol=1e-5, atol=1e-6)

@@ -1,0 +1,124 @@
+"""Precision tiers on the serving engines: one engine, ≥3 concurrent
+quantization levels, policy-keyed jit caches (zero warm cross-tier
+recompiles), and tier results identical to single-policy engines.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core.precision import PrecisionPlan
+from repro.core.versaq import W4A8
+from repro.models import lm, vggt
+from repro.serving.engine import Engine
+from repro.serving.vggt_engine import VGGTEngine
+
+KEY = jax.random.PRNGKey(0)
+PLAN = PrecisionPlan(default="w4a8", overrides=(("*.ffn.w_down", "w8a8"),))
+
+
+def _lm_engine(**kw):
+    cfg = get_config("qwen3-14b-smoke")
+    params = lm.init_params(cfg, KEY)
+    return cfg, params, Engine(
+        cfg, params,
+        tiers={"quality": None, "balanced": W4A8, "fast": PLAN},
+        max_len=64, **kw,
+    )
+
+
+def _prompts(cfg, b=2, l=8, seed=0):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.integers(0, cfg.vocab_size, (b, l)), jnp.int32)
+
+
+def test_lm_three_tiers_no_warm_recompiles():
+    cfg, params, eng = _lm_engine()
+    prompts = _prompts(cfg)
+    cold = {t: eng.generate(prompts, 4, tier=t) for t in ("quality", "balanced", "fast")}
+    compiles = eng.stats.compiles
+    assert compiles == 6  # (prefill + decode) × 3 tiers
+    # warm, interleaved across tiers: zero new compiles, identical ids
+    for t in ("fast", "quality", "balanced", "quality", "fast"):
+        np.testing.assert_array_equal(eng.generate(prompts, 4, tier=t), cold[t])
+    assert eng.stats.compiles == compiles
+    # per-tier buckets each compiled exactly once
+    assert all(s.compiles == 1 for s in eng.stats.buckets.values())
+
+
+def test_lm_tier_matches_single_policy_engine():
+    cfg, params, eng = _lm_engine()
+    prompts = _prompts(cfg, seed=3)
+    ref_fp = Engine(cfg, params, max_len=64).generate(prompts, 4)
+    ref_q = Engine(cfg, params, policy=W4A8, max_len=64).generate(prompts, 4)
+    np.testing.assert_array_equal(eng.generate(prompts, 4, tier="quality"), ref_fp)
+    np.testing.assert_array_equal(eng.generate(prompts, 4, tier="balanced"), ref_q)
+
+
+def test_lm_tiers_coalesce_within_tier_only():
+    cfg, params, eng = _lm_engine(max_wait_s=60.0)
+    prompts = _prompts(cfg)
+    r1 = eng.enqueue(prompts[0], 3, tier="quality")
+    r2 = eng.enqueue(prompts[1], 3, tier="fast")
+    assert not r1.ready and not r2.ready
+    assert eng._queue.pending == 2  # same length, different tiers: 2 groups
+    eng.flush()
+    assert r1.ready and r2.ready
+    assert r1.result().shape == (3,)
+
+
+def test_lm_default_tier_and_unknown_tier():
+    cfg, params, eng = _lm_engine()
+    prompts = _prompts(cfg)
+    # default tier = first key ("quality" = fp)
+    assert eng.default_tier == "quality"
+    out = eng.generate(prompts, 2)
+    np.testing.assert_array_equal(out, eng.generate(prompts, 2, tier="quality"))
+    with pytest.raises(KeyError):
+        eng.enqueue(prompts, 2, tier="turbo")
+    with pytest.raises(ValueError):
+        Engine(cfg, params, policy=W4A8, tiers={"a": None})
+
+
+def test_vggt_three_tiers_no_warm_recompiles():
+    cfg = get_config("vggt-1b-smoke")
+    params = vggt.init_params(cfg, KEY)
+    eng = VGGTEngine(
+        cfg, params,
+        tiers={"quality": None, "balanced": W4A8, "fast": PLAN},
+    )
+    scenes = jnp.asarray(
+        np.random.default_rng(1).normal(size=(1, 2, 16, cfg.d_model)), jnp.float32
+    )
+    cold = {t: eng.infer(scenes, tier=t) for t in ("quality", "balanced", "fast")}
+    compiles = eng.stats.compiles
+    assert compiles == 3  # one forward per tier
+    for t in ("fast", "balanced", "quality"):
+        warm = eng.infer(scenes, tier=t)
+        np.testing.assert_allclose(
+            warm["points"], cold[t]["points"], rtol=1e-6, atol=1e-6
+        )
+    assert eng.stats.compiles == compiles
+    # tiers actually differ (fp vs quantized is not a no-op)
+    d = float(jnp.linalg.norm(cold["quality"]["points"] - cold["balanced"]["points"]))
+    assert d > 0
+
+    # quantized-tier result == dedicated single-policy engine
+    ref = VGGTEngine(cfg, params, policy=W4A8).infer(scenes)
+    np.testing.assert_allclose(
+        cold["balanced"]["points"], ref["points"], rtol=1e-6, atol=1e-6
+    )
+
+
+def test_vggt_tier_stats_rows_are_distinct():
+    cfg = get_config("vggt-1b-smoke")
+    params = vggt.init_params(cfg, KEY)
+    eng = VGGTEngine(cfg, params, tiers={"quality": None, "balanced": W4A8})
+    scenes = jnp.zeros((1, 2, 16, cfg.d_model), jnp.float32)
+    eng.infer(scenes, tier="quality")
+    eng.infer(scenes, tier="balanced")
+    names = sorted(str(b) for b in eng.stats.buckets)
+    assert names == ["balanced:b1xs2xp16", "quality:b1xs2xp16"]
+    fmt = eng.stats.format()
+    assert "balanced:" in fmt and "quality:" in fmt
