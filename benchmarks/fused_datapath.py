@@ -1,0 +1,122 @@
+"""Unified-datapath fusion benchmark: fused vs unfused quantized layers.
+
+Measures the paper's §IV-B claim at the metric that actually moves on
+hardware: **Pallas launches per layer** and **intermediate bytes
+materialized in HBM between launches**.  On CPU the kernels run in
+interpret mode, so wall time is structural only — the call counts and
+byte counts are exact and are what CI guards (``run.py --only fused``).
+
+Sites covered (the two hottest in the serving path):
+
+* **gated FFN** (swiglu, w4a8): unfused = 3 ``quant_matmul`` launches +
+  4 fp32 [M, d_ff] intermediates (gate, up, act·gate, WHT) + the
+  re-quantized int8 copy; fused = **1** ``fused_ffn`` launch, zero
+  intermediates.
+* **QKV projection** (w4a8): unfused = 3 launches, each re-running the
+  per-token quantization, + the fp32 normed copy; fused = **1**
+  prologue-carrying ``wqkv`` launch (norm → quantize → 3 matmuls).
+
+The call-count assertions raise (failing the benchmarks-smoke CI job)
+if fusion regresses to multiple launches.
+"""
+import dataclasses
+
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks import common
+from repro.core.versaq import (
+    Epilogue,
+    FusedFFN,
+    Prologue,
+    QuantPolicy,
+    apply_ffn,
+    apply_linear,
+    prepare_linear,
+)
+from repro.kernels import probe
+
+RNG = np.random.default_rng(0)
+
+M, D, DFF = 56, 128, 256  # serving-odd token count; smoke-model dims
+POLICY = QuantPolicy(4, 8, "versaq")
+
+
+def _mk(d_in, d_out):
+    return jnp.asarray(RNG.normal(size=(d_in, d_out)) / np.sqrt(d_in), jnp.float32)
+
+
+def _ffn_pair():
+    """(fused FusedFFN, unfused member dict) for one swiglu layer."""
+    wg, wu, wd = _mk(D, DFF), _mk(D, DFF), _mk(DFF, D)
+    prep = lambda w, **kw: prepare_linear(w, POLICY, use_kernel=True, **kw)
+    gate = prep(wg, rotate_in_offline=True)
+    up = prep(wu, rotate_in_offline=True)
+    down = prep(wd, rotate_input_online=True, rotate_out_offline=True)
+    fused = FusedFFN(w_up=up, w_down=down, w_gate=gate, act="silu", norm="rms")
+    return fused, dict(gate=gate, up=up, down=down)
+
+
+def main():
+    x = jnp.asarray(RNG.normal(size=(M, D)), jnp.float32)
+
+    # ---- gated FFN ----
+    fused, parts = _ffn_pair()
+    with probe.tracking() as log:
+        y_fused = apply_ffn(fused, x)
+    ffn_calls = log.count
+    unfused = FusedFFN(
+        w_up=dataclasses.replace(parts["up"], use_kernel=False),
+        w_down=dataclasses.replace(parts["down"], use_kernel=False),
+        w_gate=dataclasses.replace(parts["gate"], use_kernel=False),
+        act="silu", norm="rms",
+    )
+    y_ref = apply_ffn(unfused, x)  # emulation path: the 3-launch flow's numerics
+    rel = float(jnp.linalg.norm(y_fused - y_ref) / jnp.linalg.norm(y_ref))
+    if ffn_calls != 1:
+        raise RuntimeError(f"fused gated FFN issued {ffn_calls} Pallas calls, want 1")
+    if rel > 1e-2:
+        raise RuntimeError(f"fused FFN diverged from unfused reference: rel={rel}")
+    # unfused intermediates in HBM: gate, up, act·gate, WHT(h) fp32 + int8 requant
+    inter_unfused = 4 * M * DFF * 4 + M * DFF + M * 4
+    us = common.timeit(lambda: apply_ffn(fused, x))
+    common.emit(
+        "fused.ffn_swiglu_w4a8", us,
+        f"pallas_calls=1 vs_unfused=3 rel_err={rel:.1e} "
+        f"inter_bytes=0 vs {inter_unfused}",
+    )
+
+    # ---- QKV projection (merged + norm prologue) ----
+    wq, wk, wv = _mk(D, D), _mk(D, D), _mk(D, D)
+    prep = lambda w: prepare_linear(
+        w, POLICY, rotate_in_offline=True, use_kernel=True
+    )
+    pq, pk, pv = prep(wq), prep(wk), prep(wv)
+    wqkv = prepare_linear(
+        jnp.concatenate([wq, wk, wv], axis=1), POLICY, rotate_in_offline=True,
+        use_kernel=True, prologue=Prologue(norm="rms"), epilogue=Epilogue(),
+    )
+    with probe.tracking() as log:
+        y = apply_linear(wqkv, x)
+    qkv_calls = log.count
+    from repro.core.versaq import folded_norm_stats
+
+    h = folded_norm_stats(x, "rms", None, 1e-6)
+    y_ref = jnp.concatenate([apply_linear(p, h) for p in (pq, pk, pv)], axis=-1)
+    rel = float(jnp.linalg.norm(y - y_ref) / jnp.linalg.norm(y_ref))
+    if qkv_calls != 1:
+        raise RuntimeError(f"fused QKV issued {qkv_calls} Pallas calls, want 1")
+    if rel > 1e-2:
+        raise RuntimeError(f"fused QKV diverged from per-site reference: rel={rel}")
+    # unfused: fp normed copy + 3x re-quantized activations (values+scales)
+    inter_unfused = M * D * 4 + 3 * (M * D + M * 4)
+    us = common.timeit(lambda: apply_linear(wqkv, x))
+    common.emit(
+        "fused.qkv_norm_prologue_w4a8", us,
+        f"pallas_calls=1 vs_unfused=3 rel_err={rel:.1e} "
+        f"inter_bytes=0 vs {inter_unfused}",
+    )
+
+
+if __name__ == "__main__":
+    main()

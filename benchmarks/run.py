@@ -20,6 +20,7 @@ from benchmarks import (
     fig11_ablation,
     fig13_runtime,
     fig14_frames,
+    fused_datapath,
     kernels_micro,
     roofline,
     table1_quant_accuracy,
@@ -33,6 +34,9 @@ MODULES = [
     ("fig13 (runtime reduction)", fig13_runtime),
     ("fig14 (speedup vs S)", fig14_frames),
     ("kernels (micro)", kernels_micro),
+    # NOTE: no "kernels" substring in the title — `--only kernels` must
+    # keep selecting the micro benchmark alone; this point is `--only fused`
+    ("fused datapath (unified)", fused_datapath),
     ("roofline (dry-run table)", roofline),
 ]
 

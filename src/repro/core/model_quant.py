@@ -48,11 +48,18 @@ from typing import Any, Optional
 import jax
 import jax.numpy as jnp
 
+import dataclasses
+
 from repro.configs.base import ModelConfig
 from repro.core import transforms
+from repro.core.quantize import QTensor
 from repro.core.versaq import (
+    Epilogue,
     FoldedNorm,
+    FusedFFN,
     Norm,
+    Prologue,
+    QuantLinear,
     QuantPolicy,
     make_folded_norm,
     prepare_linear,
@@ -68,17 +75,25 @@ class _Resolver:
     """Uniform ``QuantPolicy`` or per-site ``PrecisionPlan`` behind one
     interface.  Duck-typed on ``policy_for`` (a plan) vs ``w_bits`` (a
     policy) so ``core.model_quant`` never imports ``core.precision`` (the
-    planner imports this module for its proxy-error loop)."""
+    planner imports this module for its proxy-error loop).
+
+    ``fuse`` (plan field) turns on the unified-datapath fusion: dense FFN
+    triples become :class:`FusedFFN` (one Pallas launch per layer), Q/K/V
+    merge into one prologue-carrying ``wqkv`` site, and output projections
+    run their IDCT/bias epilogues in-kernel.  Fusion implies kernel
+    routing at the fused sites."""
 
     def __init__(self, policy):
         if hasattr(policy, "policy_for"):  # PrecisionPlan
             self._plan = policy
             self.method = policy.method
-            self.use_kernel = bool(getattr(policy, "use_kernel", False))
+            self.fuse = bool(getattr(policy, "fuse", False))
+            self.use_kernel = bool(getattr(policy, "use_kernel", False)) or self.fuse
         elif isinstance(policy, QuantPolicy):
             self._plan = None
             self._policy = policy
             self.method = policy.method
+            self.fuse = False
             self.use_kernel = False
         else:
             raise TypeError(
@@ -161,6 +176,132 @@ def _norm_g(n: Norm):
 
 def _norm_b(n: Norm):
     return n.b
+
+
+# ---------------------------------------------------------------------------
+# unified-datapath fusion (kernels/fused.py descriptors)
+# ---------------------------------------------------------------------------
+
+
+# The fused kernels keep their weight panels VMEM-resident (they grid
+# over tokens only — kernels/fused.py).  Panels above this budget cannot
+# lower on a ~16MB-VMEM TPU core, so such layers stay on the per-site
+# K-tiled path; shrinking the fused kernels' token tile doesn't help (the
+# weight term dominates), K-tiling them is future work.
+FUSED_PANEL_BUDGET = 8 * 1024 * 1024
+
+
+def _panel_bytes(p: QuantLinear, groups) -> int:
+    """Stored bytes of one layer's weight panel (int8/uint8 = 1 B/elem;
+    stacked scan groups are sliced to one group per launch)."""
+    return int(p.qw.values.size) // (groups or 1)
+
+
+def _same_mode(parts) -> bool:
+    """Sites that can share one kernel launch: all quantized, same
+    activation/weight bits, same packing and online-op flags."""
+    f = parts[0]
+    return all(
+        isinstance(p, QuantLinear)
+        and p.a_bits == f.a_bits
+        and p.qw.bits == f.qw.bits
+        and p.qw.packed == f.qw.packed
+        and p.idct == f.idct
+        and p.dct_block == f.dct_block
+        and p.rotate_input == f.rotate_input
+        for p in parts
+    )
+
+
+def _zeros_bias(p: QuantLinear):
+    return jnp.zeros(p.qw.values.shape[:-2] + (p.qw.values.shape[-1],), jnp.float32)
+
+
+def _concat_sites(parts, *, prologue=None, norm_u=None) -> QuantLinear:
+    """One QuantLinear over the output-concat of separately *prepared*
+    sites (e.g. Q/K/V): they consume the same input, so the per-token
+    activation quantization is computed once and the matmuls become one
+    launch.  Because each site's weights/scales/bias were prepared
+    independently and every per-site output width is DCT-block aligned,
+    the concatenated site is numerically identical to the per-site flow.
+    """
+    f = parts[0]
+    qw = QTensor(
+        values=jnp.concatenate([p.qw.values for p in parts], axis=-1),
+        scale=jnp.concatenate([p.qw.scale for p in parts], axis=-1),
+        bits=f.qw.bits,
+        packed=f.qw.packed,
+        pack_axis=f.qw.pack_axis,
+    )
+    bias = None
+    if any(p.bias is not None for p in parts):
+        bias = jnp.concatenate(
+            [p.bias if p.bias is not None else _zeros_bias(p) for p in parts],
+            axis=-1,
+        )
+    return dataclasses.replace(
+        f, qw=qw, bias=bias, use_kernel=True,
+        prologue=prologue, epilogue=Epilogue(), norm_u=norm_u,
+    )
+
+
+def _norm_u_for(kind: str, dim: int, groups: int | None):
+    """LayerNorm mean-recovery vector for a fused norm prologue (stacked
+    for scan groups); None for RMSNorm."""
+    u = make_folded_norm(kind, dim).u
+    if u is not None and groups is not None:
+        u = jnp.broadcast_to(u, (groups, dim))
+    return u
+
+
+def _fuse_qkv(mx: dict, mn_kind: str, d_model: int, groups, rotated: bool) -> dict:
+    """Merge prepared wq/wk/wv into one ``wqkv`` site with a norm→quantize
+    prologue, and move wo's IDCT/bias epilogue in-kernel."""
+    parts = [mx["wq"], mx["wk"], mx["wv"]]
+    if not _same_mode(parts):
+        return mx  # mixed-precision Q/K/V (or bf16 islands): keep per-site
+    if sum(_panel_bytes(p, groups) for p in parts) > FUSED_PANEL_BUDGET:
+        return mx  # QKV panel would not fit VMEM-resident: keep per-site
+    pro = Prologue(norm=mn_kind) if rotated else None
+    mx["wqkv"] = _concat_sites(
+        parts,
+        prologue=pro,
+        norm_u=_norm_u_for(mn_kind, d_model, groups) if rotated else None,
+    )
+    for name in ("wq", "wk", "wv"):
+        del mx[name]
+    if (
+        isinstance(mx["wo"], QuantLinear)
+        and _panel_bytes(mx["wo"], groups) <= FUSED_PANEL_BUDGET
+    ):
+        mx["wo"] = dataclasses.replace(
+            mx["wo"], use_kernel=True, epilogue=Epilogue()
+        )
+    return mx
+
+
+def _fuse_ffn(f: dict, act: str, fn_kind: str, d_model: int, groups, rotated: bool):
+    """Prepared dense-FFN dict -> :class:`FusedFFN` (one launch per layer)
+    when every member site is quantized compatibly; else unchanged."""
+    gate, up, down = f.get("w_gate"), f.get("w_up"), f.get("w_down")
+    parts = [p for p in (gate, up, down) if p is not None]
+    if not all(isinstance(p, QuantLinear) for p in parts):
+        return f
+    if gate is not None and not _same_mode([gate, up]):
+        return f  # gate/up share one quantized input: bits must agree
+    if up.dct_block != down.dct_block:
+        return f
+    if sum(_panel_bytes(p, groups) for p in parts) > FUSED_PANEL_BUDGET:
+        return f  # gate+up+down panels would not fit VMEM-resident
+    gated_act = "silu" if act == "swiglu" else "gelu"
+    return FusedFFN(
+        w_up=up,
+        w_down=down,
+        w_gate=gate,
+        norm_u=_norm_u_for(fn_kind, d_model, groups) if rotated else None,
+        act=gated_act if gate is not None else "gelu",
+        norm=fn_kind if rotated else None,
+    )
 
 
 def quantize_lm(cfg: ModelConfig, params: dict, policy) -> dict:
@@ -286,6 +427,8 @@ def _quantize_layer(cfg, lp, kind, fk, pol: _Resolver, rotated, *, lead, pfx):
                              bias=lp["mixer"]["wo"].get("b"), out_scale=ls1,
                              head_rot_in=(cfg.n_heads, dh),
                              rotate_out_offline=rotated)
+            if pol.fuse:
+                mx = _fuse_qkv(mx, mn.kind, cfg.d_model, groups, rotated)
         out["mixer"] = mx
         if ls1 is not None:
             out.pop("ls1", None)
@@ -314,6 +457,8 @@ def _quantize_layer(cfg, lp, kind, fk, pol: _Resolver, rotated, *, lead, pfx):
         f["w_down"] = _prep(lp["ffn"]["w_down"]["w"], pol, f"{pfx}.ffn.w_down", lead,
                             bias=lp["ffn"]["w_down"].get("b"), out_scale=ls2,
                             rotate_input_online=True, rotate_out_offline=rotated)
+        if pol.fuse:
+            f = _fuse_ffn(f, cfg.act, fnm.kind, cfg.d_model, groups, rotated)
         out["ffn"] = f
         if ls2 is not None:
             out.pop("ls2", None)
@@ -417,6 +562,8 @@ def quantize_vggt(cfg: ModelConfig, params: dict, policy) -> dict:
                          bias=bp["attn"]["wo"].get("b"),
                          out_scale=bp.get("ls1"), head_rot_in=(cfg.n_heads, dh),
                          rotate_out_offline=rotated)
+        if pol.fuse:
+            at = _fuse_qkv(at, an.kind, cfg.d_model, groups, rotated)
         nb["attn"] = at
         ff = dict(bp["ffn"])
         for name in ("w_gate", "w_up"):
@@ -427,6 +574,8 @@ def quantize_vggt(cfg: ModelConfig, params: dict, policy) -> dict:
         ff["w_down"] = _prep(bp["ffn"]["w_down"]["w"], pol, f"{pfx}.ffn.w_down", 1,
                              bias=bp["ffn"]["w_down"].get("b"), out_scale=bp.get("ls2"),
                              rotate_input_online=True, rotate_out_offline=rotated)
+        if pol.fuse:
+            ff = _fuse_ffn(ff, cfg.act, fn.kind, cfg.d_model, groups, rotated)
         nb["ffn"] = ff
         nb.pop("ls1", None)
         nb.pop("ls2", None)

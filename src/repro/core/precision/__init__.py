@@ -34,6 +34,7 @@ from repro.core.precision.planner import (
     plan_model,
     proxy_recon_error,
     score_sites,
+    site_latency_from_stats,
     uniform_weight_bytes,
 )
 
@@ -48,5 +49,6 @@ __all__ = [
     "plan_model",
     "proxy_recon_error",
     "score_sites",
+    "site_latency_from_stats",
     "uniform_weight_bytes",
 ]

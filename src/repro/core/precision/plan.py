@@ -89,12 +89,19 @@ class PrecisionPlan:
     ``use_kernel`` routes quantized sites through the Pallas
     ``kernels/quant_matmul`` integer kernel instead of the jnp emulation
     (numerics identical; the kernel is the TPU hot path).
+
+    ``fuse`` turns on the unified-datapath kernel fusion
+    (``kernels/fused``): dense FFN triples collapse to one launch per
+    layer, Q/K/V merge into a single prologue-carrying site, and
+    IDCT/bias epilogues run in-kernel.  Implies kernel routing at the
+    fused sites; numerics match the unfused flow (same op order).
     """
 
     default: str = "w4a8"
     overrides: tuple[tuple[str, str], ...] = ()
     method: str = "versaq"
     use_kernel: bool = False
+    fuse: bool = False
     name: str = "mixed"
 
     def __post_init__(self):
@@ -140,6 +147,7 @@ class PrecisionPlan:
                 "method": self.method,
                 "default": self.default,
                 "use_kernel": self.use_kernel,
+                "fuse": self.fuse,
                 "overrides": [list(o) for o in self.overrides],
             },
             indent=2,
@@ -153,6 +161,7 @@ class PrecisionPlan:
             overrides=tuple((p, lv) for p, lv in d.get("overrides", ())),
             method=d.get("method", "versaq"),
             use_kernel=bool(d.get("use_kernel", False)),
+            fuse=bool(d.get("fuse", False)),
             name=d.get("name", "mixed"),
         )
 

@@ -53,6 +53,7 @@ __all__ = [
     "score_sites",
     "plan_model",
     "proxy_recon_error",
+    "site_latency_from_stats",
     "uniform_weight_bytes",
 ]
 
@@ -257,6 +258,56 @@ def uniform_weight_bytes(cfg: ModelConfig, params: dict, level: str) -> float:
     return sum(site_weight_bytes(s, level) for s in enumerate_sites(cfg, params))
 
 
+def site_latency_from_stats(
+    stats,
+    cfg: ModelConfig,
+    params: dict,
+    *,
+    tokens: Optional[int] = None,
+    level: str = "w4a8",
+):
+    """Calibrate the roofline latency model against *measured* serving
+    latencies (ROADMAP "feed ``ServeStats`` back into ``site_latency_s``").
+
+    ``stats`` is an engine's ``serving.batching.ServeStats`` after real
+    traffic: the modeled whole-model latency at ``level`` is rescaled so
+    it equals the measured mean per-item latency, and the returned
+    drop-in ``site_latency_s`` replacement (pass it to
+    :func:`plan_model` via ``site_latency_fn=``) distributes that scale
+    across sites.  Per-site *ratios* still come from the roofline model —
+    serving measures whole forwards, not per-site times — but the budget
+    the planner spends is anchored to reality instead of datasheet
+    peaks.
+
+    ``tokens`` must be the per-item token count of the *measured*
+    traffic, or the scale is off by the workload ratio (which matters
+    whenever an absolute ``latency_budget_s`` is passed to
+    :func:`plan_model`).  Token engines record it: when omitted, the
+    mean served tokens-per-item is taken from ``stats``; engines that do
+    not count tokens (VGGT scenes) require an explicit value.
+    """
+    measured = stats.mean_item_latency_s()
+    if tokens is None:
+        items = sum(s.items for s in stats.buckets.values())
+        toks = sum(s.tokens for s in stats.buckets.values())
+        if not toks:
+            raise ValueError(
+                "stats carry no token counts (scene engine?): pass the "
+                "measured traffic's per-item token count via tokens="
+            )
+        tokens = max(1, round(toks / items))
+    modeled = sum(
+        site_latency_s(s, level, tokens) for s in enumerate_sites(cfg, params)
+    )
+    scale = measured / max(modeled, 1e-30)
+
+    def calibrated(info: SiteInfo, lv: str, toks: int) -> float:
+        return scale * site_latency_s(info, lv, toks)
+
+    calibrated.scale = scale  # exposed for reports/tests
+    return calibrated
+
+
 # ---------------------------------------------------------------------------
 # greedy planning
 # ---------------------------------------------------------------------------
@@ -273,7 +324,9 @@ def plan_model(
     ladder: tuple[str, ...] = LADDER,
     batch: int = 64,
     use_kernel: bool = False,
+    fuse: bool = False,
     name: str = "planned",
+    site_latency_fn=None,
 ) -> tuple[PrecisionPlan, dict]:
     """Plan per-site levels under modeled budgets; returns (plan, report).
 
@@ -281,11 +334,17 @@ def plan_model(
     headroom — the planner can only spend the activation axis and
     whatever latency slack exists), latency capped at 1.25× the uniform
     baseline.  Pass explicit budgets to open up w8a8/bf16 islands.
+
+    ``site_latency_fn`` overrides the roofline :func:`site_latency_s`
+    (same signature) — e.g. :func:`site_latency_from_stats` to anchor the
+    latency budget to measured serving latencies.  ``fuse`` stamps the
+    resulting plan for unified-datapath kernel fusion.
     """
+    latency = site_latency_fn if site_latency_fn is not None else site_latency_s
     scored = score_sites(cfg, params, levels=ladder, method=method, batch=batch)
     base = ladder[0]
     w_total = sum(site_weight_bytes(s.info, base) for s in scored)
-    t_total = sum(site_latency_s(s.info, base, tokens) for s in scored)
+    t_total = sum(latency(s.info, base, tokens) for s in scored)
     w_budget = w_total if weight_bytes_budget is None else weight_bytes_budget
     t_budget = 1.25 * t_total if latency_budget_s is None else latency_budget_s
 
@@ -297,7 +356,7 @@ def plan_model(
         cur, nxt = ladder[li], ladder[li + 1]
         gain = max(s.errors[cur] - s.errors[nxt], 0.0) * s.info.n_elems
         d_w = site_weight_bytes(s.info, nxt) - site_weight_bytes(s.info, cur)
-        d_t = site_latency_s(s.info, nxt, tokens) - site_latency_s(s.info, cur, tokens)
+        d_t = latency(s.info, nxt, tokens) - latency(s.info, cur, tokens)
         cost = max(d_t + d_w / HBM_BW, 1e-15)
         return (-gain / cost, s.info.site, li)
 
@@ -315,8 +374,8 @@ def plan_model(
         new_w = w_total + site_weight_bytes(s.info, nxt) - site_weight_bytes(s.info, cur)
         new_t = (
             t_total
-            + site_latency_s(s.info, nxt, tokens)
-            - site_latency_s(s.info, cur, tokens)
+            + latency(s.info, nxt, tokens)
+            - latency(s.info, cur, tokens)
         )
         if new_w > w_budget * (1 + 1e-9) or new_t > t_budget * (1 + 1e-9):
             continue  # this upgrade never fits; its successors cost more
@@ -335,7 +394,7 @@ def plan_model(
     )
     plan = PrecisionPlan(
         default=default, overrides=overrides, method=method,
-        use_kernel=use_kernel, name=name,
+        use_kernel=use_kernel, fuse=fuse, name=name,
     )
     report = {
         "assignment": assignment,
@@ -344,6 +403,7 @@ def plan_model(
         "weight_bytes_budget": w_budget,
         "modeled_latency_s": t_total,
         "latency_budget_s": t_budget,
+        "latency_scale": getattr(latency, "scale", 1.0),
         "uniform_weight_bytes": {lv: sum(site_weight_bytes(s.info, lv) for s in scored) for lv in ladder},
         "site_errors": {s.info.site: s.errors for s in scored},
     }

@@ -47,8 +47,13 @@ __all__ = [
     "QuantPolicy",
     "QuantLinear",
     "FoldedNorm",
+    "Prologue",
+    "Epilogue",
+    "FusedFFN",
     "apply_linear",
     "apply_norm",
+    "apply_ffn",
+    "carries_norm",
     "prepare_linear",
     "prepare_linear_fp",
     "online_wht",
@@ -86,6 +91,32 @@ W4A8 = QuantPolicy(4, 8, "versaq")
 W4A4 = QuantPolicy(4, 4, "versaq")
 
 
+@dataclasses.dataclass(frozen=True)
+class Prologue:
+    """Unified-datapath prologue descriptor (static, hashable): fold the
+    preceding norm's *statistics* into the site's kernel launch.  The norm
+    runs in FoldedNorm semantics (γ/β already live in the weights); an
+    ``ln`` prologue needs the mean-recovery vector in
+    ``QuantLinear.norm_u``.  The site's ``rotate_input`` WHT and the
+    activation quantization always join the fused pass."""
+
+    norm: Optional[str] = None  # None | rms | ln
+    eps: float = 1e-6
+
+
+@dataclasses.dataclass(frozen=True)
+class Epilogue:
+    """Unified-datapath epilogue descriptor (static, hashable): nonlinear
+    work emitted inside the kernel's finalize step, after the IDCT/bias
+    the site already carries — activation function, blocked WHT toward the
+    next consumer, and optional re-quantization to INT8/INT4 (per-token
+    scales), which makes the kernel emit integer activations directly."""
+
+    act: str = "none"  # none | gelu | silu
+    wht: bool = False
+    requant_bits: Optional[int] = None
+
+
 @jax.tree_util.register_dataclass
 @dataclasses.dataclass(frozen=True)
 class QuantLinear:
@@ -98,6 +129,13 @@ class QuantLinear:
       where the producer couldn't be fused, e.g. the FFN hidden -> down
       projection, paper Fig. 5 "WHT" box).
     - ``idct``: apply the block IDCT to the output (cancels the offline D).
+    - ``prologue``/``epilogue``: unified-datapath fusion descriptors — with
+      ``use_kernel`` set they route the site through the one-launch
+      ``kernels.fused`` path (norm → WHT → quantize → int matmul → IDCT →
+      bias → act → WHT → requant, all in VMEM); without a kernel the same
+      op order runs as the jnp emulation, so numerics don't depend on the
+      backend.  ``norm_u`` carries the LayerNorm mean-recovery vector for
+      an ``ln`` prologue.
     """
 
     qw: QTensor
@@ -111,6 +149,13 @@ class QuantLinear:
     # the jnp emulation.  Numerics are identical; the kernel is the TPU hot
     # path, the emulation the portable/autodiff path.
     use_kernel: bool = dataclasses.field(metadata=dict(static=True), default=False)
+    prologue: Optional[Prologue] = dataclasses.field(
+        metadata=dict(static=True), default=None
+    )
+    epilogue: Optional[Epilogue] = dataclasses.field(
+        metadata=dict(static=True), default=None
+    )
+    norm_u: Optional[jnp.ndarray] = None
 
 
 @jax.tree_util.register_dataclass
@@ -145,6 +190,31 @@ class FoldedNorm:
     eps: float = dataclasses.field(metadata=dict(static=True), default=1e-6)
 
 
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class FusedFFN:
+    """A whole (optionally gated) FFN layer fused onto the unified
+    datapath: one kernel launch runs norm prologue → shared activation
+    quantization → gate/up integer matmuls → ``act(g)·u`` → hidden WHT →
+    re-quantization → down integer matmul → IDCT/biases.
+
+    ``norm`` (rms|ln) means the layer *absorbs* its pre-norm: the model
+    code passes the raw residual stream and skips the external
+    ``apply_norm`` (see :func:`carries_norm`).  ``w_gate`` is None for
+    plain (non-GLU) FFNs.  When the member sites are not kernel-routed the
+    same op order runs as a jnp emulation — which is also the parity
+    reference the fused kernel is tested against.
+    """
+
+    w_up: QuantLinear
+    w_down: QuantLinear
+    w_gate: Optional[QuantLinear] = None
+    norm_u: Optional[jnp.ndarray] = None
+    act: str = dataclasses.field(metadata=dict(static=True), default="gelu")
+    norm: Optional[str] = dataclasses.field(metadata=dict(static=True), default=None)
+    norm_eps: float = dataclasses.field(metadata=dict(static=True), default=1e-6)
+
+
 # ---------------------------------------------------------------------------
 # Online ops
 # ---------------------------------------------------------------------------
@@ -171,17 +241,49 @@ def _int_matmul(xq: QTensor, wq: QTensor, out_dtype) -> jnp.ndarray:
     return out.astype(out_dtype)
 
 
-def _kernel_tiles(m: int, k: int, n: int, packed: bool) -> tuple[int, int, int]:
-    """Largest divisor tiles ≤ the kernel defaults for arbitrary serving
-    shapes (token counts like S·(n_special+P) are rarely tile-aligned)."""
-    from repro.kernels.ops import divisor_tile
+def folded_norm_stats(
+    xf: jnp.ndarray, kind: str, u: Optional[jnp.ndarray], eps: float
+) -> jnp.ndarray:
+    """FoldedNorm statistics (γ/β live in the weights) on f32 inputs —
+    shared by ``apply_norm``, the fused-path emulations, and the Pallas
+    prologue's numerical twin."""
+    if kind == "rms":
+        ms = jnp.mean(xf * xf, axis=-1, keepdims=True)
+        return xf * jax.lax.rsqrt(ms + eps)
+    # LayerNorm statistics recovered in the rotated domain
+    d = xf.shape[-1]
+    mu = jnp.einsum("...d,d->...", xf, u)[..., None]  # mean of unrotated x
+    sq = jnp.mean(xf * xf, axis=-1, keepdims=True)  # E[x²] (rotation-invariant)
+    var = sq - mu * mu
+    # subtract the rotated-domain image of the mean: (μ·1)·H = μ·(1·H) = μ·d·u
+    return (xf - mu * u * d) * jax.lax.rsqrt(var + eps)
 
-    bm = divisor_tile(m, 256)
-    bn = divisor_tile(n, 256)
-    bk = divisor_tile(k, 512)
-    if packed and bk % 2:
-        bk = k  # packed layout needs an even K tile; K itself is even
-    return bm, bn, bk
+
+def _act_fn(y: jnp.ndarray, act: str) -> jnp.ndarray:
+    if act == "gelu":
+        return jax.nn.gelu(y, approximate=True)
+    if act == "silu":
+        return jax.nn.silu(y)
+    assert act == "none", act
+    return y
+
+
+def carries_norm(p: Any) -> bool:
+    """True when a fused site absorbs its pre-norm (the layer code must
+    pass the raw residual stream and skip the external ``apply_norm``)."""
+    if isinstance(p, FusedFFN):
+        return p.norm is not None
+    if isinstance(p, dict) and "wqkv" in p:
+        p = p["wqkv"]
+    return (
+        isinstance(p, QuantLinear)
+        and p.prologue is not None
+        and p.prologue.norm is not None
+    )
+
+
+def _kernel_ready(p: QuantLinear) -> bool:
+    return p.use_kernel and p.qw.bits <= 8 and p.a_bits <= 8
 
 
 def apply_linear(p: Any, x: jnp.ndarray) -> jnp.ndarray:
@@ -191,23 +293,33 @@ def apply_linear(p: Any, x: jnp.ndarray) -> jnp.ndarray:
     ``a_bits`` and the integer matmul on its own weight format — the
     per-site reconfigurability of the paper's PE array: int8, packed
     int4, or (for sites a PrecisionPlan left at bf16) the plain dict
-    path below.  ``use_kernel`` sites route to the Pallas kernel.
+    path below.  ``use_kernel`` sites route to the Pallas kernel; sites
+    with ``prologue``/``epilogue`` descriptors fuse the surrounding
+    nonlinear work into that one launch (``kernels.ops.fused_linear``).
     """
     if isinstance(p, QuantLinear):
         dtype = x.dtype
-        if p.rotate_input:
-            x = online_wht(x)
-        if p.use_kernel and p.qw.bits <= 8 and p.a_bits <= 8:
+        fused = p.prologue is not None or p.epilogue is not None
+        if p.epilogue is not None and p.epilogue.requant_bits is not None:
+            raise ValueError(
+                "requant epilogues return QTensors — call "
+                "kernels.ops.fused_linear directly"
+            )
+        if fused and _kernel_ready(p):
             from repro.kernels import ops as kernel_ops
 
-            m = 1
-            for s in x.shape[:-1]:
-                m *= s
-            kdim = x.shape[-1]
-            bm, bn, bk = _kernel_tiles(m, kdim, p.qw.shape[-1], p.qw.packed)
+            return kernel_ops.fused_linear(x, p).astype(dtype)
+        if p.prologue is not None and p.prologue.norm is not None:
+            x = folded_norm_stats(
+                x.astype(jnp.float32), p.prologue.norm, p.norm_u, p.prologue.eps
+            ).astype(dtype)
+        if p.rotate_input:
+            x = online_wht(x)
+        if _kernel_ready(p):
+            from repro.kernels import ops as kernel_ops
+
             y = kernel_ops.quant_linear_matmul(
-                x, p.qw, a_bits=p.a_bits, out_dtype=jnp.float32,
-                bm=bm, bn=bn, bk=bk,
+                x, p.qw, a_bits=p.a_bits, out_dtype=jnp.float32
             )
         else:
             xq = quantize_per_token(x, p.a_bits)
@@ -217,6 +329,10 @@ def apply_linear(p: Any, x: jnp.ndarray) -> jnp.ndarray:
             y = transforms.apply_blocked(y, d, p.dct_block)  # ŷ·D cancels offline ·Dᵀ
         if p.bias is not None:
             y = y + p.bias.astype(jnp.float32)
+        if p.epilogue is not None:  # emulation twin of the kernel epilogue
+            y = _act_fn(y, p.epilogue.act)
+            if p.epilogue.wht:
+                y = online_wht(y)
         return y.astype(dtype)
     y = jnp.einsum("...k,kn->...n", x, p["w"].astype(x.dtype))
     if p.get("b") is not None:
@@ -224,21 +340,34 @@ def apply_linear(p: Any, x: jnp.ndarray) -> jnp.ndarray:
     return y
 
 
+def apply_ffn(f: FusedFFN, x: jnp.ndarray) -> jnp.ndarray:
+    """Apply a :class:`FusedFFN` — one Pallas launch when every member
+    site is kernel-routed, else the jnp emulation in the exact same op
+    order (the fused kernel's parity reference)."""
+    dtype = x.dtype
+    members = (f.w_up, f.w_down) + (() if f.w_gate is None else (f.w_gate,))
+    if all(_kernel_ready(ql) for ql in members):
+        from repro.kernels import ops as kernel_ops
+
+        return kernel_ops.fused_ffn_apply(x, f).astype(dtype)
+    if f.norm is not None:
+        x = folded_norm_stats(
+            x.astype(jnp.float32), f.norm, f.norm_u, f.norm_eps
+        ).astype(dtype)
+    u = apply_linear(f.w_up, x)
+    if f.w_gate is not None:
+        h = _act_fn(apply_linear(f.w_gate, x), f.act) * u
+    else:
+        h = _act_fn(u, f.act)
+    return apply_linear(f.w_down, h.astype(dtype)).astype(dtype)
+
+
 def apply_norm(p: Any, x: jnp.ndarray) -> jnp.ndarray:
     """Dispatching norm: ``Norm`` (plain) or ``FoldedNorm`` (γ folded away)."""
     dtype = x.dtype
     xf = x.astype(jnp.float32)
     if isinstance(p, FoldedNorm):
-        if p.kind == "rms":
-            ms = jnp.mean(xf * xf, axis=-1, keepdims=True)
-            return (xf * jax.lax.rsqrt(ms + p.eps)).astype(dtype)
-        # LayerNorm statistics recovered in the rotated domain
-        d = xf.shape[-1]
-        mu = jnp.einsum("...d,d->...", xf, p.u)[..., None]  # mean of unrotated x
-        sq = jnp.mean(xf * xf, axis=-1, keepdims=True)  # E[x²] (rotation-invariant)
-        var = sq - mu * mu
-        # subtract the rotated-domain image of the mean: (μ·1)·H = μ·(1·H) = μ·d·u
-        return ((xf - mu * p.u * d) * jax.lax.rsqrt(var + p.eps)).astype(dtype)
+        return folded_norm_stats(xf, p.kind, p.u, p.eps).astype(dtype)
     if p.kind == "rms":
         ms = jnp.mean(xf * xf, axis=-1, keepdims=True)
         y = xf * jax.lax.rsqrt(ms + p.eps)
@@ -339,6 +468,9 @@ def prepare_linear(
     head_rot_out: tuple[int, int] | None = None,
     in_block: int | None = None,
     use_kernel: bool = False,
+    prologue: Optional[Prologue] = None,
+    epilogue: Optional[Epilogue] = None,
+    norm_u: Optional[jnp.ndarray] = None,
 ) -> QuantLinear:
     """Fuse transforms into a [in, out] weight and quantize (Eq. 7).
 
@@ -354,6 +486,8 @@ def prepare_linear(
     ``head_rot_in``/``head_rot_out``: (n_heads, head_dim) per-head Hadamard
     on the input/output side (V/O projections).
     ``use_kernel``: route this site's matmul through the Pallas kernel.
+    ``prologue``/``epilogue``/``norm_u``: unified-datapath fusion
+    descriptors carried onto the prepared layer (see :class:`QuantLinear`).
     """
     w, b, has_bias = _fuse_weight(
         w,
@@ -380,6 +514,9 @@ def prepare_linear(
         rotate_input=policy.use_wht and rotate_input_online,
         idct=idct,
         use_kernel=use_kernel,
+        prologue=prologue,
+        epilogue=epilogue,
+        norm_u=norm_u,
     )
 
 

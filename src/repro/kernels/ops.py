@@ -3,18 +3,45 @@
 These are the entry points the rest of the framework uses.  On CPU (this
 container) they run in interpret mode for validation; on TPU they compile
 to Mosaic.  ``interpret`` defaults from the backend.
+
+Tiling policy (``lane_tile``): serving token counts (S·(n_special+P),
+prompt buckets, odd scene sizes) are rarely multiples of the paper's
+64/2048 tiles.  Exact divisor tiles are used when a lane-aligned one
+exists; otherwise the length is padded to the next lane multiple (masked
+or sliced off) instead of degrading to tile=1 kernels — a prime-sized dim
+used to lower a degenerate one-row-per-step grid.
+
+Every wrapper records its kernel launches with ``kernels.probe`` so tests
+and benchmarks can assert Pallas-call counts (the fused datapath's whole
+point is fewer launches).
 """
 from __future__ import annotations
+
+import warnings
 
 import jax
 import jax.numpy as jnp
 
+from repro.core import transforms
 from repro.core.quantize import QTensor, quantize_per_token
+from repro.kernels import fused as _fused
+from repro.kernels import probe
 from repro.kernels import quant_matmul as _qm
 from repro.kernels import two_stage_attention as _tsa
 from repro.kernels import wht as _wht
 
-__all__ = ["quant_linear_matmul", "two_stage_mha", "online_wht_2d"]
+__all__ = [
+    "quant_linear_matmul",
+    "two_stage_mha",
+    "online_wht_2d",
+    "fused_linear",
+    "fused_ffn_apply",
+    "norm_quant_prologue",
+    "divisor_tile",
+    "lane_tile",
+]
+
+LANE = 8  # sublane granularity the TPU lowerings want tiles aligned to
 
 
 def _default_interpret() -> bool:
@@ -27,28 +54,51 @@ def quant_linear_matmul(
     a_bits: int = 8,
     out_dtype=jnp.float32,
     interpret: bool | None = None,
-    **tile_kw,
+    bm: int | None = None,
+    bn: int | None = None,
+    bk: int | None = None,
 ) -> jnp.ndarray:
     """Quantize activations per-token and run the integer matmul kernel.
 
-    x: [..., K] float -> returns [..., N] ``out_dtype``.
+    x: [..., K] float -> returns [..., N] ``out_dtype``.  The token dim is
+    lane-padded (zero rows, sliced off) when no healthy divisor tile
+    exists; K/N are weight dims and use exact divisors.
     """
     interpret = _default_interpret() if interpret is None else interpret
     lead = x.shape[:-1]
     k = x.shape[-1]
+    n = wq.shape[-1]
     xq = quantize_per_token(x.reshape(-1, k), a_bits)
+    m = xq.values.shape[0]
+    if bm is None:
+        bm, mp = lane_tile(m, _qm.DEFAULT_BM)
+    else:
+        bm = min(bm, m)
+        mp = -(-m // bm) * bm
+    xv, xs = xq.values, xq.scale.astype(jnp.float32)
+    if mp != m:  # zero rows contribute zero outputs; sliced off below
+        xv = jnp.pad(xv, ((0, mp - m), (0, 0)))
+        xs = jnp.pad(xs, ((0, mp - m), (0, 0)), constant_values=1.0)
+    bn = bn if bn is not None else divisor_tile(n, _qm.DEFAULT_BN)
+    if bk is None:
+        bk = divisor_tile(k, _qm.DEFAULT_BK)
+        if wq.packed and bk % 2:
+            bk = k  # packed layout needs an even K tile; K itself is even
     ws = wq.scale.reshape(1, -1).astype(jnp.float32)
+    probe.record("quant_matmul")
     y = _qm.quant_matmul(
-        xq.values,
-        xq.scale.astype(jnp.float32),
+        xv,
+        xs,
         wq.values,
         ws,
         packed=wq.packed,
         out_dtype=out_dtype,
+        bm=bm,
+        bn=bn,
+        bk=bk,
         interpret=interpret,
-        **tile_kw,
     )
-    return y.reshape(lead + (y.shape[-1],))
+    return y[:m].reshape(lead + (y.shape[-1],))
 
 
 def divisor_tile(length: int, target: int) -> int:
@@ -57,11 +107,47 @@ def divisor_tile(length: int, target: int) -> int:
     The model path serves token counts like S·(n_special + P) that are not
     multiples of the paper's 64/2048 tiles; the kernel requires exact
     divisibility, so serving picks the best-fitting divisor per bucket.
+    Prime-ish lengths degrade to tiny tiles — use :func:`lane_tile` on any
+    axis that can be padded instead.
     """
     t = min(target, length)
     while length % t:
         t -= 1
     return t
+
+
+def _aligned_divisor(n: int, target: int, lane: int) -> int:
+    """Largest multiple of ``lane`` ≤ target that divides ``n`` (requires
+    ``lane | n``)."""
+    t = min(target, n)
+    t -= t % lane
+    while t > lane and n % t:
+        t -= lane
+    return t
+
+
+def lane_tile(
+    length: int, target: int, lane: int = LANE, warn_frac: float = 0.125
+) -> tuple[int, int]:
+    """(tile, padded_length): a lane-friendly tile for a paddable axis.
+
+    If a lane-aligned divisor of ``length`` exists the axis stays exact.
+    Otherwise the axis is padded to the next lane multiple and tiled with
+    a lane-aligned divisor of the padded length — a prime-sized dim gets
+    an 8-aligned tile and ≤ 7 pad rows instead of a degenerate tile=1
+    kernel.  Warns when the padding overhead exceeds ``warn_frac``.
+    """
+    if length <= lane:
+        return length, length  # tiny axis: one exact block
+    padded = -(-length // lane) * lane
+    if padded != length and (padded - length) > warn_frac * length:
+        warnings.warn(
+            f"lane_tile: padding dim {length} -> {padded} "
+            f"(+{100.0 * (padded - length) / length:.1f}% > "
+            f"{100.0 * warn_frac:.1f}%); consider bucketing this shape",
+            stacklevel=2,
+        )
+    return _aligned_divisor(padded, target, lane), padded
 
 
 def two_stage_mha(
@@ -77,38 +163,65 @@ def two_stage_mha(
     """Paper-Alg.-1 attention over float [B, H, L, dh] inputs.
 
     Quantizes Q/K per-token and V per-head to int8, then runs the
-    two-stage kernel.  Returns [B, H, Lq, dh] float32.  Tile sizes not
-    passed explicitly default to the largest divisors of Lq/Lk under the
-    paper's T_Q/T_K/T_V.
+    two-stage kernel.  K/V may carry fewer (GQA-shared) heads than Q
+    ([B, Hkv, Lk, dh]); shared heads are indexed inside the kernel grid —
+    they are never broadcast-copied to the full head count.  Returns
+    [B, H, Lq, dh] float32.
+
+    Tile sizes not passed explicitly default to lane-aligned tiles under
+    the paper's T_Q/T_K/T_V, padding Lq (garbage rows sliced off) and Lk
+    (tail keys masked in-kernel via ``kv_len``) when no healthy divisor
+    exists.  Explicitly passed tiles must divide exactly (legacy behavior).
     """
     interpret = _default_interpret() if interpret is None else interpret
     b, h, lq, dh = q.shape
-    lk = k.shape[2]
-    tile_kw.setdefault("bq", divisor_tile(lq, _tsa.T_Q))
-    tile_kw.setdefault("bk", divisor_tile(lk, _tsa.T_K))
-    tile_kw.setdefault("bkv", divisor_tile(lk, _tsa.T_V))
+    hkv, lk = k.shape[1], k.shape[2]
+    assert h % hkv == 0, (h, hkv)
 
-    def flat(t, l):
-        return t.reshape(b * h, l, dh)
+    if "bq" in tile_kw:
+        lqp = lq
+    else:
+        tile_kw["bq"], lqp = lane_tile(lq, _tsa.T_Q)
+    if "bk" in tile_kw or "bkv" in tile_kw:
+        lkp = lk
+        tile_kw.setdefault("bk", divisor_tile(lk, _tsa.T_K))
+        tile_kw.setdefault("bkv", divisor_tile(lk, _tsa.T_V))
+    else:
+        tile_kw["bk"], lkp = lane_tile(lk, _tsa.T_K)
+        tile_kw["bkv"], _ = lane_tile(lk, _tsa.T_V)
 
-    qf, kf, vf = flat(q, lq), flat(k, lk), flat(v, lk)
+    qf = q.reshape(b * h, lq, dh)
+    kf = k.reshape(b * hkv, lk, dh)
+    vf = v.reshape(b * hkv, lk, dh)
+    if lqp != lq:
+        qf = jnp.pad(qf, ((0, 0), (0, lqp - lq), (0, 0)))
+    if lkp != lk:
+        kf = jnp.pad(kf, ((0, 0), (0, lkp - lk), (0, 0)))
+        vf = jnp.pad(vf, ((0, 0), (0, lkp - lk), (0, 0)))
     qq = quantize_per_token(qf, a_bits)
     kq = quantize_per_token(kf, a_bits)
     vmax = jnp.max(jnp.abs(vf), axis=(1, 2), keepdims=True)
     vscale = jnp.maximum(vmax, 1e-8) / 127.0
     vv = jnp.clip(jnp.round(vf / vscale), -127, 127).astype(jnp.int8)
+    # v_scale stays per *query* head ([B·H, 1, 1] scalars — not tensor
+    # traffic, unlike the old K/V broadcast)
+    vscale_q = jnp.repeat(vscale.reshape(b, hkv, 1, 1), h // hkv, axis=1)
+    probe.record("two_stage_mha", 2)  # stage ① + stage ② launches
     out = _tsa.two_stage_attention(
         qq.values,
         qq.scale.astype(jnp.float32),
         kq.values,
         kq.scale.astype(jnp.float32),
         vv,
-        vscale.astype(jnp.float32),
+        vscale_q.reshape(b * h, 1, 1).astype(jnp.float32),
         causal=causal,
         interpret=interpret,
+        q_heads=h if hkv != h else None,
+        kv_heads=hkv if hkv != h else None,
+        kv_len=lk if lkp != lk else None,
         **tile_kw,
     )
-    return out.reshape(b, h, lq, dh)
+    return out[:, :lq].reshape(b, h, lq, dh)
 
 
 def online_wht_2d(x: jnp.ndarray, interpret: bool | None = None, **kw) -> jnp.ndarray:
@@ -116,5 +229,196 @@ def online_wht_2d(x: jnp.ndarray, interpret: bool | None = None, **kw) -> jnp.nd
     interpret = _default_interpret() if interpret is None else interpret
     lead = x.shape[:-1]
     d = x.shape[-1]
+    probe.record("wht")
     y = _wht.wht(x.reshape(-1, d), interpret=interpret, **kw)
     return y.reshape(lead + (d,))
+
+
+# ---------------------------------------------------------------------------
+# unified-datapath wrappers (kernels/fused.py)
+# ---------------------------------------------------------------------------
+
+FUSED_BM = 256
+
+
+def _pad_rows(x2: jnp.ndarray, target: int = FUSED_BM) -> tuple[jnp.ndarray, int, int]:
+    m = x2.shape[0]
+    bm, mp = lane_tile(m, target)
+    if mp != m:
+        x2 = jnp.pad(x2, ((0, mp - m), (0, 0)))
+    return x2, bm, m
+
+
+def _hadamard_for(block: int | None):
+    if block is None:
+        return None, None
+    return transforms.hadamard_matrix(min(block, 128), dtype=jnp.float32), block
+
+
+def fused_linear(x, p, out_dtype=jnp.float32, interpret: bool | None = None):
+    """One-launch QuantLinear apply: prologue (norm → WHT → quantize) +
+    integer matmul + epilogue (IDCT → bias → act → WHT → requant), driven
+    by the layer's ``prologue``/``epilogue`` descriptors
+    (``core.versaq.QuantLinear``).
+
+    ``x``: float [..., K], or a pre-quantized ``QTensor`` (e.g. from
+    :func:`norm_quant_prologue`, shared across several projections).
+    Returns float [..., N], or a per-token-scaled ``QTensor`` when the
+    epilogue requantizes.
+    """
+    interpret = _default_interpret() if interpret is None else interpret
+    pro, epi = p.prologue, p.epilogue
+    prequant = isinstance(x, QTensor)
+    xs = None
+    if prequant:
+        lead = x.values.shape[:-1]
+        k = x.values.shape[-1]
+        x2 = x.values.reshape(-1, k)
+        xs = x.scale.reshape(-1, 1)
+        x2, bm, m = _pad_rows(x2)
+        if xs.shape[0] != x2.shape[0]:
+            xs = jnp.pad(xs, ((0, x2.shape[0] - m), (0, 0)), constant_values=1.0)
+    else:
+        lead = x.shape[:-1]
+        k = x.shape[-1]
+        x2, bm, m = _pad_rows(x.reshape(-1, k))
+    n = p.qw.shape[-1]
+    h_pro, pro_block = _hadamard_for(
+        transforms.block_size_for(k) if (p.rotate_input and not prequant) else None
+    )
+    act = epi.act if epi is not None else "none"
+    requant = epi.requant_bits if epi is not None else None
+    h_epi, epi_block = _hadamard_for(
+        transforms.block_size_for(n) if (epi is not None and epi.wht) else None
+    )
+    dct = transforms.dct_matrix(p.dct_block, dtype=jnp.float32) if p.idct else None
+    probe.record("fused_matmul")
+    out = _fused.fused_matmul(
+        x2,
+        p.qw.values,
+        p.qw.scale.reshape(1, -1),
+        xs=xs,
+        bias=p.bias,
+        norm_u=p.norm_u,
+        h_pro=h_pro,
+        h_epi=h_epi,
+        dct=dct,
+        packed=p.qw.packed,
+        a_bits=p.a_bits,
+        norm_kind=(pro.norm if pro is not None and not prequant else None),
+        norm_eps=(pro.eps if pro is not None else 1e-6),
+        pro_wht_block=pro_block,
+        act=act,
+        epi_wht_block=epi_block,
+        requant_bits=requant,
+        dct_block=(p.dct_block if p.idct else None),
+        out_dtype=out_dtype,
+        bm=bm,
+        interpret=interpret,
+    )
+    if requant is not None:
+        qv, qs = out
+        return QTensor(
+            values=qv[:m].reshape(lead + (n,)),
+            scale=qs[:m].reshape(lead + (1,)),
+            bits=requant,
+        )
+    return out[:m].reshape(lead + (n,))
+
+
+def fused_ffn_apply(x: jnp.ndarray, f, interpret: bool | None = None) -> jnp.ndarray:
+    """The whole gated/plain FFN layer in ONE Pallas launch
+    (``core.versaq.FusedFFN``): norm prologue → shared A-quant → gate/up
+    int matmuls → act·gate → hidden WHT → requant → down int matmul →
+    IDCT/biases.  x: float [..., D] -> [..., d_out]."""
+    interpret = _default_interpret() if interpret is None else interpret
+    lead = x.shape[:-1]
+    d = x.shape[-1]
+    x2, bm, m = _pad_rows(x.reshape(-1, d))
+    wu, wd, wg = f.w_up, f.w_down, f.w_gate
+    dff = wu.qw.shape[-1]
+    n_out = wd.qw.shape[-1]
+    # unrotated-stream flows carry the online WHT on the gate/up inputs
+    # (rotate_input equality between gate and up is a fusion precondition)
+    h_pro, pro_block = _hadamard_for(
+        transforms.block_size_for(d) if wu.rotate_input else None
+    )
+    h_mid, mid_block = _hadamard_for(
+        transforms.block_size_for(dff) if wd.rotate_input else None
+    )
+    dct = (
+        transforms.dct_matrix(wu.dct_block, dtype=jnp.float32)
+        if (wu.idct or wd.idct)
+        else None
+    )
+    probe.record("fused_ffn")
+    y = _fused.fused_ffn(
+        x2,
+        wu.qw.values,
+        wu.qw.scale.reshape(1, -1),
+        wd.qw.values,
+        wd.qw.scale.reshape(1, -1),
+        wg=None if wg is None else wg.qw.values,
+        wgs=None if wg is None else wg.qw.scale.reshape(1, -1),
+        bg=None if wg is None else wg.bias,
+        bu=wu.bias,
+        bd=wd.bias,
+        norm_u=f.norm_u,
+        h_pro=h_pro,
+        h_mid=h_mid,
+        dct=dct,
+        packed_g=bool(wg is not None and wg.qw.packed),
+        packed_u=wu.qw.packed,
+        packed_d=wd.qw.packed,
+        a_bits_in=wu.a_bits,
+        a_bits_mid=wd.a_bits,
+        norm_kind=f.norm,
+        norm_eps=f.norm_eps,
+        act=f.act,
+        pro_wht_block=pro_block,
+        mid_wht_block=mid_block,
+        idct_h=wu.idct,
+        idct_out=wd.idct,
+        dct_block=wu.dct_block,
+        bm=bm,
+        interpret=interpret,
+    )
+    return y[:m].reshape(lead + (n_out,))
+
+
+def norm_quant_prologue(
+    x: jnp.ndarray,
+    *,
+    norm: str | None = None,
+    norm_u: jnp.ndarray | None = None,
+    eps: float = 1e-6,
+    wht: bool = False,
+    a_bits: int = 8,
+    interpret: bool | None = None,
+) -> QTensor:
+    """Fused prologue over float [..., D]: folded-norm statistics →
+    blocked WHT → per-token quantization, one Pallas launch.  Returns a
+    per-token-scaled ``QTensor`` ready for the integer matmul kernels
+    (share it across co-located projections, e.g. Q/K/V)."""
+    interpret = _default_interpret() if interpret is None else interpret
+    lead = x.shape[:-1]
+    d = x.shape[-1]
+    x2, bm, m = _pad_rows(x.reshape(-1, d))
+    h_pro, block = _hadamard_for(transforms.block_size_for(d) if wht else None)
+    probe.record("norm_quant")
+    qv, qs = _fused.norm_quant(
+        x2,
+        norm_u=norm_u,
+        h_pro=h_pro,
+        norm_kind=norm,
+        norm_eps=eps,
+        wht_block=block,
+        a_bits=a_bits,
+        bm=bm,
+        interpret=interpret,
+    )
+    return QTensor(
+        values=qv[:m].reshape(lead + (d,)),
+        scale=qs[:m].reshape(lead + (1,)),
+        bits=a_bits,
+    )

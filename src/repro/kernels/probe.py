@@ -1,0 +1,63 @@
+"""Pallas-call accounting probe.
+
+The unified-datapath work (kernels/fused.py) is judged by *how few* kernel
+launches a layer needs — fused gated-FFN must be exactly one Pallas call
+where the unfused path pays three matmul launches plus fp32 intermediates
+in XLA.  Every public kernel wrapper (``kernels.ops`` / ``kernels.fused``)
+records its launches here, so tests and benchmarks can assert call counts
+without monkeypatching Pallas internals.
+
+Counting happens at the *wrapper* level: one record per logical kernel
+launch issued by a Python-level call.  Under an enclosing ``jax.jit`` the
+wrappers only run at trace time, so count inside eager/interpret code
+(tests, benchmarks) — which is exactly where call-count regressions are
+checked.
+"""
+from __future__ import annotations
+
+import contextlib
+from typing import Optional
+
+__all__ = ["KernelCallLog", "tracking", "record"]
+
+
+class KernelCallLog:
+    """Ordered record of kernel launches seen while ``tracking`` is live."""
+
+    def __init__(self) -> None:
+        self.calls: list[str] = []
+
+    @property
+    def count(self) -> int:
+        return len(self.calls)
+
+    def by_name(self) -> dict[str, int]:
+        out: dict[str, int] = {}
+        for name in self.calls:
+            out[name] = out.get(name, 0) + 1
+        return out
+
+    def reset(self) -> None:
+        self.calls.clear()
+
+
+_active: Optional[KernelCallLog] = None
+
+
+@contextlib.contextmanager
+def tracking():
+    """Collect kernel-launch records; nests (inner log shadows outer)."""
+    global _active
+    prev, log = _active, KernelCallLog()
+    _active = log
+    try:
+        yield log
+    finally:
+        _active = prev
+
+
+def record(name: str, n: int = 1) -> None:
+    """Record ``n`` Pallas launches attributed to ``name`` (no-op when no
+    ``tracking`` context is active)."""
+    if _active is not None:
+        _active.calls.extend([name] * n)

@@ -45,7 +45,8 @@ T_V = 2048
 
 
 def _stage1_kernel(
-    qv_ref, kv_ref, qs_ref, ks_ref, m_ref, l_ref, m_acc, l_acc, *, nk, scale, causal, bq, bk
+    qv_ref, kv_ref, qs_ref, ks_ref, m_ref, l_ref, m_acc, l_acc, *, nk, scale, causal,
+    bq, bk, kv_len
 ):
     j = pl.program_id(2)
 
@@ -61,11 +62,14 @@ def _stage1_kernel(
         preferred_element_type=jnp.int32,
     )
     s = s.astype(jnp.float32) * qs_ref[0] * ks_ref[0].T * scale  # dequant (line 4)
-    if causal:
-        i = pl.program_id(1)
-        rows = i * bq + jax.lax.broadcasted_iota(jnp.int32, s.shape, 0)
+    if causal or kv_len is not None:
         cols = j * bk + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
-        s = jnp.where(rows >= cols, s, NEG_INF)
+        if causal:
+            i = pl.program_id(1)
+            rows = i * bq + jax.lax.broadcasted_iota(jnp.int32, s.shape, 0)
+            s = jnp.where(rows >= cols, s, NEG_INF)
+        if kv_len is not None:  # lane-padding tail keys are not real
+            s = jnp.where(cols < kv_len, s, NEG_INF)
     m_new = jnp.maximum(m_acc[...], s.max(axis=-1, keepdims=True))  # Eq. 8
     l_acc[...] = l_acc[...] * jnp.exp(m_acc[...] - m_new) + jnp.exp(s - m_new).sum(
         axis=-1, keepdims=True
@@ -95,6 +99,7 @@ def _stage2_kernel(
     causal,
     bq,
     bkv,
+    kv_len,
 ):
     j = pl.program_id(2)
 
@@ -110,11 +115,14 @@ def _stage2_kernel(
         preferred_element_type=jnp.int32,
     )
     s = s.astype(jnp.float32) * qs_ref[0] * ks_ref[0].T * scale
-    if causal:
-        i = pl.program_id(1)
-        rows = i * bq + jax.lax.broadcasted_iota(jnp.int32, s.shape, 0)
+    if causal or kv_len is not None:
         cols = j * bkv + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
-        s = jnp.where(rows >= cols, s, NEG_INF)
+        if causal:
+            i = pl.program_id(1)
+            rows = i * bq + jax.lax.broadcasted_iota(jnp.int32, s.shape, 0)
+            s = jnp.where(rows >= cols, s, NEG_INF)
+        if kv_len is not None:
+            s = jnp.where(cols < kv_len, s, NEG_INF)
     # Eq. 10 with the 1/Σ folded into the output scale: exp(s−M) has row max
     # exactly 1, so ⌊127·exp(s−M)⌉ uses the full INT8 range for any Σ
     # (line 11's quant(S) with an optimal per-row scale).
@@ -136,7 +144,10 @@ def _stage2_kernel(
 
 @functools.partial(
     jax.jit,
-    static_argnames=("causal", "scale", "bq", "bk", "bkv", "out_dtype", "interpret"),
+    static_argnames=(
+        "causal", "scale", "bq", "bk", "bkv", "out_dtype", "interpret",
+        "q_heads", "kv_heads", "kv_len",
+    ),
 )
 def two_stage_attention(
     qv: jnp.ndarray,
@@ -153,11 +164,23 @@ def two_stage_attention(
     bkv: int = T_V,
     out_dtype=jnp.float32,
     interpret: bool = False,
+    q_heads: int | None = None,
+    kv_heads: int | None = None,
+    kv_len: int | None = None,
 ) -> jnp.ndarray:
     """Two-stage INT8 attention over [BH, L, dh] int8 tensors.
 
     qv/kv/vv: [BH, L, dh] int8; qs/ks: [BH, L, 1] f32 per-token scales;
     v_scale: [BH, 1, 1] f32 per-head scale.  Returns [BH, Lq, dh] float.
+
+    **GQA**: when ``q_heads``/``kv_heads`` are given, kv/ks/vv carry only
+    ``BHkv = B·kv_heads`` rows and the grid's K/V index maps gather the
+    shared head for each query head — no broadcast copy of K/V to the full
+    head count ever materializes (``v_scale`` stays per *query* head: it
+    is [BH, 1, 1] scalars, not tensor traffic).
+
+    **kv_len**: real key count when L was lane-padded; the kernel masks
+    the tail columns out of both stages' softmax.
     """
     bh, lq, dh = qv.shape
     lk = kv.shape[1]
@@ -167,18 +190,34 @@ def two_stage_attention(
     bkv = min(bkv, lk)
     assert lq % bq == 0 and lk % bk == 0 and lk % bkv == 0
     nq, nk, nkv = lq // bq, lk // bk, lk // bkv
+    if kv_len is not None and kv_len >= lk:
+        kv_len = None  # nothing padded: skip the mask
+
+    if q_heads is not None and kv_heads is not None and q_heads != kv_heads:
+        assert q_heads % kv_heads == 0, (q_heads, kv_heads)
+        assert bh % q_heads == 0 and kv.shape[0] == bh // q_heads * kv_heads
+        g = q_heads // kv_heads
+
+        def kv_row(b):
+            return (b // q_heads) * kv_heads + (b % q_heads) // g
+    else:
+        assert kv.shape[0] == bh, (kv.shape, bh)
+
+        def kv_row(b):
+            return b
 
     # Stage ①: softmax statistics only
     m, l = pl.pallas_call(
         functools.partial(
-            _stage1_kernel, nk=nk, scale=scale, causal=causal, bq=bq, bk=bk
+            _stage1_kernel, nk=nk, scale=scale, causal=causal, bq=bq, bk=bk,
+            kv_len=kv_len,
         ),
         grid=(bh, nq, nk),
         in_specs=[
             pl.BlockSpec((1, bq, dh), lambda b, i, j: (b, i, 0)),
-            pl.BlockSpec((1, bk, dh), lambda b, i, j: (b, j, 0)),
+            pl.BlockSpec((1, bk, dh), lambda b, i, j: (kv_row(b), j, 0)),
             pl.BlockSpec((1, bq, 1), lambda b, i, j: (b, i, 0)),
-            pl.BlockSpec((1, bk, 1), lambda b, i, j: (b, j, 0)),
+            pl.BlockSpec((1, bk, 1), lambda b, i, j: (kv_row(b), j, 0)),
         ],
         out_specs=[
             pl.BlockSpec((1, bq, 1), lambda b, i, j: (b, i, 0)),
@@ -208,14 +247,15 @@ def two_stage_attention(
             causal=causal,
             bq=bq,
             bkv=bkv,
+            kv_len=kv_len,
         ),
         grid=(bh, nq, nkv),
         in_specs=[
             pl.BlockSpec((1, bq, dh), lambda b, i, j: (b, i, 0)),
-            pl.BlockSpec((1, bkv, dh), lambda b, i, j: (b, j, 0)),
-            pl.BlockSpec((1, bkv, dh), lambda b, i, j: (b, j, 0)),
+            pl.BlockSpec((1, bkv, dh), lambda b, i, j: (kv_row(b), j, 0)),
+            pl.BlockSpec((1, bkv, dh), lambda b, i, j: (kv_row(b), j, 0)),
             pl.BlockSpec((1, bq, 1), lambda b, i, j: (b, i, 0)),
-            pl.BlockSpec((1, bkv, 1), lambda b, i, j: (b, j, 0)),
+            pl.BlockSpec((1, bkv, 1), lambda b, i, j: (kv_row(b), j, 0)),
             pl.BlockSpec((1, bq, 1), lambda b, i, j: (b, i, 0)),
             pl.BlockSpec((1, bq, 1), lambda b, i, j: (b, i, 0)),
         ],

@@ -17,8 +17,11 @@ assigned tiers round-robin and only coalesce within their tier):
   PYTHONPATH=src python -m repro.launch.serve --arch vggt-1b-smoke \
       --tiers quality=fp,balanced=w4a8,fast=plan --requests 6
 
-Tier specs: ``fp`` (full precision), ``w<bits>a<bits>`` (uniform), or
-``plan`` (the ``core.precision`` sensitivity planner's mixed plan).
+Tier specs: ``fp`` (full precision), ``w<bits>a<bits>`` (uniform),
+``plan`` (the ``core.precision`` sensitivity planner's mixed plan), and
+``:fused`` variants (``w4a8:fused``, ``plan:fused``) that serve through
+the unified-datapath fused kernels (one Pallas launch per FFN layer,
+merged QKV with in-kernel norm prologue — docs/kernels.md).
 """
 import argparse
 
@@ -31,21 +34,34 @@ from repro.data.pipeline import mixed_len_prompts, scene_batch
 from repro.serving.engine import Engine
 from repro.serving.server import AsyncServer
 
-def _parse_policy(s: str, method: str) -> QuantPolicy | None:
-    """'fp'/'bf16' or 'w<bits>a<bits>' (w4a8, w4a16, ...), via the one
+def _parse_policy(s: str, method: str):
+    """'fp'/'bf16', 'w<bits>a<bits>' (w4a8, w4a16, ...), or
+    'w<bits>a<bits>:fused' (unified-datapath kernel fusion — served as a
+    uniform one-level PrecisionPlan with ``fuse=True``), via the one
     level grammar in ``core.precision.plan`` (a second local regex here
     would drift as the ladder grows)."""
-    from repro.core.precision.plan import level_policy
+    from repro.core.precision.plan import PrecisionPlan, level_policy
 
     s = s.strip().lower()
     if s == "fp":
         return None
+    base, _, suffix = s.partition(":")
+    if suffix and suffix != "fused":
+        raise ValueError(f"policy {s!r}: unknown suffix {suffix!r} (only ':fused')")
     try:
-        return level_policy(s, method)
+        pol = level_policy(base, method)
     except ValueError as e:
         raise ValueError(
-            f"policy {s!r}: expected 'fp' or 'w<bits>a<bits>' (e.g. w4a8, w4a16)"
+            f"policy {s!r}: expected 'fp' or 'w<bits>a<bits>[:fused]' "
+            f"(e.g. w4a8, w4a16, w4a8:fused)"
         ) from e
+    if suffix == "fused":
+        if pol is None:
+            raise ValueError("policy 'bf16:fused': nothing to fuse at full precision")
+        return PrecisionPlan(
+            default=base, method=method, use_kernel=True, fuse=True, name=base
+        )
+    return pol
 
 
 def _policy(args) -> QuantPolicy | None:
@@ -65,10 +81,13 @@ def _tiers(args, cfg, params) -> dict | None:
             raise ValueError(f"--tiers entry {part!r}: expected name=spec")
         if name in tiers:
             raise ValueError(f"--tiers names tier {name!r} twice")
-        if spec == "plan":
+        if spec in ("plan", "plan:fused"):
             from repro.core.precision import plan_model
 
-            plan, report = plan_model(cfg, params, method=args.method, name=name)
+            plan, report = plan_model(
+                cfg, params, method=args.method, name=name,
+                fuse=spec.endswith(":fused"),
+            )
             print(f"tier {name!r}: planned mixed precision "
                   f"{report['level_counts']} "
                   f"({report['weight_bytes']/1e6:.2f}MB modeled weights)")
@@ -149,10 +168,12 @@ def serve_lm(cfg, args) -> None:
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="qwen3-14b-smoke")
-    ap.add_argument("--policy", default="w4a8", help="w<bits>a<bits> (w4a8, w4a16, ...) | fp")
+    ap.add_argument("--policy", default="w4a8",
+                    help="w<bits>a<bits>[:fused] (w4a8, w4a16, w4a8:fused) | fp")
     ap.add_argument("--tiers", default=None,
                     help="serve precision tiers: name=spec[,name=spec...], "
-                         "spec in {fp, w<bits>a<bits>, plan}; overrides --policy")
+                         "spec in {fp, w<bits>a<bits>[:fused], plan[:fused]}; "
+                         "overrides --policy")
     ap.add_argument("--method", default="versaq", help="versaq|quarot|rtn")
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=16)

@@ -229,32 +229,24 @@ def _two_stage_kernel_sdpa(q, k, v, *, causal: bool):
 
     q: [B,Lq,H,dh]; k/v: [B,Lk,Hkv,dh] float (already per-head rotated by
     the VersaQ flow).  Q/K are quantized per token, V per head, inside
-    ``kernels.ops.two_stage_mha``; GQA keys/values are broadcast to the
-    full head count (the kernel works on flat [B·H, L, dh]).
+    ``kernels.ops.two_stage_mha``; GQA-shared K/V heads are indexed inside
+    the kernel grid — never broadcast-copied to the full head count (the
+    old copy materialized H/Hkv× the K/V bytes on long sequences).
 
-    Returns None when no healthy tiling exists — the caller falls back to
-    the jnp emulation rather than driving Mosaic with degenerate tiles:
-    interpret mode (CPU) accepts any divisor ≥ 8; a real TPU lowering
-    additionally requires sublane-aligned (multiple-of-8) tiles."""
+    Untileable lengths are lane-padded by the wrapper (masked in-kernel
+    via ``kv_len``); only truly tiny sequences (< one sublane) fall back
+    to the jnp emulation."""
     from repro.kernels import ops as kernel_ops
-    from repro.kernels import two_stage_attention as _tsa
 
     lq, lk = q.shape[1], k.shape[1]
-    bq = kernel_ops.divisor_tile(lq, _tsa.T_Q)
-    bk = kernel_ops.divisor_tile(lk, _tsa.T_K)
-    bkv = kernel_ops.divisor_tile(lk, _tsa.T_V)
-    if min(bq, bk) < 8:
+    if min(lq, lk) < 8:
         return None
-    if jax.default_backend() == "tpu" and any(t % 8 for t in (bq, bk, bkv)):
-        return None
-    h, hkv = q.shape[2], k.shape[2]
-    qh = jnp.moveaxis(q, 2, 1)
-    kh = jnp.moveaxis(k, 2, 1)
-    vh = jnp.moveaxis(v, 2, 1)
-    if hkv != h:
-        kh = jnp.repeat(kh, h // hkv, axis=1)
-        vh = jnp.repeat(vh, h // hkv, axis=1)
-    o = kernel_ops.two_stage_mha(qh, kh, vh, causal=causal, bq=bq, bk=bk, bkv=bkv)
+    o = kernel_ops.two_stage_mha(
+        jnp.moveaxis(q, 2, 1),
+        jnp.moveaxis(k, 2, 1),
+        jnp.moveaxis(v, 2, 1),
+        causal=causal,
+    )
     return jnp.moveaxis(o, 1, 2)
 
 
@@ -272,10 +264,21 @@ def gqa_attention(
 ) -> tuple[jnp.ndarray, Optional[KVCache]]:
     b, lq, _ = x.shape
     h, hkv, dh = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
-    quantized = isinstance(p["wq"], QuantLinear)
-    q = L.dense(p["wq"], x).reshape(b, lq, h, dh)
-    k = L.dense(p["wk"], x).reshape(b, lq, hkv, dh)
-    v = L.dense(p["wv"], x).reshape(b, lq, hkv, dh)
+    if "wqkv" in p:
+        # unified datapath: one launch runs the absorbed pre-norm (the
+        # caller passed the raw stream — see ``core.versaq.carries_norm``),
+        # the shared per-token quantization and all three projections
+        quantized = isinstance(p["wqkv"], QuantLinear)
+        qkv = L.dense(p["wqkv"], x)
+        q, k, v = jnp.split(qkv, [h * dh, (h + hkv) * dh], axis=-1)
+        q = q.reshape(b, lq, h, dh)
+        k = k.reshape(b, lq, hkv, dh)
+        v = v.reshape(b, lq, hkv, dh)
+    else:
+        quantized = isinstance(p["wq"], QuantLinear)
+        q = L.dense(p["wq"], x).reshape(b, lq, h, dh)
+        k = L.dense(p["wk"], x).reshape(b, lq, hkv, dh)
+        v = L.dense(p["wv"], x).reshape(b, lq, hkv, dh)
     if cfg.qk_norm:
         q = L.norm(p["q_norm"], q)
         k = L.norm(p["k_norm"], k)

@@ -13,6 +13,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
+from repro.core.versaq import FusedFFN, apply_ffn, carries_norm
 from repro.models import layers as L
 
 
@@ -31,6 +32,12 @@ def init_dense_ffn(key, d_model: int, d_ff: int, act: str, dtype=jnp.float32):
 
 
 def dense_ffn(p: dict, act: str, x: jnp.ndarray) -> jnp.ndarray:
+    if isinstance(p, FusedFFN):
+        # unified datapath: the whole layer (norm prologue when
+        # ``carries_norm(p)`` — the caller passes the raw stream —
+        # quantize, gate/up/down matmuls, act·gate, WHT, requant) is one
+        # Pallas launch; see core/versaq.apply_ffn.
+        return apply_ffn(p, x)
     if "w_gate" in p or (not isinstance(p, dict)):
         g = L.dense(p["w_gate"], x)
         u = L.dense(p["w_up"], x)

@@ -169,7 +169,9 @@ def _apply_layer(
     pad_lens=None,
     token_mask=None,
 ):
-    h = L.norm(lp["mixer_norm"], x)
+    # fused sites absorb their pre-norm (unified-datapath prologue): pass
+    # the raw residual stream and let the kernel run the norm statistics
+    h = x if F.carries_norm(lp["mixer"]) else L.norm(lp["mixer_norm"], x)
     new_cache = cache
     if kind == "attn":
         fn = A.mla_attention if cfg.mla else A.gqa_attention
@@ -195,7 +197,7 @@ def _apply_layer(
         out = out * lp["ls1"].astype(out.dtype)
     x = x + out
 
-    h = L.norm(lp["ffn_norm"], x)
+    h = x if F.carries_norm(lp["ffn"]) else L.norm(lp["ffn_norm"], x)
     if fk == "moe":
         out = F.moe_ffn(lp["ffn"], cfg, h, token_mask=token_mask)
     elif fk == "rwkv_channel":

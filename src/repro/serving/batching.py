@@ -253,6 +253,51 @@ class ServeStats:
             key=lambda kv: (type(kv[0]).__name__, kv[0].sizes()),
         )
 
+    # ---- measured-latency export (planner feedback) -------------------
+
+    def measured_latency_s(self) -> dict[str, float]:
+        """Mean measured seconds per call, per bucket (``str(bucket)``
+        keyed) — the serving-side truth the precision planner can
+        calibrate its roofline latency model against
+        (``core.precision.planner.site_latency_from_stats``)."""
+        return {
+            str(b): s.total_s / s.calls
+            for b, s in self._sorted()
+            if s.calls
+        }
+
+    def mean_item_latency_s(self, warm_only: bool = True) -> float:
+        """Measured seconds per served item (the whole-model per-request
+        latency a planner budget is about).
+
+        A request passes through each bucket *kind* at most once (LM:
+        one PrefillBucket + one DecodeBucket; VGGT: one bucket), so the
+        denominator is the per-kind item count — summing across kinds
+        would double-count LM requests and halve the latency.
+
+        ``warm_only`` (default) excludes compile-inflated calls: per
+        bucket, the ``compiles`` largest entries of the latency window
+        are dropped and the warm mean is extrapolated over all calls —
+        first-call jit time would otherwise dominate short traces and
+        mis-calibrate the planner.  Raises when nothing was served.
+        """
+        per_kind: dict[str, int] = {}
+        for b, s in self.buckets.items():
+            k = type(b).__name__
+            per_kind[k] = per_kind.get(k, 0) + s.items
+        items = max(per_kind.values(), default=0)
+        if not items:
+            raise ValueError("no served traffic to export latencies from")
+        total = 0.0
+        for s in self.buckets.values():
+            lats = list(s.latencies_s)
+            if warm_only and s.compiles and len(lats) > s.compiles:
+                warm = sorted(lats)[: len(lats) - s.compiles]
+                total += sum(warm) / len(warm) * s.calls
+            else:
+                total += s.total_s
+        return total / items
+
     def summary(self) -> dict:
         return {str(b): s.summary() for b, s in self._sorted()}
 

@@ -1,0 +1,295 @@
+"""Unified-datapath fused kernels vs the unfused reference flow.
+
+Parity contract: a fused launch (prologue + int matmul + epilogue) must
+match running the same ops unfused — norm via ``apply_norm`` semantics,
+quantize via ``quantize_per_token``, matmul via ``apply_linear``, act in
+XLA — across gelu/silu/swiglu, w8a8/w4a8/w4a4, and odd (lane-padded)
+shapes.  Call counts are asserted with the ``kernels.probe`` log.
+"""
+import dataclasses
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.quantize import quantize_per_token
+from repro.core.versaq import (
+    Epilogue,
+    FusedFFN,
+    Prologue,
+    QuantPolicy,
+    apply_ffn,
+    apply_linear,
+    folded_norm_stats,
+    make_folded_norm,
+    online_wht,
+    prepare_linear,
+)
+from repro.kernels import ops, probe
+
+RNG = np.random.default_rng(11)
+
+
+def _mk(m, k, n=None):
+    x = jnp.asarray(RNG.normal(size=(m, k)), jnp.float32)
+    if n is None:
+        return x
+    w = jnp.asarray(RNG.normal(size=(k, n)) / np.sqrt(k), jnp.float32)
+    return x, w
+
+
+def _rel(a, b):
+    return float(jnp.linalg.norm(a - b) / (jnp.linalg.norm(b) + 1e-12))
+
+
+def _unfuse(ql):
+    return dataclasses.replace(ql, use_kernel=False)
+
+
+# ---------------------------------------------------------------------------
+# fused_linear: prologue + epilogue parity
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("w_bits,a_bits", [(8, 8), (4, 8), (4, 4)])
+@pytest.mark.parametrize("m", [16, 13, 56])  # 13: lane padding path
+def test_fused_linear_norm_prologue_matches_emulation(w_bits, a_bits, m):
+    x, w = _mk(m, 128, 192)
+    bias = jnp.asarray(RNG.normal(size=(192,)), jnp.float32)
+    ql = prepare_linear(
+        w, QuantPolicy(w_bits, a_bits, "versaq"), rotate_in_offline=True,
+        bias=bias, prologue=Prologue(norm="rms"), epilogue=Epilogue(),
+        use_kernel=True,
+    )
+    with probe.tracking() as log:
+        y_ker = apply_linear(ql, x)
+    assert log.by_name() == {"fused_matmul": 1}
+    y_emu = apply_linear(_unfuse(ql), x)
+    assert _rel(y_ker, y_emu) < 1e-5
+
+
+def test_fused_linear_ln_prologue_uses_norm_u():
+    x, w = _mk(24, 128, 128)
+    u = make_folded_norm("ln", 128).u
+    ql = prepare_linear(
+        w, QuantPolicy(4, 8, "versaq"), rotate_in_offline=True,
+        prologue=Prologue(norm="ln"), epilogue=Epilogue(), norm_u=u,
+        use_kernel=True,
+    )
+    y_ker = apply_linear(ql, x)
+    y_emu = apply_linear(_unfuse(ql), x)
+    assert _rel(y_ker, y_emu) < 1e-5
+    # and the emulation itself == external FoldedNorm -> plain site
+    plain = dataclasses.replace(_unfuse(ql), prologue=None, epilogue=None, norm_u=None)
+    y_ext = apply_linear(plain, folded_norm_stats(x, "ln", u, 1e-6))
+    assert _rel(y_emu, y_ext) < 1e-6
+
+
+@pytest.mark.parametrize("act", ["gelu", "silu"])
+@pytest.mark.parametrize("w_bits,a_bits", [(8, 8), (4, 8), (4, 4)])
+def test_fused_epilogue_act_requant(act, w_bits, a_bits):
+    """bias + act + WHT + requantize emitted in-kernel == the unfused
+    quantize→matmul→bias→act→WHT→quantize chain."""
+    x, w = _mk(32, 128, 256)
+    bias = jnp.asarray(RNG.normal(size=(256,)), jnp.float32)
+    ql = prepare_linear(
+        w, QuantPolicy(w_bits, a_bits, "rtn"), bias=bias,
+        epilogue=Epilogue(act=act, wht=True, requant_bits=a_bits),
+        use_kernel=True,
+    )
+    got = ops.fused_linear(x, ql)  # QTensor
+    # unfused reference
+    ref_lin = dataclasses.replace(_unfuse(ql), epilogue=None)
+    y = apply_linear(ref_lin, x)
+    import jax
+
+    y = jax.nn.gelu(y, approximate=True) if act == "gelu" else jax.nn.silu(y)
+    want = quantize_per_token(online_wht(y), a_bits)
+    deq_got = got.values.astype(jnp.float32) * got.scale
+    deq_want = want.values.astype(jnp.float32) * want.scale
+    assert _rel(deq_got, deq_want) < 2e-3
+    assert got.values.dtype == jnp.int8 and got.bits == a_bits
+
+
+def test_requant_epilogue_rejected_on_apply_linear():
+    _, w = _mk(8, 64, 64)
+    ql = prepare_linear(
+        w, QuantPolicy(4, 8, "rtn"),
+        epilogue=Epilogue(requant_bits=8), use_kernel=True,
+    )
+    with pytest.raises(ValueError, match="requant"):
+        apply_linear(ql, jnp.zeros((8, 64), jnp.float32))
+
+
+# ---------------------------------------------------------------------------
+# norm_quant prologue kernel
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("kind", ["rms", "ln"])
+@pytest.mark.parametrize("a_bits", [8, 4])
+def test_norm_quant_matches_reference(kind, a_bits):
+    x = _mk(21, 256)  # odd rows: padding path
+    u = make_folded_norm(kind, 256).u
+    qt = ops.norm_quant_prologue(x, norm=kind, norm_u=u, wht=True, a_bits=a_bits)
+    ref = quantize_per_token(
+        online_wht(folded_norm_stats(x, kind, u, 1e-6)), a_bits
+    )
+    np.testing.assert_array_equal(qt.values, ref.values)
+    np.testing.assert_allclose(qt.scale, ref.scale, rtol=1e-6, atol=1e-9)
+
+
+def test_norm_quant_feeds_fused_matmul_prequantized():
+    """A shared prologue output drives a matmul launch without
+    re-quantization (the multi-consumer QKV pattern)."""
+    x, w = _mk(16, 128, 64)
+    ql = prepare_linear(w, QuantPolicy(8, 8, "rtn"), use_kernel=True,
+                        epilogue=Epilogue())
+    qt = ops.norm_quant_prologue(x, norm="rms", a_bits=8)
+    with probe.tracking() as log:
+        y = ops.fused_linear(qt, ql)
+    assert log.by_name() == {"fused_matmul": 1}
+    want = apply_linear(
+        dataclasses.replace(_unfuse(ql), epilogue=None),
+        folded_norm_stats(x, "rms", None, 1e-6),
+    )
+    assert _rel(y, want) < 1e-5
+
+
+# ---------------------------------------------------------------------------
+# fused gated FFN: one launch, full parity sweep
+# ---------------------------------------------------------------------------
+
+
+def _ffn(act, w_bits, a_bits, d=128, dff=256, norm="rms", method="versaq",
+         bias=False):
+    pol = QuantPolicy(w_bits, a_bits, method)
+    gated = act in ("swiglu", "geglu")
+    bs = (
+        dict(bias=jnp.asarray(RNG.normal(size=(dff,)), jnp.float32))
+        if bias
+        else {}
+    )
+    rotated = method in ("versaq", "quarot")
+    common = dict(rotate_in_offline=rotated, rotate_input_online=not rotated,
+                  use_kernel=True)
+    up = prepare_linear(_mk(1, d, dff)[1], pol, **common, **bs)
+    gate = prepare_linear(_mk(1, d, dff)[1], pol, **common) if gated else None
+    down = prepare_linear(
+        _mk(1, dff, d)[1], pol, rotate_input_online=True,
+        rotate_out_offline=rotated, use_kernel=True,
+    )
+    return FusedFFN(
+        w_up=up, w_down=down, w_gate=gate,
+        act="silu" if act == "swiglu" else "gelu",
+        norm=norm if rotated else None,
+        norm_u=make_folded_norm(norm, d).u if (rotated and norm == "ln") else None,
+    )
+
+
+@pytest.mark.parametrize("act", ["gelu", "geglu", "swiglu"])
+@pytest.mark.parametrize("w_bits,a_bits", [(8, 8), (4, 8), (4, 4)])
+@pytest.mark.parametrize("m", [32, 29])  # 29: odd token count, lane padded
+def test_fused_ffn_single_call_parity(act, w_bits, a_bits, m):
+    f = _ffn(act, w_bits, a_bits)
+    x = _mk(m, 128)
+    with probe.tracking() as log:
+        y_ker = apply_ffn(f, x)
+    assert log.by_name() == {"fused_ffn": 1}, log.calls
+    f_emu = FusedFFN(
+        w_up=_unfuse(f.w_up), w_down=_unfuse(f.w_down),
+        w_gate=None if f.w_gate is None else _unfuse(f.w_gate),
+        norm_u=f.norm_u, act=f.act, norm=f.norm, norm_eps=f.norm_eps,
+    )
+    y_emu = apply_ffn(f_emu, x)
+    # acceptance bound: fused matches the unfused reference within 1e-2
+    assert _rel(y_ker, y_emu) < 1e-2
+    if (w_bits, a_bits) != (4, 4):
+        assert _rel(y_ker, y_emu) < 1e-3
+
+
+def test_fused_ffn_ln_norm_and_bias():
+    f = _ffn("gelu", 4, 8, norm="ln", bias=True)
+    x = _mk(16, 128)
+    y_ker = apply_ffn(f, x)
+    f_emu = FusedFFN(
+        w_up=_unfuse(f.w_up), w_down=_unfuse(f.w_down), w_gate=None,
+        norm_u=f.norm_u, act=f.act, norm=f.norm,
+    )
+    assert _rel(y_ker, apply_ffn(f_emu, x)) < 1e-3
+
+
+def test_fused_ffn_unrotated_stream_input_wht():
+    """versaq on an unrotated stream (hybrid patterns with rwkv): gate/up
+    sites carry the *online* input-side WHT (rotate_input) — the kernel
+    must run it in the prologue, not silently drop it."""
+    pol = QuantPolicy(4, 8, "versaq")
+    up = prepare_linear(_mk(1, 128, 256)[1], pol, rotate_input_online=True,
+                        use_kernel=True)
+    gate = prepare_linear(_mk(1, 128, 256)[1], pol, rotate_input_online=True,
+                          use_kernel=True)
+    down = prepare_linear(_mk(1, 256, 128)[1], pol, rotate_input_online=True,
+                          use_kernel=True)
+    assert up.rotate_input and down.rotate_input
+    f = FusedFFN(w_up=up, w_down=down, w_gate=gate, act="silu", norm=None)
+    x = _mk(16, 128)
+    y_ker = apply_ffn(f, x)
+    f_emu = FusedFFN(
+        w_up=_unfuse(up), w_down=_unfuse(down), w_gate=_unfuse(gate),
+        act="silu", norm=None,
+    )
+    assert _rel(y_ker, apply_ffn(f_emu, x)) < 1e-3
+
+
+def test_fused_ffn_rtn_no_norm_absorption():
+    """rtn (unrotated) fuses quantize+matmuls but not the norm — the
+    caller still applies its own norm; parity against the emulation."""
+    f = _ffn("swiglu", 4, 8, method="rtn")
+    assert f.norm is None
+    x = _mk(16, 128)
+    f_emu = FusedFFN(
+        w_up=_unfuse(f.w_up), w_down=_unfuse(f.w_down),
+        w_gate=_unfuse(f.w_gate), act=f.act, norm=None,
+    )
+    assert _rel(apply_ffn(f, x), apply_ffn(f_emu, x)) < 1e-3
+
+
+# ---------------------------------------------------------------------------
+# lane_tile (divisor-tile pathology fix)
+# ---------------------------------------------------------------------------
+
+
+def test_lane_tile_exact_when_aligned_divisor_exists():
+    assert ops.lane_tile(56, 256) == (56, 56)
+    assert ops.lane_tile(96, 64) == (48, 96)
+    assert ops.lane_tile(1024, 256) == (256, 1024)
+
+
+def test_lane_tile_pads_prime_dims_instead_of_tile1():
+    tile, padded = ops.lane_tile(1009, 256)  # prime: old divisor_tile -> 1
+    assert padded == 1016 and padded % tile == 0 and tile % 8 == 0
+    assert tile > 1
+
+
+def test_lane_tile_warns_above_threshold():
+    with pytest.warns(UserWarning, match="padding dim"):
+        ops.lane_tile(13, 64)  # 13 -> 16 is +23%
+    import warnings
+
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")
+        ops.lane_tile(1009, 256)  # +0.7%: silent
+
+
+def test_quant_linear_matmul_pads_odd_token_counts():
+    from repro.core.quantize import quantize_weight
+    from repro.kernels import ref
+
+    x, w = _mk(37, 128, 64)  # 37 is prime
+    wq = quantize_weight(w, 4)
+    got = ops.quant_linear_matmul(x, wq, a_bits=8, interpret=True)
+    xq = quantize_per_token(x, 8)
+    want = ref.quant_matmul_ref(
+        xq.values, xq.scale, wq.values, wq.scale.reshape(1, -1), packed=True
+    )
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)

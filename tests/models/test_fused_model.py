@@ -1,0 +1,138 @@
+"""Fused (unified-datapath) model trees vs the unfused quantized flow.
+
+``PrecisionPlan(fuse=True)`` must produce a tree that (a) matches the
+unfused tree's outputs within the acceptance bound, (b) issues exactly
+one Pallas launch per dense FFN layer and one per merged QKV site, and
+(c) degrades gracefully: sites a plan leaves at bf16 or mismatched bits
+stay on the per-site path.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core.model_quant import quantize_lm, quantize_vggt
+from repro.core.precision import PrecisionPlan
+from repro.core.versaq import FusedFFN, QuantLinear, W4A8, carries_norm
+from repro.kernels import probe
+from repro.models import lm, vggt
+
+KEY = jax.random.PRNGKey(0)
+RNG = np.random.default_rng(5)
+
+
+def _rel(a, b):
+    return float(jnp.linalg.norm(a - b) / (jnp.linalg.norm(b) + 1e-9))
+
+
+@pytest.fixture(scope="module")
+def vggt_setup():
+    cfg = get_config("vggt-1b-smoke")
+    params = vggt.init_params(cfg, KEY)
+    x = jnp.asarray(RNG.normal(size=(1, 2, 24, cfg.d_model)), jnp.float32)
+    return cfg, params, x
+
+
+@pytest.fixture(scope="module")
+def lm_setup():
+    cfg = get_config("qwen3-14b-smoke")
+    params = lm.init_params(cfg, KEY)
+    toks = jnp.asarray(RNG.integers(0, cfg.vocab_size, (2, 16)), jnp.int32)
+    return cfg, params, toks
+
+
+def test_vggt_fused_matches_unfused(vggt_setup):
+    cfg, params, x = vggt_setup
+    ref = vggt.forward(cfg, quantize_vggt(cfg, params, W4A8), x)
+    fp = quantize_vggt(cfg, params, PrecisionPlan(default="w4a8", fuse=True))
+    with probe.tracking() as log:
+        got = vggt.forward(cfg, fp, x)
+    # per scanned AA pair: 2 blocks × (wqkv + wo) fused_matmul + 2 fused_ffn
+    assert log.by_name() == {"fused_matmul": 4, "fused_ffn": 2}
+    for k in ("points", "depth", "pose", "tokens"):
+        assert _rel(got[k], ref[k]) < 1e-2, k
+
+
+def test_vggt_fused_tree_structure(vggt_setup):
+    cfg, params, _ = vggt_setup
+    fp = quantize_vggt(cfg, params, PrecisionPlan(default="w4a8", fuse=True))
+    for blk in ("frame", "global"):
+        at = fp["blocks"][blk]["attn"]
+        assert "wqkv" in at and "wq" not in at
+        assert isinstance(at["wqkv"], QuantLinear)
+        assert at["wqkv"].prologue is not None  # absorbed LayerNorm
+        assert at["wqkv"].norm_u is not None  # ln mean-recovery vector
+        assert carries_norm(at)
+        ff = fp["blocks"][blk]["ffn"]
+        assert isinstance(ff, FusedFFN) and ff.norm == "ln"
+        assert carries_norm(ff)
+
+
+def test_lm_fused_matches_unfused(lm_setup):
+    cfg, params, toks = lm_setup
+    ref, _ = lm.forward(cfg, quantize_lm(cfg, params, W4A8), toks)
+    fq = quantize_lm(cfg, params, PrecisionPlan(default="w4a8", fuse=True))
+    with probe.tracking() as log:
+        got, _ = lm.forward(cfg, fq, toks)
+    counts = log.by_name()
+    assert counts["fused_ffn"] >= 1 and counts["fused_matmul"] >= 1
+    assert _rel(got, ref) < 1e-2
+
+
+def test_lm_fused_decode_matches_unfused(lm_setup):
+    """The fused tree serves the prefill+decode cache path (decode rows
+    are lane-padded inside the kernels)."""
+    cfg, params, toks = lm_setup
+    uq = quantize_lm(cfg, params, W4A8)
+    fq = quantize_lm(cfg, params, PrecisionPlan(default="w4a8", fuse=True))
+
+    def gen(p):
+        cache = lm.init_cache(cfg, toks.shape[0], 32)
+        logits, cache = lm.forward(cfg, p, toks, cache=cache, mode="prefill")
+        tok = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
+        out = [tok]
+        for _ in range(3):
+            logits, cache = lm.decode_step(cfg, p, tok, cache)
+            tok = jnp.argmax(logits[:, 0], axis=-1).astype(jnp.int32)
+            out.append(tok)
+        return jnp.stack(out, 1)
+
+    np.testing.assert_array_equal(gen(fq), gen(uq))
+
+
+def test_mixed_bits_fall_back_to_per_site(lm_setup):
+    """A plan that splits Q/K/V across levels (or leaves the FFN mixed)
+    cannot share one launch — the walker keeps the per-site tree."""
+    cfg, params, toks = lm_setup
+    plan = PrecisionPlan(
+        default="w4a8", fuse=True,
+        overrides=(("*.mixer.wq", "w8a8"), ("*.ffn.w_gate", "bf16")),
+    )
+    fq = quantize_lm(cfg, params, plan)
+    mx = fq["blocks"]["l0"]["mixer"]
+    assert "wqkv" not in mx and isinstance(mx["wk"], QuantLinear)
+    ff = fq["blocks"]["l0"]["ffn"]
+    assert not isinstance(ff, FusedFFN)  # bf16 gate: no shared int launch
+    got, _ = lm.forward(cfg, fq, toks)
+    assert bool(jnp.all(jnp.isfinite(got)))
+
+
+def test_oversize_panels_fall_back_to_per_site(lm_setup, monkeypatch):
+    """Fused kernels keep weight panels VMEM-resident; layers whose
+    panels exceed the budget must stay on the K-tiled per-site path."""
+    from repro.core import model_quant
+
+    cfg, params, toks = lm_setup
+    monkeypatch.setattr(model_quant, "FUSED_PANEL_BUDGET", 1)  # force over
+    fq = quantize_lm(cfg, params, PrecisionPlan(default="w4a8", fuse=True))
+    mx = fq["blocks"]["l0"]["mixer"]
+    assert "wqkv" not in mx
+    assert mx["wo"].epilogue is None
+    assert not isinstance(fq["blocks"]["l0"]["ffn"], FusedFFN)
+
+
+def test_fused_plan_json_roundtrip():
+    plan = PrecisionPlan(default="w4a8", fuse=True, use_kernel=True)
+    back = PrecisionPlan.from_json(plan.to_json())
+    assert back.fuse and back.use_kernel

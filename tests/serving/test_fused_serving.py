@@ -1,0 +1,143 @@
+"""Fused-datapath precision tiers on the serving engines, and the
+measured-latency feedback hook into the precision planner."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core.precision import PrecisionPlan, plan_model, site_latency_from_stats
+from repro.core.versaq import W4A8
+from repro.models import lm, vggt
+from repro.serving import batching
+from repro.serving.engine import Engine
+from repro.serving.vggt_engine import VGGTEngine
+
+KEY = jax.random.PRNGKey(0)
+FUSED = PrecisionPlan(default="w4a8", fuse=True, name="fused")
+
+
+def _rel(a, b):
+    return float(jnp.linalg.norm(a - b) / (jnp.linalg.norm(b) + 1e-9))
+
+
+def test_vggt_fused_tier_serves_and_stays_warm():
+    cfg = get_config("vggt-1b-smoke")
+    params = vggt.init_params(cfg, KEY)
+    eng = VGGTEngine(
+        cfg, params, tiers={"balanced": W4A8, "fused": FUSED}, max_batch=2
+    )
+    rng = np.random.default_rng(0)
+    scenes = jnp.asarray(rng.normal(size=(1, 2, 24, cfg.d_model)), jnp.float32)
+    out_f = eng.infer(scenes, tier="fused")
+    out_u = eng.infer(scenes, tier="balanced")
+    assert _rel(out_f["points"], out_u["points"]) < 1e-2
+    compiles = eng.stats.compiles
+    assert compiles == 2  # one per tier
+    # warm fused traffic: zero recompiles, identical result
+    again = eng.infer(scenes, tier="fused")
+    np.testing.assert_array_equal(np.asarray(again["pose"]), np.asarray(out_f["pose"]))
+    assert eng.stats.compiles == compiles
+
+
+def test_lm_fused_tier_matches_unfused_ids():
+    cfg = get_config("qwen3-14b-smoke")
+    params = lm.init_params(cfg, KEY)
+    eng = Engine(
+        cfg, params, tiers={"balanced": W4A8, "fused": FUSED}, max_len=64
+    )
+    rng = np.random.default_rng(3)
+    prompts = jnp.asarray(rng.integers(0, cfg.vocab_size, (2, 8)), jnp.int32)
+    ids_f = eng.generate(prompts, 4, tier="fused")
+    ids_u = eng.generate(prompts, 4, tier="balanced")
+    np.testing.assert_array_equal(ids_f, ids_u)
+    compiles = eng.stats.compiles
+    np.testing.assert_array_equal(eng.generate(prompts, 4, tier="fused"), ids_f)
+    assert eng.stats.compiles == compiles  # warm fused bucket
+
+
+# ---------------------------------------------------------------------------
+# ServeStats -> planner.site_latency_s feedback
+# ---------------------------------------------------------------------------
+
+
+import dataclasses as _dc
+
+
+@_dc.dataclass(frozen=True)
+class _Bkt(batching.Bucket):
+    batch: int
+    AXES = ("b",)
+
+
+def _stats_with(total_s: float, items: int, calls: int = 1):
+    stats = batching.ServeStats()
+    s = stats.bucket(_Bkt(batch=items))
+    s.total_s, s.items, s.calls = total_s, items, calls
+    return stats
+
+
+def test_serve_stats_latency_export():
+    stats = _stats_with(total_s=2.0, items=4, calls=2)
+    assert stats.mean_item_latency_s() == pytest.approx(0.5)
+    (per_bucket,) = stats.measured_latency_s().values()
+    assert per_bucket == pytest.approx(1.0)
+    with pytest.raises(ValueError, match="no served traffic"):
+        batching.ServeStats().mean_item_latency_s()
+
+
+@_dc.dataclass(frozen=True)
+class _Bkt2(batching.Bucket):
+    batch: int
+    AXES = ("b",)
+
+
+def test_mean_item_latency_counts_requests_once_per_kind():
+    """LM requests land in BOTH a prefill and a decode bucket — the
+    per-request denominator must not double-count them."""
+    stats = batching.ServeStats()
+    pre = stats.bucket(_Bkt(batch=4))   # "prefill" kind
+    dec = stats.bucket(_Bkt2(batch=4))  # "decode" kind
+    pre.total_s, pre.items, pre.calls = 1.0, 4, 1
+    dec.total_s, dec.items, dec.calls = 3.0, 4, 1
+    # 4 requests took 4.0s total -> 1.0 s/request (NOT 4.0/8)
+    assert stats.mean_item_latency_s() == pytest.approx(1.0)
+
+
+def test_mean_item_latency_excludes_compile_calls():
+    """First-call jit time must not dominate the calibration: the
+    compile-inflated window entries are dropped and the warm mean is
+    extrapolated."""
+    stats = batching.ServeStats()
+    s = stats.bucket(_Bkt(batch=1))
+    s.compiles, s.calls, s.items = 1, 3, 3
+    s.latencies_s.extend([10.0, 0.1, 0.1])  # cold compile + 2 warm calls
+    s.total_s = 10.2
+    assert stats.mean_item_latency_s() == pytest.approx(0.1, rel=1e-6)
+    assert stats.mean_item_latency_s(warm_only=False) == pytest.approx(10.2 / 3)
+
+
+def test_planner_consumes_measured_latencies():
+    """site_latency_from_stats rescales the roofline model so the modeled
+    whole-model latency equals the measured per-item latency, and
+    plan_model's budget accounting follows the override."""
+    cfg = get_config("vggt-1b-smoke")
+    params = vggt.init_params(cfg, KEY)
+    base_plan, base_rep = plan_model(cfg, params, tokens=256)
+
+    stats = _stats_with(total_s=10.0, items=2)  # 5 s/item: far above roofline
+    # scene stats carry no token counts: the measured workload size must
+    # be explicit, or the calibration scale would be workload-ratio wrong
+    with pytest.raises(ValueError, match="token"):
+        site_latency_from_stats(stats, cfg, params)
+    lat = site_latency_from_stats(stats, cfg, params, tokens=256)
+    assert lat.scale > 1.0
+    plan, rep = plan_model(cfg, params, tokens=256, site_latency_fn=lat)
+    assert rep["latency_scale"] == pytest.approx(lat.scale)
+    # modeled totals scale with the calibration; budgets stay proportional
+    assert rep["modeled_latency_s"] == pytest.approx(
+        base_rep["modeled_latency_s"] * lat.scale, rel=1e-6
+    )
+    # pure rescaling preserves relative upgrade costs -> same assignment
+    assert rep["assignment"] == base_rep["assignment"]
+    assert plan.overrides == base_plan.overrides
