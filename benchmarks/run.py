@@ -23,6 +23,7 @@ from benchmarks import (
     fused_datapath,
     kernels_micro,
     roofline,
+    serve_continuous_bench,
     table1_quant_accuracy,
 )
 
@@ -37,6 +38,7 @@ MODULES = [
     # NOTE: no "kernels" substring in the title — `--only kernels` must
     # keep selecting the micro benchmark alone; this point is `--only fused`
     ("fused datapath (unified)", fused_datapath),
+    ("continuous (serve scheduler)", serve_continuous_bench),
     ("roofline (dry-run table)", roofline),
 ]
 

@@ -35,33 +35,21 @@ from repro.serving.engine import Engine
 from repro.serving.server import AsyncServer
 
 def _parse_policy(s: str, method: str):
-    """'fp'/'bf16', 'w<bits>a<bits>' (w4a8, w4a16, ...), or
-    'w<bits>a<bits>:fused' (unified-datapath kernel fusion — served as a
-    uniform one-level PrecisionPlan with ``fuse=True``), via the one
-    level grammar in ``core.precision.plan`` (a second local regex here
-    would drift as the ladder grows)."""
-    from repro.core.precision.plan import PrecisionPlan, level_policy
+    """Thin wrapper over :class:`repro.launch.specs.ServeSpec` — one
+    shared grammar for ``--policy`` and ``--tiers`` values instead of
+    the launcher's old ad-hoc string slicing."""
+    from repro.launch.specs import ServeSpec
 
-    s = s.strip().lower()
-    if s == "fp":
-        return None
-    base, _, suffix = s.partition(":")
-    if suffix and suffix != "fused":
-        raise ValueError(f"policy {s!r}: unknown suffix {suffix!r} (only ':fused')")
     try:
-        pol = level_policy(base, method)
+        spec = ServeSpec.parse(s, method)
     except ValueError as e:
+        raise ValueError(f"policy {s!r}: {e}") from e
+    if spec.level == "plan":
         raise ValueError(
-            f"policy {s!r}: expected 'fp' or 'w<bits>a<bits>[:fused]' "
-            f"(e.g. w4a8, w4a16, w4a8:fused)"
-        ) from e
-    if suffix == "fused":
-        if pol is None:
-            raise ValueError("policy 'bf16:fused': nothing to fuse at full precision")
-        return PrecisionPlan(
-            default=base, method=method, use_kernel=True, fuse=True, name=base
+            f"policy {s!r}: 'plan' is only valid in --tiers "
+            f"(the planner needs named tiers + weights)"
         )
-    return pol
+    return spec.materialize()
 
 
 def _policy(args) -> QuantPolicy | None:
@@ -69,32 +57,18 @@ def _policy(args) -> QuantPolicy | None:
 
 
 def _tiers(args, cfg, params) -> dict | None:
-    """Parse ``--tiers name=spec,...``; ``plan`` runs the sensitivity
-    planner on the freshly-initialized weights."""
-    if not args.tiers:
-        return None
-    tiers: dict[str, object] = {}
-    for part in args.tiers.split(","):
-        name, _, spec = part.partition("=")
-        name, spec = name.strip(), spec.strip().lower()
-        if not name or not spec:
-            raise ValueError(f"--tiers entry {part!r}: expected name=spec")
-        if name in tiers:
-            raise ValueError(f"--tiers names tier {name!r} twice")
-        if spec in ("plan", "plan:fused"):
-            from repro.core.precision import plan_model
+    """Parse ``--tiers name=spec,...`` via ``ServeSpec.parse_tiers``;
+    ``plan`` runs the sensitivity planner on the freshly-initialized
+    weights (reported to stdout)."""
+    from repro.launch.specs import ServeSpec
 
-            plan, report = plan_model(
-                cfg, params, method=args.method, name=name,
-                fuse=spec.endswith(":fused"),
-            )
-            print(f"tier {name!r}: planned mixed precision "
-                  f"{report['level_counts']} "
-                  f"({report['weight_bytes']/1e6:.2f}MB modeled weights)")
-            tiers[name] = plan
-        else:
-            tiers[name] = _parse_policy(spec, args.method)
-    return tiers
+    specs = ServeSpec.parse_tiers(args.tiers, args.method)
+    if specs is None:
+        return None
+    return {
+        name: spec.materialize(cfg, params, name=name, verbose=True)
+        for name, spec in specs.items()
+    }
 
 
 def _tier_cycle(tiers: dict | None, n: int) -> list[str | None]:
@@ -150,13 +124,17 @@ def serve_lm(cfg, args) -> None:
         max_len=args.prompt_len + args.gen,
         max_batch=args.batch,
         max_wait_s=args.max_wait_s,
+        mode=args.mode,
     )
     # mixed-length traffic (full + non-pow2 short prompts) exercises the
     # masked length-padded bucket variants alongside warm bucket reuse
     prompts = mixed_len_prompts(cfg.vocab_size, args.requests, args.prompt_len)
     assign = _tier_cycle(tiers, len(prompts))
     with AsyncServer(eng) as srv:
-        reqs = [srv.submit(p, args.gen, tier=t) for p, t in zip(prompts, assign)]
+        reqs = [
+            srv.submit(p, args.gen, tier=t, deadline_s=args.deadline_s)
+            for p, t in zip(prompts, assign)
+        ]
         outs = [srv.result(r, timeout=600) for r in reqs]
     print(f"served {len(outs)} requests -> {sum(o.shape[-1] for o in outs)} tokens")
     print(f"prefill {eng.stats.prefill_s*1e3:.1f}ms  "
@@ -180,6 +158,12 @@ def main():
     ap.add_argument("--gen", type=int, default=32)
     ap.add_argument("--max-wait-s", type=float, default=0.005,
                     help="micro-batch deadline driven by the async loop")
+    ap.add_argument("--mode", default="auto",
+                    help="LM scheduler: auto | continuous (slot-based "
+                         "continuous batching) | bucket (drain-then-refill)")
+    ap.add_argument("--deadline-s", type=float, default=None,
+                    help="per-request SLA: evict (fail) requests not "
+                         "served within this many seconds")
     # vggt serving
     ap.add_argument("--requests", type=int, default=4)
     ap.add_argument("--scenes", type=int, default=2, help="scenes per request")

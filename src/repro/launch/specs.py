@@ -361,3 +361,134 @@ def reduced_cfg(cfg: ModelConfig, n_groups: int) -> ModelConfig:
     the group count)."""
     period = len(cfg.pattern)
     return cfg.with_(n_layers=cfg.first_dense + n_groups * period)
+
+
+# --- serving precision specs -------------------------------------------------
+
+SERVE_SPEC_GRAMMAR = (
+    "fp | w<bits>a<bits>[:fused] | plan[:fused] "
+    "(e.g. fp, w4a8, w4a16, w4a8:fused, plan, plan:fused)"
+)
+
+
+@dataclasses.dataclass(frozen=True)
+class ServeSpec:
+    """One parsed serving-precision spec (the ``--policy`` / ``--tiers``
+    value grammar: ``SERVE_SPEC_GRAMMAR``).
+
+    Replaces the launcher's ad-hoc string slicing: ``parse``/``format``
+    round-trip exactly, malformed input raises one informative
+    ``ValueError``, and ``materialize`` turns the spec into what the
+    engines actually take — ``None`` (full precision), a ``QuantPolicy``
+    (uniform), or a ``PrecisionPlan`` (``:fused`` uniform kernels or the
+    sensitivity planner's mixed plan).
+
+        ServeSpec.parse("w4a8:fused").materialize(cfg, params)
+        ServeSpec.parse_tiers("quality=fp,fast=plan")  # name -> ServeSpec
+    """
+
+    level: str  # "fp" | "w<bits>a<bits>" | "plan"
+    fused: bool = False
+    method: str = "versaq"
+
+    @classmethod
+    def parse(cls, s: str, method: str = "versaq") -> "ServeSpec":
+        from repro.core.precision.plan import parse_level
+
+        raw = s
+        s = s.strip().lower()
+        base, _, suffix = s.partition(":")
+        if suffix and suffix != "fused":
+            raise ValueError(
+                f"serve spec {raw!r}: unknown suffix {suffix!r} (only ':fused'); "
+                f"expected {SERVE_SPEC_GRAMMAR}"
+            )
+        fused = suffix == "fused"
+        if base in ("fp", "bf16"):
+            if fused:
+                raise ValueError(
+                    f"serve spec {raw!r}: nothing to fuse at full precision"
+                )
+            return cls(level="fp", method=method)
+        if base == "plan":
+            return cls(level="plan", fused=fused, method=method)
+        try:
+            if parse_level(base) is None:  # only w<bits>a<bits> reaches here
+                raise ValueError(base)
+        except ValueError as e:
+            raise ValueError(
+                f"serve spec {raw!r}: expected {SERVE_SPEC_GRAMMAR}"
+            ) from e
+        return cls(level=base, fused=fused, method=method)
+
+    def format(self) -> str:
+        """The canonical string form; ``parse(format()) == self``."""
+        return self.level + (":fused" if self.fused else "")
+
+    def __str__(self) -> str:
+        return self.format()
+
+    # -- tier maps ("name=spec,name=spec") --------------------------------
+
+    @classmethod
+    def parse_tiers(
+        cls, s: Optional[str], method: str = "versaq"
+    ) -> Optional[dict[str, "ServeSpec"]]:
+        """Parse ``name=spec[,name=spec...]`` into an ordered tier map
+        (None for empty input — the single-policy path)."""
+        if not s:
+            return None
+        tiers: dict[str, ServeSpec] = {}
+        for part in s.split(","):
+            name, eq, spec = part.partition("=")
+            name, spec = name.strip(), spec.strip()
+            if not eq or not name or not spec:
+                raise ValueError(
+                    f"tiers entry {part.strip()!r}: expected name=spec with "
+                    f"spec in {SERVE_SPEC_GRAMMAR}"
+                )
+            if name in tiers:
+                raise ValueError(f"tiers names tier {name!r} twice")
+            tiers[name] = cls.parse(spec, method)
+        return tiers
+
+    @staticmethod
+    def format_tiers(tiers: dict[str, "ServeSpec"]) -> str:
+        """Inverse of ``parse_tiers``: ``parse_tiers(format_tiers(t)) == t``."""
+        return ",".join(f"{name}={spec}" for name, spec in tiers.items())
+
+    # -- materialization ---------------------------------------------------
+
+    def materialize(
+        self, cfg: Optional[ModelConfig] = None, params: Any = None,
+        *, name: str = "default", verbose: bool = False,
+    ):
+        """What the serving engines take: ``None`` | ``QuantPolicy`` |
+        ``PrecisionPlan``.  ``plan`` runs the sensitivity planner against
+        ``(cfg, params)`` — both required for that level only."""
+        from repro.core.precision.plan import PrecisionPlan, level_policy
+
+        if self.level == "fp":
+            return None
+        if self.level == "plan":
+            if cfg is None or params is None:
+                raise ValueError(
+                    f"serve spec {self.format()!r} needs a model to plan "
+                    f"against (cfg and params)"
+                )
+            from repro.core.precision import plan_model
+
+            plan, report = plan_model(
+                cfg, params, method=self.method, name=name, fuse=self.fused
+            )
+            if verbose:
+                print(f"tier {name!r}: planned mixed precision "
+                      f"{report['level_counts']} "
+                      f"({report['weight_bytes']/1e6:.2f}MB modeled weights)")
+            return plan
+        if self.fused:
+            return PrecisionPlan(
+                default=self.level, method=self.method,
+                use_kernel=True, fuse=True, name=self.level,
+            )
+        return level_policy(self.level, self.method)

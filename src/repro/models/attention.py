@@ -50,6 +50,26 @@ def _pad_mask(pad_lens: jnp.ndarray, width: int) -> jnp.ndarray:
     return jnp.arange(width)[None, :] >= pad_lens[:, None]
 
 
+def roll_kv(cache: KVCache, shift) -> KVCache:
+    """Shift every cached token right by ``shift`` slots along the time
+    axis (the slot-scheduler's re-alignment primitive: a prompt prefilled
+    at bucket width L joins a decode batch at clock T by rolling its rows
+    so the last real token lands at slot T-1).  Wrapped-around garbage
+    lands in the region ``pad_lens`` masks off, so reads stay token-exact.
+
+    Works on both cache layouts — per-group [B, S, Hkv, d] and stacked
+    [G, B, S, Hkv, d] — because the time axis is always third from the
+    trailing (head, feature) pair.  ``length`` is left untouched.
+    """
+    axis = cache.k.ndim - 3
+    return cache._replace(
+        k=jnp.roll(cache.k, shift, axis=axis),
+        v=jnp.roll(cache.v, shift, axis=axis),
+        k_scale=jnp.roll(cache.k_scale, shift, axis=axis),
+        v_scale=jnp.roll(cache.v_scale, shift, axis=axis),
+    )
+
+
 def _quant_tokens(x: jnp.ndarray) -> tuple[jnp.ndarray, jnp.ndarray]:
     amax = jnp.max(jnp.abs(x), axis=-1, keepdims=True)
     scale = jnp.maximum(amax, 1e-8) / 127.0

@@ -152,8 +152,127 @@ def init_cache(cfg: ModelConfig, batch: int, max_len: int, kv_dtype=jnp.int8) ->
 
 
 # ---------------------------------------------------------------------------
-# forward
+# slot-cache surgery (continuous-batching scheduler)
+#
+# The decode cache doubles as a *slot* cache: each batch row is a slot a
+# request occupies from admission to completion.  The scheduler grows and
+# shrinks the slot axis (cache_resize), installs freshly-prefilled rows
+# into free slots (cache_install_rows), and keeps every layer's write
+# position on the shared decode clock (cache_set_clock).  All three are
+# pure shape/index surgery — no model math — so slot-batched decode reads
+# the result through the ordinary pad_lens/kv_mask paths unchanged.
 # ---------------------------------------------------------------------------
+
+
+def _kv_batch_axis(c: A.KVCache) -> int:
+    # prefix caches are [B, S, H, d] (axis 0); stacked block caches carry a
+    # leading scan-group axis [G, B, S, H, d] (axis 1)
+    return c.k.ndim - 4
+
+
+def _cache_map(cache: dict, on_kv, on_state):
+    """Rebuild a decode cache applying ``on_kv(entry, axis)`` to KVCache
+    entries and ``on_state(entry)`` to recurrent states; ``pos`` is kept."""
+    blocks = {
+        name: on_kv(e, _kv_batch_axis(e)) if isinstance(e, A.KVCache) else on_state(e)
+        for name, e in cache["blocks"].items()
+    }
+    prefix = [
+        on_kv(e, _kv_batch_axis(e)) if isinstance(e, A.KVCache) else e
+        for e in cache["prefix"]
+    ]
+    return {"prefix": prefix, "blocks": blocks, "pos": cache["pos"]}
+
+
+def cache_resize(cfg: ModelConfig, cache: dict, new_batch: int) -> dict:
+    """Pad (with zero rows) or slice the cache's batch/slot axis to
+    ``new_batch`` rows.  Surviving rows keep their contents; lengths and
+    the decode clock are untouched."""
+
+    def resize(x, axis):
+        cur = x.shape[axis]
+        if cur == new_batch:
+            return x
+        if cur < new_batch:
+            pads = [(0, 0)] * x.ndim
+            pads[axis] = (0, new_batch - cur)
+            return jnp.pad(x, pads)
+        idx = [slice(None)] * x.ndim
+        idx[axis] = slice(0, new_batch)
+        return x[tuple(idx)]
+
+    on_kv = lambda e, ax: e._replace(
+        k=resize(e.k, ax), v=resize(e.v, ax),
+        k_scale=resize(e.k_scale, ax), v_scale=resize(e.v_scale, ax),
+    )
+    # recurrent states ([G, B, ...] leaves, no time axis) resize on axis 1
+    on_state = lambda e: jax.tree.map(lambda x: resize(x, 1), e)
+    return _cache_map(cache, on_kv, on_state)
+
+
+def cache_install_rows(
+    cfg: ModelConfig,
+    dst: dict,
+    src: dict,
+    dst_rows: list[int],
+    src_rows: list[int],
+    *,
+    shift: int = 0,
+) -> dict:
+    """Copy prefilled cache rows ``src_rows`` of ``src`` into slots
+    ``dst_rows`` of ``dst``.
+
+    ``shift`` right-rolls the KV time axis first (``attention.roll_kv``)
+    so a prompt prefilled at bucket width L aligns with a running decode
+    clock T = L + shift: its last real token lands at slot T-1 and the
+    rolled-in garbage sits below the row's (grown) left-pad, which the
+    pad_lens mask already excludes — installed rows are token-exact.
+    Recurrent states have no time axis and copy rows directly."""
+    d_idx = jnp.asarray(dst_rows)
+    s_idx = jnp.asarray(src_rows)
+
+    def put(d, s, axis):
+        sel = jnp.take(s, s_idx, axis=axis)
+        return d.at[d_idx].set(sel) if axis == 0 else d.at[:, d_idx].set(sel)
+
+    def on_kv(pair, ax):
+        d, s = pair
+        if shift:
+            s = A.roll_kv(s, shift)
+        return d._replace(
+            k=put(d.k, s.k, ax), v=put(d.v, s.v, ax),
+            k_scale=put(d.k_scale, s.k_scale, ax),
+            v_scale=put(d.v_scale, s.v_scale, ax),
+        )
+
+    on_state = lambda pair: jax.tree.map(lambda d, s: put(d, s, 1), *pair)
+    paired = {
+        "prefix": list(zip(dst["prefix"], src["prefix"])),
+        "blocks": {n: (e, src["blocks"][n]) for n, e in dst["blocks"].items()},
+        "pos": dst["pos"],
+    }
+    # prefix entries pair as tuples; only KVCache pairs go through on_kv
+    blocks = {
+        n: on_kv(pair, _kv_batch_axis(pair[0]))
+        if isinstance(pair[0], A.KVCache) else on_state(pair)
+        for n, pair in paired["blocks"].items()
+    }
+    prefix = [
+        on_kv(pair, _kv_batch_axis(pair[0]))
+        if isinstance(pair[0], A.KVCache) else pair[0]
+        for pair in paired["prefix"]
+    ]
+    return {"prefix": prefix, "blocks": blocks, "pos": dst["pos"]}
+
+
+def cache_set_clock(cfg: ModelConfig, cache: dict, clock: int) -> dict:
+    """Set the shared decode write position: ``pos`` and every KV
+    length.  Continuous batching keeps all slots on one physical clock —
+    per-slot logical lengths live in the scheduler's ``pad_lens``."""
+    on_kv = lambda e, ax: e._replace(length=jnp.full_like(e.length, clock))
+    out = _cache_map(cache, on_kv, lambda e: e)
+    out["pos"] = jnp.full_like(cache["pos"], clock)
+    return out
 
 
 def _apply_layer(

@@ -24,7 +24,7 @@ import collections
 import dataclasses
 import threading
 import time
-from typing import Any, Callable, ClassVar, Hashable, Optional
+from typing import Any, Callable, ClassVar, Hashable, Optional, Protocol, runtime_checkable
 
 import numpy as np
 
@@ -32,6 +32,9 @@ __all__ = [
     "Bucket",
     "BucketStats",
     "ServeStats",
+    "SchedulerStats",
+    "ServingEngine",
+    "DeadlineExceeded",
     "PendingRequest",
     "MicroBatchQueue",
     "TierSet",
@@ -39,6 +42,45 @@ __all__ = [
     "pick_bucket",
     "LATENCY_WINDOW",
 ]
+
+
+class DeadlineExceeded(RuntimeError):
+    """A request missed its ``deadline_s`` and was evicted — either from
+    the pending queue (never admitted) or mid-decode (its slots were
+    released to the batch).  Delivered through ``PendingRequest.result()``
+    so the waiter sees the SLA miss, not a hang."""
+
+
+@runtime_checkable
+class ServingEngine(Protocol):
+    """The serving-engine surface every engine exposes and everything
+    engine-agnostic (``serving.server.AsyncServer``, ``launch/serve.py``,
+    dashboards) programs against.
+
+    ``Engine`` (LM prefill/decode, continuous or bucket scheduling) and
+    ``VGGTEngine`` (feed-forward scenes) both implement it:
+
+    * ``enqueue(*work, priority=, deadline_s=)`` -> ``PendingRequest``;
+      higher ``priority`` admits first, ``deadline_s`` (seconds from
+      enqueue) evicts with :class:`DeadlineExceeded` when missed.
+    * ``poll()`` -> int: one bounded scheduling turn (admissions /
+      deadline flushes; the async server drives this on a timer).
+    * ``flush()``: block until every pending request is served.
+    * ``abort(err)`` -> int: fail everything pending without serving it.
+    * ``stats``: a :class:`ServeStats` (unified ``summary()`` schema).
+    * ``tiers``: the precision-tier table (name -> policy).
+    """
+
+    stats: "ServeStats"
+    tiers: dict
+
+    def enqueue(self, *args: Any, **kwargs: Any) -> "PendingRequest": ...
+
+    def poll(self) -> int: ...
+
+    def flush(self) -> None: ...
+
+    def abort(self, err: Optional[BaseException] = None) -> int: ...
 
 
 class TierSet:
@@ -212,15 +254,48 @@ class BucketStats:
         return out
 
 
+@dataclasses.dataclass
+class SchedulerStats:
+    """Admission/eviction counters for a serving scheduler.
+
+    ``admitted_mid_decode`` counts requests that joined a *running*
+    decode batch (the continuous-batching win); slot-step counters track
+    decode-slot occupancy (``occupied_slot_steps / capacity_slot_steps``
+    is the utilization of the compiled decode width)."""
+
+    admitted: int = 0
+    admitted_mid_decode: int = 0
+    deadline_evictions: int = 0
+    occupied_slot_steps: int = 0
+    capacity_slot_steps: int = 0
+
+    @property
+    def slot_occupancy(self) -> float:
+        if not self.capacity_slot_steps:
+            return 0.0
+        return self.occupied_slot_steps / self.capacity_slot_steps
+
+    def summary(self) -> dict:
+        return {
+            "admitted": self.admitted,
+            "admitted_mid_decode": self.admitted_mid_decode,
+            "deadline_evictions": self.deadline_evictions,
+            "slot_occupancy": round(self.slot_occupancy, 4),
+        }
+
+
 class ServeStats:
     """Per-bucket serving statistics container: compiles, latency
     percentiles, throughput.  ``unit`` names the item column in
-    ``format()`` ("scenes", "seqs", ...)."""
+    ``format()`` ("scenes", "seqs", ...); ``kind`` tags the engine family
+    in the unified ``summary()`` schema ("lm", "vggt", ...)."""
 
     unit = "items"
+    kind = "generic"
 
     def __init__(self):
         self.buckets: dict[Bucket, BucketStats] = {}
+        self.scheduler = SchedulerStats()
 
     def bucket(self, b: Bucket) -> BucketStats:
         return self.buckets.setdefault(b, BucketStats())
@@ -266,7 +341,9 @@ class ServeStats:
             if s.calls
         }
 
-    def mean_item_latency_s(self, warm_only: bool = True) -> float:
+    def mean_item_latency_s(
+        self, warm_only: bool = True, tier: Optional[str] = None
+    ) -> float:
         """Measured seconds per served item (the whole-model per-request
         latency a planner budget is about).
 
@@ -279,17 +356,24 @@ class ServeStats:
         bucket, the ``compiles`` largest entries of the latency window
         are dropped and the warm mean is extrapolated over all calls —
         first-call jit time would otherwise dominate short traces and
-        mis-calibrate the planner.  Raises when nothing was served.
+        mis-calibrate the planner.  ``tier`` restricts the export to one
+        precision tier's buckets (SLA-aware tier autoselection measures
+        each tier separately).  Raises when nothing was served.
         """
+        rows = [
+            (b, s)
+            for b, s in self.buckets.items()
+            if tier is None or getattr(b, "tier", "default") == tier
+        ]
         per_kind: dict[str, int] = {}
-        for b, s in self.buckets.items():
+        for b, s in rows:
             k = type(b).__name__
             per_kind[k] = per_kind.get(k, 0) + s.items
         items = max(per_kind.values(), default=0)
         if not items:
             raise ValueError("no served traffic to export latencies from")
         total = 0.0
-        for s in self.buckets.values():
+        for _, s in rows:
             lats = list(s.latencies_s)
             if warm_only and s.compiles and len(lats) > s.compiles:
                 warm = sorted(lats)[: len(lats) - s.compiles]
@@ -299,7 +383,30 @@ class ServeStats:
         return total / items
 
     def summary(self) -> dict:
-        return {str(b): s.summary() for b, s in self._sorted()}
+        """Unified kind-keyed schema shared by every engine family::
+
+            {"kind": "lm" | "vggt" | "generic",
+             "unit": "seqs" | "scenes" | ...,
+             "totals": {compiles, calls, items, tokens},
+             "buckets": {str(bucket): <BucketStats.summary()>},
+             "scheduler": {admitted, admitted_mid_decode,
+                           deadline_evictions, slot_occupancy}}
+
+        Dashboards and ``planner.site_latency_from_stats`` consume one
+        format regardless of which engine produced the stats.
+        """
+        return {
+            "kind": self.kind,
+            "unit": self.unit,
+            "totals": {
+                "compiles": self.compiles,
+                "calls": self.calls,
+                "items": self.items,
+                "tokens": self.tokens,
+            },
+            "buckets": {str(b): s.summary() for b, s in self._sorted()},
+            "scheduler": self.scheduler.summary(),
+        }
 
     def format(self) -> str:
         unit = self.unit
@@ -331,8 +438,15 @@ class PendingRequest:
     Engines deliver through ``_deliver``/``_fail`` so a waiter attached
     by the async server (``_event``) is woken exactly when the result
     lands.
+
+    ``priority`` orders admission (higher first; FIFO within a level);
+    ``deadline_s`` is a soft SLA in seconds from enqueue — a request
+    still unserved at its deadline is evicted with
+    :class:`DeadlineExceeded` rather than served late.
     """
 
+    priority: int = dataclasses.field(default=0, kw_only=True)
+    deadline_s: Optional[float] = dataclasses.field(default=None, kw_only=True)
     t_enqueue: float = dataclasses.field(
         default_factory=time.perf_counter, kw_only=True
     )
@@ -346,7 +460,16 @@ class PendingRequest:
     def ready(self) -> bool:
         return self._result is not None or self._error is not None
 
+    def expired(self, now: Optional[float] = None) -> bool:
+        if self.deadline_s is None:
+            return False
+        return (time.perf_counter() if now is None else now) >= (
+            self.t_enqueue + self.deadline_s
+        )
+
     def result(self) -> Any:
+        if isinstance(self._error, DeadlineExceeded):
+            raise self._error
         if self._error is not None:
             raise RuntimeError("request's micro-batch failed") from self._error
         if self._result is None:
@@ -415,6 +538,29 @@ class MicroBatchQueue:
         for key in [k for k, q in self._queues.items() if q]:
             self.flush_group(key)
 
+    def evict_expired(
+        self, now: Optional[float] = None, stats: Optional[SchedulerStats] = None
+    ) -> int:
+        """Fail queued requests whose ``deadline_s`` already passed with
+        :class:`DeadlineExceeded` (deadline-ordered admission's other
+        half: a request that can no longer be served in time is evicted,
+        not served late).  Returns the eviction count."""
+        now = time.perf_counter() if now is None else now
+        n = 0
+        for q in self._queues.values():
+            for r, _ in [e for e in q if e[0].expired(now)]:
+                r._fail(
+                    DeadlineExceeded(
+                        f"request missed its {r.deadline_s:.3f}s deadline "
+                        "while queued"
+                    )
+                )
+                n += 1
+            q[:] = [e for e in q if not e[0].ready]
+        if stats is not None:
+            stats.deadline_evictions += n
+        return n
+
     def fail_pending(self, err: BaseException) -> int:
         """Fail every queued request without running it (server shutdown
         without drain) so waiters wake with an error instead of blocking
@@ -429,6 +575,10 @@ class MicroBatchQueue:
 
     def flush_group(self, key: Hashable) -> None:
         q = self._queues.get(key, [])
+        # priority-ordered admission: higher priority first, FIFO within a
+        # level (stable sort on enqueue order keeps coalescing fair)
+        if any(r.priority for r, _ in q):
+            q.sort(key=lambda e: (-e[0].priority, e[0].t_enqueue))
         while q:
             # take requests up to max_batch items (an oversize request
             # runs alone in its own exact-size bucket)

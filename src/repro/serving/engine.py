@@ -1,40 +1,54 @@
-"""Production LM serving engine: bucketed prefill/decode + micro-batched
-request queue, on the shared ``serving.batching`` machinery.
+"""Production LM serving engine: continuous slot-batched decode (with a
+bucket-at-a-time fallback mode) on the shared ``serving.batching``
+machinery.
 
 The paper's deployment mode is quantized serving under tight latency
 budgets; for the LM-family pool that means a prefill/decode server.  The
-old engine re-jit'd implicitly on every new ``(batch, prompt_len)`` and
-served one call at a time — exactly the recompile cliff the VGGT engine
-already solved.  This engine mirrors ``serving.vggt_engine.VGGTEngine``:
+bucket engine solved the recompile cliff (prompt-length buckets, batch
+buckets, micro-batching) but a decode group still ran to completion
+before any new prompt joined — sustained decode throughput collapsed
+under mixed arrival traffic.  This engine splits the serving loop:
 
-* **Prompt-length buckets** — prompts are LEFT-padded up to a bucket
-  length (powers of two by default, or an explicit ``prompt_buckets``
-  ladder).  Left padding keeps the last real token in the last slot, so
-  one ``logits[:, -1]`` read works for every row; per-row RoPE positions
-  and an attention length mask (``lm.forward(pad_lens=...)``) make the
-  real-token outputs match the unpadded forward exactly.  Recurrent
-  mixers (mamba/rwkv patterns) would carry pad tokens through their
-  state, so those archs serve exact-length buckets instead (batch
-  bucketing still applies — batch rows are independent).
+* **PrefillRunner** — one coalesced prompt wave per call: LEFT-padded to
+  a prompt bucket, batch padded up, one jitted executable per
+  ``(batch, prompt_len, masked, tier)``.  Left padding keeps the last
+  real token in the last slot so one ``logits[:, -1]`` read works for
+  every row; per-row RoPE positions and the attention length mask
+  (``lm.forward(pad_lens=...)``) make real-token outputs match the
+  unpadded forward exactly.
 
-* **Batch buckets for prefill and decode** — the coalesced batch pads up
-  to a bucket size; one jitted prefill executable per
-  ``(batch, prompt_len, masked)`` and one jitted decode step per
-  ``(batch, masked)``, each compile counted in per-bucket stats.
+* **DecodeRunner** — a slot-batched continuous decode loop.  The decode
+  cache's batch rows are *slots* with free-list allocation: finished
+  requests release their slots and newly admitted prompts join the
+  *running* batch.  All slots share one physical decode clock T; a
+  prompt prefilled at bucket width L joins at clock T by right-rolling
+  its cache rows ``T - L`` slots (``attention.roll_kv`` via
+  ``lm.cache_install_rows``) so its last real token lands at slot T-1
+  and the roll garbage sits under the row's grown left-pad — which the
+  existing ``pad_lens``/``kv_mask`` masking already excludes, keeping
+  slot-batched decode token-exact versus the bucket engine.  Decode
+  steps are jit-cached per ``(slot-width bucket, tier)`` (one sampled
+  and one greedy graph), so warm traffic triggers zero recompiles.
+  Recurrent/SSM configs (position-free patterns) get the
+  **StateDecodeRunner** variant: states have no time axis, rows install
+  directly, and any prompt length joins at any time.  Configs that fit
+  neither (hybrid patterns, positional recurrent stacks) fall back to
+  the bucket engine automatically (``mode="auto"``).
 
-* **Micro-batching** — ``enqueue(prompt, n_steps)`` parks requests in a
-  per-length-bucket queue; groups flush at ``max_batch`` sequences, on
-  the ``max_wait_s`` deadline (``poll``, driven by
-  ``serving.server.AsyncServer``), or explicitly (``flush``).  Decode
-  runs the group's max ``n_steps``; each request gets its own rows and
-  first ``n_steps`` tokens back.
+* **Scheduler** — owns admission: priority-first, deadline-ordered
+  (higher ``priority`` first, then earliest deadline, then FIFO);
+  requests past their ``deadline_s`` are evicted — queued or mid-decode
+  — with ``DeadlineExceeded`` instead of served late; ``tier="auto"``
+  autoselects the cheapest declared tier whose measured per-request
+  latency (``ServeStats.mean_item_latency_s``, the same export the
+  precision planner calibrates against) fits the request deadline.
 
-* **Quantized fast path** — ``policy=W4A8`` serves the
-  ``model_quant.quantize_lm`` weights (per-token A8, int8 KV cache).
+* **Quantized fast path / precision tiers** — unchanged: tier is part of
+  every bucket identity, tier weights quantize lazily on first use.
 
-``generate`` keeps the old synchronous API on the same bucketed
-executables (and is the only entry with sampling — per-request PRNG keys
-do not coalesce).
+``generate`` is a thin wrapper over ``enqueue`` + a targeted drain, on
+the same executables.  The engine implements the
+``batching.ServingEngine`` protocol (``enqueue/poll/flush/abort``).
 
 VGGT serving (single feed-forward pass per scene batch) is
 ``vggt_serve`` below — a thin jit-cached convenience; the production
@@ -56,13 +70,18 @@ from repro.core.model_quant import quantize_lm
 from repro.core.versaq import QuantPolicy
 from repro.models import lm, vggt as vggt_mod
 from repro.serving import batching
-from repro.serving.batching import next_pow2, pick_bucket
+from repro.serving.batching import DeadlineExceeded, next_pow2, pick_bucket
 
 __all__ = [
     "PrefillBucket",
     "DecodeBucket",
     "LMServeStats",
     "LMRequest",
+    "PrefillRunner",
+    "PrefillResult",
+    "DecodeRunner",
+    "StateDecodeRunner",
+    "Scheduler",
     "Engine",
     "vggt_serve",
 ]
@@ -89,8 +108,8 @@ class PrefillBucket(batching.Bucket):
 
 @dataclasses.dataclass(frozen=True)
 class DecodeBucket(batching.Bucket):
-    """One compiled decode step: batch only (the KV cache is always
-    ``max_len`` wide, so decode shape is length-independent), per
+    """One compiled decode step: batch/slot width only (the KV cache is
+    always ``max_len`` wide, so decode shape is length-independent), per
     precision tier."""
 
     batch: int
@@ -111,6 +130,7 @@ class LMServeStats(batching.ServeStats):
     tokens/s)."""
 
     unit = "seqs"
+    kind = "lm"
 
     def _sum(self, kind, attr) -> float:
         return sum(getattr(s, attr) for b, s in self.buckets.items()
@@ -146,11 +166,614 @@ class LMRequest(batching.PendingRequest):
     n_steps: int
     squeeze: bool = False  # enqueued as a single [l] prompt
     tier: str = "default"  # precision tier (engine ``tiers`` key)
+    L: int = 0  # bucketed prompt length (admission group key)
+    greedy: bool = True
+    key: Optional[jax.Array] = None  # per-request sampling key
+
+
+# ---------------------------------------------------------------------------
+# prefill
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class PrefillResult:
+    """One prefilled prompt wave, ready for decode hand-off."""
+
+    cache: Any  # decode cache, bb rows, pos = L
+    logits_last: jnp.ndarray  # [bb, V] last-slot logits
+    pad_lens: jnp.ndarray  # [bb] int32 (slack rows padded to L)
+    pads: list[int]  # per *real* row left-pad
+    n_real: int
+    bb: int
+    L: int
+    masked: bool
+
+
+class PrefillRunner:
+    """Runs one coalesced prompt wave through the bucketed prefill
+    executable and hands the filled cache + last-token logits to a decode
+    runner (continuous mode) or the inline decode loop (bucket mode)."""
+
+    def __init__(self, eng: "Engine"):
+        self.eng = eng
+
+    def run(self, reqs: list[LMRequest], L: int, tier: str) -> PrefillResult:
+        eng = self.eng
+        params = eng.tier_params(tier)
+        n_real = sum(r.prompts.shape[0] for r in reqs)
+        bb = eng.batch_bucket(n_real)
+
+        parts, pads, n_prompt_toks = [], [], 0
+        for r in reqs:
+            x = r.prompts
+            pad = L - x.shape[1]
+            if pad:
+                x = jnp.pad(x, ((0, 0), (pad, 0)))  # LEFT pad (see module doc)
+            parts.append(x)
+            pads += [pad] * x.shape[0]
+            n_prompt_toks += r.prompts.shape[0] * r.prompts.shape[1]
+        # only real length padding needs the masked graph — batch-slack
+        # rows are garbage-in/garbage-out and get sliced off regardless
+        masked = any(p > 0 for p in pads)
+        real_pads = list(pads)
+        if n_real < bb:
+            parts.append(jnp.zeros((bb - n_real, L), jnp.int32))
+            pads += [L] * (bb - n_real)
+        toks = jnp.concatenate(parts, axis=0)
+        pad_lens = jnp.asarray(pads, jnp.int32)
+
+        pbucket = PrefillBucket(bb, L, tier)
+        pfn = eng._prefill_fn(pbucket, masked)
+        cache = lm.init_cache(eng.cfg, bb, eng.max_len)
+        t0 = time.perf_counter()
+        if masked:
+            logits, cache = pfn(params, toks, cache, pad_lens)
+        else:
+            logits, cache = pfn(params, toks, cache)
+        logits.block_until_ready()
+        dt = time.perf_counter() - t0
+        ps = eng.stats.bucket(pbucket)
+        ps.calls += 1
+        ps.items += n_real
+        ps.padded_items += bb - n_real
+        ps.tokens += n_prompt_toks
+        ps.total_s += dt
+        ps.latencies_s.append(dt)
+        return PrefillResult(
+            cache=cache, logits_last=logits[:, -1], pad_lens=pad_lens,
+            pads=real_pads, n_real=n_real, bb=bb, L=L, masked=masked,
+        )
+
+
+# ---------------------------------------------------------------------------
+# continuous decode
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class _Active:
+    """One request occupying decode slots from admission to completion."""
+
+    req: LMRequest
+    rows: list[int]  # slot ids, one per prompt row
+    tok0: np.ndarray  # [b] first generated token (from prefill)
+    remaining: int  # decode steps still to run (n_steps - 1 at admission)
+    start_step: int  # runner.global_step at admission
+
+
+class DecodeRunner:
+    """Slot-batched continuous decode for attention-pattern configs.
+
+    The runner owns one decode cache whose batch rows are request slots:
+    a free list hands finished requests' slots to new admissions, the
+    compiled width grows along the ``batch_buckets`` ladder as occupancy
+    demands (and resets when the runner drains idle), and every step runs
+    one jitted token for *all* slots — inactive slots carry a fully
+    masking pad (``max_len + 1``) so their garbage never reaches a real
+    row.  All slots share one physical clock; per-slot logical positions
+    live in ``pad_lens`` (see module docstring for the roll-install
+    alignment argument)."""
+
+    def __init__(self, eng: "Engine", tier: str):
+        self.eng = eng
+        self.tier = tier
+        self.capacity = eng.batch_buckets[-1]
+        self.width = 0  # compiled slot width (0 = idle, no cache)
+        self.cache: Optional[dict] = None
+        self.clock = 0  # shared physical decode position
+        self.active: list[_Active] = []
+        self.slot_req: list[Optional[_Active]] = []
+        self.pads = np.zeros((0,), np.int32)
+        self.tok = np.zeros((0,), np.int32)
+        self.keys = np.zeros((0, 2), np.uint32)
+        self.greedy = np.ones((0,), bool)
+        self.step_log: list[jnp.ndarray] = []  # per-step [width] tokens
+        self.log_base = 0  # global step of step_log[0]
+        self.global_step = 0
+
+    # -- config hooks the state-cache variant overrides -----------------
+
+    @property
+    def inactive_pad(self) -> int:
+        return self.eng.max_len + 1  # masks every key slot
+
+    def joinable(self, req: LMRequest, L: int) -> bool:
+        """A prompt can join a *running* batch iff its bucketed length
+        fits under the shared clock (the clock grows one slot per step,
+        so longer prompts become joinable later) and its generation still
+        fits the cache from the current clock."""
+        if not self.width:
+            return True
+        return L <= self.clock and self.clock + req.n_steps - 1 <= self.eng.max_len
+
+    def _install_shift(self, L: int) -> int:
+        return self.clock - L
+
+    def _on_first_wave(self, L: int) -> None:
+        self.clock = L
+        self.cache = lm.cache_set_clock(self.eng.cfg, self.cache, L)
+
+    # -- slot bookkeeping ------------------------------------------------
+
+    @property
+    def active_rows(self) -> int:
+        return sum(len(a.rows) for a in self.active)
+
+    def _free_rows(self) -> int:
+        free = sum(1 for a in self.slot_req if a is None)
+        return free + max(0, self.capacity - self.width)
+
+    def _grow(self, new_width: int) -> None:
+        if self.cache is None:
+            self.cache = lm.init_cache(self.eng.cfg, new_width, self.eng.max_len)
+        else:
+            self.cache = lm.cache_resize(self.eng.cfg, self.cache, new_width)
+        extra = new_width - self.width
+        self.slot_req += [None] * extra
+        self.pads = np.concatenate(
+            [self.pads, np.full((extra,), self.inactive_pad, np.int32)]
+        )
+        self.tok = np.concatenate([self.tok, np.zeros((extra,), np.int32)])
+        self.keys = np.concatenate([self.keys, np.zeros((extra, 2), np.uint32)])
+        self.greedy = np.concatenate([self.greedy, np.ones((extra,), bool)])
+        # step-log entries are [old_width]; completed columns of surviving
+        # requests must stay readable after growth
+        self.step_log = [
+            jnp.pad(t, (0, new_width - t.shape[0])) if t.shape[0] < new_width else t
+            for t in self.step_log
+        ]
+        self.width = new_width
+
+    def _reset_idle(self) -> None:
+        self.width = 0
+        self.cache = None
+        self.clock = 0
+        self.slot_req = []
+        self.pads = np.zeros((0,), np.int32)
+        self.tok = np.zeros((0,), np.int32)
+        self.keys = np.zeros((0, 2), np.uint32)
+        self.greedy = np.ones((0,), bool)
+        self.step_log = []
+        self.log_base = self.global_step
+
+    # -- admission -------------------------------------------------------
+
+    def admit(self, reqs: list[LMRequest], L: int) -> list[LMRequest]:
+        """Admit as many of the wave's requests as fit (free slots plus
+        ladder growth room; an oversize wave is allowed onto an idle
+        runner, mirroring the bucket engine's oversize-runs-alone).
+        Returns the admitted requests, already prefilled and — for
+        multi-step requests — installed into decode slots."""
+        eng = self.eng
+        was_running = self.active_rows > 0
+        budget = self._free_rows()
+        take, rows = [], 0
+        for r in reqs:
+            b = r.prompts.shape[0]
+            if take and rows + b > budget:
+                break
+            if not take and b > budget and was_running:
+                break  # oversize joins only an idle runner
+            if not self.joinable(r, L):
+                continue
+            take.append(r)
+            rows += b
+            if rows >= budget:
+                break
+        if not take:
+            return []
+
+        pre = eng._prefill.run(take, L, self.tier)
+        tok0, keys0 = self._first_tokens(pre, take)
+        row_of = {}
+        base = 0
+        for r in take:
+            row_of[id(r)] = base
+            base += r.prompts.shape[0]
+
+        slot_reqs = [r for r in take if r.n_steps > 1]
+        if slot_reqs:
+            need = sum(r.prompts.shape[0] for r in slot_reqs)
+            if not self.width:
+                self._grow(pick_bucket(eng.batch_buckets, need))
+                self._on_first_wave(L)
+            free = [i for i in range(self.width) if self.slot_req[i] is None]
+            if need > len(free):
+                self._grow(
+                    pick_bucket(eng.batch_buckets, self.width + need - len(free))
+                )
+                free = [i for i in range(self.width) if self.slot_req[i] is None]
+            shift = self._install_shift(L)
+            dst_rows, src_rows = [], []
+            fi = 0
+            for r in slot_reqs:
+                b = r.prompts.shape[0]
+                slots = free[fi : fi + b]
+                fi += b
+                a = _Active(
+                    req=r, rows=slots,
+                    tok0=tok0[row_of[id(r)] : row_of[id(r)] + b],
+                    remaining=r.n_steps - 1, start_step=self.global_step,
+                )
+                self.active.append(a)
+                for j, s in enumerate(slots):
+                    src = row_of[id(r)] + j
+                    self.slot_req[s] = a
+                    self.pads[s] = self._slot_pad(pre.pads[src], shift)
+                    self.tok[s] = tok0[src]
+                    self.keys[s] = keys0[src]
+                    self.greedy[s] = r.greedy
+                    dst_rows.append(s)
+                    src_rows.append(src)
+            self.cache = lm.cache_install_rows(
+                eng.cfg, self.cache, pre.cache, dst_rows, src_rows,
+                shift=shift if eng.pad_prompts else 0,
+            )
+
+        # single-token requests complete at prefill, never occupy a slot
+        for r in take:
+            if r.n_steps == 1:
+                b = r.prompts.shape[0]
+                ids = tok0[row_of[id(r)] : row_of[id(r)] + b][:, None]
+                r._deliver(ids[0] if r.squeeze else ids)
+
+        sched = eng.stats.scheduler
+        sched.admitted += len(take)
+        if was_running:
+            sched.admitted_mid_decode += len(take)
+        return take
+
+    def _slot_pad(self, prefill_pad: int, shift: int) -> int:
+        return prefill_pad + shift
+
+    def _first_tokens(
+        self, pre: PrefillResult, take: list[LMRequest]
+    ) -> tuple[np.ndarray, np.ndarray]:
+        """First generated token per real row (greedy argmax, or sampled
+        with the request's per-row key: ``fold_in(key, row)`` then one
+        split — the same stream each row sees regardless of which slots
+        its neighbours occupy, so sampling is reproducible under any
+        coalescing)."""
+        lg = pre.logits_last
+        tok0 = np.asarray(jnp.argmax(lg, axis=-1), np.int32)[: pre.n_real].copy()
+        keys0 = np.zeros((pre.n_real, 2), np.uint32)
+        i0 = 0
+        for r in take:
+            b = r.prompts.shape[0]
+            if not r.greedy:
+                rk = jax.vmap(lambda i, k=r.key: jax.random.fold_in(k, i))(
+                    jnp.arange(b)
+                )
+                pair = jax.vmap(lambda k: jax.random.split(k, 2))(rk)
+                t0 = jax.vmap(jax.random.categorical)(pair[:, 1], lg[i0 : i0 + b])
+                tok0[i0 : i0 + b] = np.asarray(t0, np.int32)
+                keys0[i0 : i0 + b] = np.asarray(pair[:, 0], np.uint32)
+            i0 += b
+        return tok0, keys0
+
+    # -- stepping --------------------------------------------------------
+
+    def run_steps(self, max_steps: int) -> int:
+        """One bounded decode burst for every occupied slot.  Returns the
+        number of steps run (0 when idle)."""
+        if not self.active:
+            return 0
+        eng = self.eng
+        n = min(max_steps, max(a.remaining for a in self.active))
+        if n <= 0:
+            return 0
+        params = eng.tier_params(self.tier)
+        sampled = bool((~self.greedy).any())
+        bucket = DecodeBucket(self.width, self.tier)
+        step = eng._slot_decode_fn(bucket, sampled)
+        tok = jnp.asarray(self.tok)
+        keys = jnp.asarray(self.keys)
+        pad = jnp.asarray(self.pads)
+        grd = jnp.asarray(self.greedy)
+        burst_tokens = sum(min(n, a.remaining) * len(a.rows) for a in self.active)
+
+        t0 = time.perf_counter()
+        for _ in range(n):
+            tok, self.cache, keys = step(params, tok, self.cache, pad, keys, grd)
+            self.step_log.append(tok)
+        tok.block_until_ready()
+        dt = time.perf_counter() - t0
+
+        ds = eng.stats.bucket(bucket)
+        ds.calls += n
+        ds.tokens += burst_tokens
+        ds.total_s += dt
+        ds.latencies_s.append(dt / n)
+        sched = eng.stats.scheduler
+        sched.occupied_slot_steps += burst_tokens
+        sched.capacity_slot_steps += self.width * n
+
+        # np.array (copy): np.asarray of a device buffer is a read-only
+        # view, and admission writes new requests' rows into these
+        self.tok = np.array(tok)
+        self.keys = np.array(keys)
+        self.global_step += n
+        self.clock += n
+        for a in list(self.active):
+            a.remaining -= n
+            if a.remaining <= 0:
+                self._complete(a)
+        self._trim_log()
+        if not self.active:
+            self._reset_idle()
+        return n
+
+    def _complete(self, a: _Active) -> None:
+        r = a.req
+        lo = a.start_step - self.log_base
+        cols = self.step_log[lo : lo + r.n_steps - 1]
+        rows = np.asarray(a.rows)
+        gen = np.asarray(jnp.stack(cols, axis=1))[rows]  # [b, n_steps-1]
+        ids = np.concatenate([a.tok0[:, None], gen], axis=1)
+        ds = self.eng.stats.bucket(DecodeBucket(self.width, self.tier))
+        ds.items += len(a.rows)
+        self._release(a)
+        r._deliver(ids[0] if r.squeeze else ids)
+
+    def evict(self, a: _Active, err: BaseException) -> None:
+        """Mid-decode eviction (deadline miss / abort): fail the request
+        and hand its slots back to the free list."""
+        self._release(a)
+        a.req._fail(err)
+        if not self.active:
+            self._reset_idle()
+
+    def _release(self, a: _Active) -> None:
+        for s in a.rows:
+            self.slot_req[s] = None
+            self.pads[s] = self.inactive_pad
+            self.greedy[s] = True
+        self.active.remove(a)
+
+    def _trim_log(self) -> None:
+        keep_from = min(
+            (a.start_step for a in self.active), default=self.global_step
+        )
+        while self.log_base < keep_from and self.step_log:
+            self.step_log.pop(0)
+            self.log_base += 1
+
+
+class StateDecodeRunner(DecodeRunner):
+    """Continuous decode for recurrent/SSM stacks (position-free
+    patterns: pure mamba/rwkv with ``pos="none"``).  Recurrent states
+    have no time axis — prefilled rows install directly, any prompt
+    length joins a running batch at any time, and the shared clock/pad
+    machinery degenerates to plain row bookkeeping (``decode_step`` runs
+    without ``pad_lens``; rows are independent)."""
+
+    @property
+    def inactive_pad(self) -> int:
+        return 0  # pads are unused: the step graph passes pad_lens=None
+
+    def joinable(self, req: LMRequest, L: int) -> bool:
+        return True
+
+    def _install_shift(self, L: int) -> int:
+        return 0
+
+    def _on_first_wave(self, L: int) -> None:
+        self.clock = 0
+
+    def _slot_pad(self, prefill_pad: int, shift: int) -> int:
+        return 0
+
+
+# ---------------------------------------------------------------------------
+# scheduler
+# ---------------------------------------------------------------------------
+
+
+class Scheduler:
+    """Admission control for continuous serving: one pending queue, one
+    decode runner per precision tier.
+
+    Candidates are ordered (priority desc, deadline asc, FIFO); a wave
+    — all pending requests sharing one ``(tier, prompt-bucket)`` group —
+    is admitted when the group fills ``max_batch`` rows, its oldest
+    request passes ``max_wait_s``, any member carries a deadline, or the
+    tier's runner is already mid-decode (joining a running batch is the
+    whole point — no reason to coalesce-wait).  Expired requests are
+    evicted before every admission pass, queued or mid-decode."""
+
+    def __init__(self, eng: "Engine"):
+        self.eng = eng
+        self._pending: list[LMRequest] = []
+        self._runners: dict[str, DecodeRunner] = {}
+
+    def runner(self, tier: str) -> DecodeRunner:
+        r = self._runners.get(tier)
+        if r is None:
+            cls = DecodeRunner if self.eng.pad_prompts else StateDecodeRunner
+            r = self._runners[tier] = cls(self.eng, tier)
+        return r
+
+    @property
+    def pending(self) -> int:
+        return len(self._pending)
+
+    @property
+    def active_rows(self) -> int:
+        return sum(r.active_rows for r in self._runners.values())
+
+    def add(self, req: LMRequest) -> None:
+        self._pending.append(req)
+        group = (req.tier, req.L)
+        rows = sum(
+            r.prompts.shape[0]
+            for r in self._pending
+            if (r.tier, r.L) == group
+        )
+        if rows >= self.eng.max_batch:
+            # group full: serve it to completion synchronously (the
+            # bucket engine's auto-flush contract)
+            targets = [r for r in self._pending if (r.tier, r.L) == group]
+            self.drain(targets=targets, only_group=group)
+
+    def poll(self) -> int:
+        """One bounded scheduling turn: evict expired requests, admit due
+        waves, then run at most ``decode_steps_per_poll`` decode steps
+        per runner.  Returns the number of requests admitted."""
+        now = time.perf_counter()
+        self.evict_expired(now)
+        admitted = self.admit(now)
+        for r in self._runners.values():
+            r.run_steps(self.eng.decode_steps_per_poll)
+        return admitted
+
+    def drain(
+        self,
+        targets: Optional[list[LMRequest]] = None,
+        only_group: Optional[tuple] = None,
+    ) -> None:
+        """Force-admit and step until ``targets`` (or everything) is
+        done.  Deadlines still apply — an expired request resolves with
+        ``DeadlineExceeded``, which counts as done."""
+        while True:
+            if targets is not None and all(r.ready for r in targets):
+                return
+            if targets is None and not self._pending and self.active_rows == 0:
+                return
+            now = time.perf_counter()
+            self.evict_expired(now)
+            n_adm = self.admit(now, force=True, only_group=only_group)
+            n_steps = sum(
+                r.run_steps(self.eng.decode_steps_per_poll)
+                for r in self._runners.values()
+            )
+            if not n_adm and not n_steps:
+                if targets is not None and all(r.ready for r in targets):
+                    return
+                if not self._pending and self.active_rows == 0:
+                    return
+                raise RuntimeError(
+                    "scheduler stalled: pending work but no admission or "
+                    "decode progress"
+                )
+
+    # -- admission pass --------------------------------------------------
+
+    def _order(self, reqs: list[LMRequest]) -> list[LMRequest]:
+        inf = float("inf")
+        return sorted(
+            reqs,
+            key=lambda r: (
+                -r.priority,
+                r.t_enqueue + r.deadline_s if r.deadline_s is not None else inf,
+                r.t_enqueue,
+            ),
+        )
+
+    def _due(self, wave: list[LMRequest], runner: DecodeRunner, now: float) -> bool:
+        rows = sum(r.prompts.shape[0] for r in wave)
+        if rows >= self.eng.max_batch:
+            return True
+        if now - min(r.t_enqueue for r in wave) >= self.eng.max_wait_s:
+            return True
+        if any(r.deadline_s is not None for r in wave):
+            return True  # SLA traffic admits immediately
+        return runner.active_rows > 0  # join the running batch
+
+    def admit(
+        self, now: float, force: bool = False, only_group: Optional[tuple] = None
+    ) -> int:
+        if not self._pending:
+            return 0
+        admitted = 0
+        seen: set[tuple] = set()
+        for r in self._order(self._pending):
+            group = (r.tier, r.L)
+            if group in seen or r.ready:
+                continue
+            seen.add(group)
+            if only_group is not None and group != only_group:
+                continue
+            wave = [
+                q for q in self._order(self._pending)
+                if (q.tier, q.L) == group and not q.ready
+            ]
+            runner = self.runner(r.tier)
+            if not force and not self._due(wave, runner, now):
+                continue
+            taken = runner.admit(wave, r.L)
+            admitted += len(taken)
+            for q in taken:
+                self._pending.remove(q)
+        return admitted
+
+    # -- eviction / abort ------------------------------------------------
+
+    def evict_expired(self, now: Optional[float] = None) -> int:
+        now = time.perf_counter() if now is None else now
+        n = 0
+        for r in [q for q in self._pending if q.expired(now)]:
+            r._fail(
+                DeadlineExceeded(
+                    f"request missed its {r.deadline_s:.3f}s deadline while queued"
+                )
+            )
+            self._pending.remove(r)
+            n += 1
+        for runner in self._runners.values():
+            for a in [a for a in list(runner.active) if a.req.expired(now)]:
+                runner.evict(
+                    a,
+                    DeadlineExceeded(
+                        f"request missed its {a.req.deadline_s:.3f}s deadline "
+                        "mid-decode and was evicted from the batch"
+                    ),
+                )
+                n += 1
+        self.eng.stats.scheduler.deadline_evictions += n
+        return n
+
+    def abort_all(self, err: BaseException) -> int:
+        n = 0
+        for r in self._pending:
+            r._fail(err)
+            n += 1
+        self._pending.clear()
+        for runner in self._runners.values():
+            for a in list(runner.active):
+                runner.evict(a, err)
+                n += 1
+        return n
+
+
+# ---------------------------------------------------------------------------
+# engine
+# ---------------------------------------------------------------------------
 
 
 class Engine:
-    """Bucketed, micro-batched LM prefill/decode serving (see module
-    docstring).
+    """Continuous (or bucketed) LM prefill/decode serving — see module
+    docstring.  Implements the ``batching.ServingEngine`` protocol.
 
     Synchronous API (single-threaded, deterministic — the async server
     loop drives ``enqueue``/``poll``):
@@ -160,6 +783,17 @@ class Engine:
         reqs = [eng.enqueue(p, 32) for p in prompts]   # micro-batched
         eng.flush()
         outs = [r.result() for r in reqs]
+
+    Scheduling controls (continuous mode): ``enqueue(..., priority=2)``
+    admits before lower-priority traffic; ``deadline_s=0.5`` evicts with
+    ``DeadlineExceeded`` if unserved in time; ``tier="auto"`` +
+    ``deadline_s`` picks the best declared tier whose measured latency
+    fits the deadline.
+
+    ``mode``: "continuous" | "bucket" | "auto" (default).  Auto uses the
+    continuous scheduler whenever the config supports it (attention-only
+    patterns, or position-free recurrent patterns) and falls back to
+    bucket-at-a-time group scheduling otherwise.
 
     Precision tiers (see docs/serving.md "Precision tiers"): one engine
     can serve several quantization levels concurrently —
@@ -191,6 +825,8 @@ class Engine:
         max_batch: Optional[int] = None,
         max_wait_s: float = 0.005,
         donate_cache: bool = True,
+        mode: str = "auto",
+        decode_steps_per_poll: int = 8,
     ):
         if attn_impl is not None and attn_impl not in ("flash", "two_stage", "vanilla"):
             raise ValueError(
@@ -215,14 +851,40 @@ class Engine:
         self.batch_buckets = tuple(sorted(batch_buckets))
         self.prompt_buckets = tuple(sorted(prompt_buckets)) if prompt_buckets else None
         self.max_batch = max_batch if max_batch is not None else self.batch_buckets[-1]
+        self.max_wait_s = max_wait_s
         # prompt-length padding rides on the attention length mask;
         # recurrent mixers would carry pad tokens through their state, so
         # hybrid/rwkv archs get exact-length buckets (batch bucketing only)
         self.pad_prompts = all(k == "attn" for k in cfg.pattern)
         self.donate_cache = donate_cache
+        self.decode_steps_per_poll = decode_steps_per_poll
+        if mode not in ("auto", "continuous", "bucket"):
+            raise ValueError(f"mode={mode!r}: expected auto | continuous | bucket")
+        if mode == "continuous" and not self._continuous_ok():
+            raise ValueError(
+                "mode='continuous' needs an attention-only pattern or a "
+                f"position-free recurrent pattern, got {cfg.pattern} "
+                f"(pos={cfg.pos!r})"
+            )
+        self.continuous = (
+            self._continuous_ok() if mode == "auto" else mode == "continuous"
+        )
         self.stats = LMServeStats()
-        self._fns: dict[tuple[batching.Bucket, bool], Any] = {}
+        self._fns: dict[tuple, Any] = {}
+        self._prefill = PrefillRunner(self)
+        self._sched = Scheduler(self)
         self._queue = batching.MicroBatchQueue(self._run, self.max_batch, max_wait_s)
+
+    def _continuous_ok(self) -> bool:
+        if self.cfg.embed_inputs:
+            return False  # decode feeds ids back; stub frontends can't serve
+        if self.pad_prompts:
+            return True
+        kinds = {lm.mixer_kind(self.cfg, i) for i in range(self.cfg.n_layers)}
+        # recurrent rows are independent, but the decode position is a
+        # shared scalar — only position-free stacks can mix generation
+        # depths in one batch
+        return kinds <= {"mamba", "rwkv"} and self.cfg.pos == "none"
 
     # ---- tiers -----------------------------------------------------------
 
@@ -238,6 +900,31 @@ class Engine:
 
     def _tier(self, tier: Optional[str]) -> str:
         return self._tierset.resolve(tier)
+
+    def _resolve_tier(self, tier: Optional[str], deadline_s: Optional[float]) -> str:
+        if tier == "auto" and "auto" not in self.tiers:
+            return self._autoselect_tier(deadline_s)
+        return self._tier(tier)
+
+    def _autoselect_tier(self, deadline_s: Optional[float]) -> str:
+        """SLA-aware tier choice: the first *declared* tier (declaration
+        order = quality preference) whose measured per-request latency
+        fits the deadline; the fastest measured tier when nothing fits;
+        the default tier before any traffic has been measured."""
+        if deadline_s is None:
+            return self.default_tier
+        measured: dict[str, float] = {}
+        for t in self.tiers:
+            try:
+                measured[t] = self.stats.mean_item_latency_s(tier=t)
+            except ValueError:
+                continue  # tier never served — no evidence either way
+        for t in self.tiers:
+            if t in measured and measured[t] <= deadline_s:
+                return t
+        if measured:
+            return min(measured, key=measured.get)
+        return self.default_tier
 
     # ---- buckets ---------------------------------------------------------
 
@@ -314,17 +1001,59 @@ class Engine:
             **dargs,
         )
 
+    def _slot_decode_fn(self, bucket: DecodeBucket, sampled: bool):
+        """One continuous decode step: model step + next-token selection
+        fused into a single graph so a burst of N steps is N dispatches
+        with no host sync.  Two variants per (width, tier) — greedy-only
+        and sampled (per-slot key streams) — both compiled at most once;
+        everything else about admission runs eagerly, so warm traffic
+        never recompiles."""
+        key = ("slot", bucket, sampled)
+        fn = self._fns.get(key)
+        if fn is None:
+            self.stats.bucket(bucket).compiles += 1
+            rolling = self.pad_prompts
+
+            def body(p, tok, cache, pad, keys, greedy):
+                logits, cache = lm.decode_step(
+                    self.cfg, p, tok, cache,
+                    pad_lens=pad if rolling else None,
+                )
+                lg = logits[:, 0]
+                nxt = jnp.argmax(lg, axis=-1).astype(jnp.int32)
+                if sampled:
+                    pair = jax.vmap(lambda k: jax.random.split(k, 2))(keys)
+                    st = jax.vmap(jax.random.categorical)(pair[:, 1], lg)
+                    nxt = jnp.where(greedy, nxt, st.astype(jnp.int32))
+                    keys = pair[:, 0]
+                return nxt, cache, keys
+
+            dargs = dict(donate_argnums=(2,)) if self.donate_cache else {}
+            fn = self._fns[key] = jax.jit(body, **dargs)
+        return fn
+
     # ---- request path ----------------------------------------------------
 
     def enqueue(
-        self, prompts: jnp.ndarray, n_steps: int, tier: Optional[str] = None
+        self,
+        prompts: jnp.ndarray,
+        n_steps: int,
+        tier: Optional[str] = None,
+        *,
+        priority: int = 0,
+        deadline_s: Optional[float] = None,
+        key: Optional[jax.Array] = None,
     ) -> LMRequest:
-        """Queue a prompt ([l] int) or same-length prompt batch ([b, l]);
-        greedy decoding (sampling needs per-request keys, which do not
-        coalesce — use ``generate``).  Auto-flushes the length group the
-        moment it reaches ``max_batch`` sequences.  ``tier`` selects the
-        precision tier; requests only coalesce within their tier."""
-        tier = self._tier(tier)
+        """Queue a prompt ([l] int) or same-length prompt batch ([b, l]).
+
+        ``priority`` (higher admits first) and ``deadline_s`` (evict with
+        ``DeadlineExceeded`` if unserved in time; also admits the request
+        ahead of coalesce-waiting) drive the continuous scheduler;
+        ``key`` enables per-request sampling (greedy when None).
+        ``tier`` selects the precision tier ("auto" + ``deadline_s``
+        autoselects by measured latency); requests only coalesce within
+        their tier."""
+        tier = self._resolve_tier(tier, deadline_s)
         prompts = jnp.asarray(prompts)
         squeeze = prompts.ndim == 1
         if squeeze:
@@ -339,22 +1068,57 @@ class Engine:
         prompts = prompts.astype(jnp.int32)
         L = self._bucket_len(prompts.shape[1], n_steps)
         self._check_fits(prompts.shape[1], L, n_steps)
-        req = LMRequest(prompts=prompts, n_steps=n_steps, squeeze=squeeze, tier=tier)
-        self._queue.add((tier, L), req, prompts.shape[0])
+        req = LMRequest(
+            prompts=prompts, n_steps=n_steps, squeeze=squeeze, tier=tier,
+            L=L, greedy=key is None, key=key,
+            priority=priority, deadline_s=deadline_s,
+        )
+        if self.continuous:
+            self._sched.add(req)
+        else:
+            if key is not None:
+                raise ValueError(
+                    "per-request sampling keys need the continuous "
+                    "scheduler (mode='continuous'); the bucket engine "
+                    "only coalesces greedy requests"
+                )
+            self._queue.add((tier, L), req, prompts.shape[0])
         return req
 
+    @property
+    def pending(self) -> int:
+        """Requests waiting for admission."""
+        return self._sched.pending if self.continuous else self._queue.pending
+
+    @property
+    def active(self) -> int:
+        """Decode-slot rows currently mid-generation (continuous mode)."""
+        return self._sched.active_rows if self.continuous else 0
+
     def poll(self) -> int:
-        """Flush groups whose oldest request has waited past the deadline.
-        Returns the number of groups flushed."""
+        """One scheduling turn.  Continuous: evict expired requests,
+        admit due waves into the running batch, run a bounded decode
+        burst; returns requests admitted.  Bucket: flush groups past the
+        coalescing deadline; returns groups flushed."""
+        if self.continuous:
+            return self._sched.poll()
+        self._queue.evict_expired(stats=self.stats.scheduler)
         return self._queue.poll()
 
     def flush(self) -> None:
-        """Flush every pending group."""
-        self._queue.flush()
+        """Serve every pending request to completion."""
+        if self.continuous:
+            self._sched.drain()
+        else:
+            self._queue.evict_expired(stats=self.stats.scheduler)
+            self._queue.flush()
 
     def abort(self, err: Optional[BaseException] = None) -> int:
         """Fail every queued request without serving it (shutdown path)."""
-        return self._queue.fail_pending(err or RuntimeError("engine aborted"))
+        err = err or RuntimeError("engine aborted")
+        if self.continuous:
+            return self._sched.abort_all(err)
+        return self._queue.fail_pending(err)
 
     def generate(
         self,
@@ -366,8 +1130,8 @@ class Engine:
         tier: Optional[str] = None,
     ) -> np.ndarray:
         """prompts: [B, L] int32.  Returns generated ids [B, n_steps].
-        Synchronous; runs alone (no coalescing) but on the same bucketed
-        executables, so repeat traffic stays warm."""
+        A thin blocking wrapper over ``enqueue`` + a targeted drain, on
+        the same executables — repeat traffic stays warm."""
         if not greedy and key is None:
             # the old engine silently fell back to greedy here — a wrong
             # answer, not an error.  Sampling needs an explicit key.
@@ -378,10 +1142,19 @@ class Engine:
             raise ValueError(f"prompts must be [B, L] ints, got {prompts.shape}")
         L = self._bucket_len(prompts.shape[1], n_steps)
         self._check_fits(prompts.shape[1], L, n_steps)
-        req = LMRequest(prompts=prompts, n_steps=n_steps, tier=tier)
-        return self._execute(L, [req], greedy=greedy, key=key, tier=tier)
+        if not self.continuous:
+            req = LMRequest(prompts=prompts, n_steps=n_steps, tier=tier)
+            return self._execute(L, [req], greedy=greedy, key=key, tier=tier)
+        req = LMRequest(
+            prompts=prompts, n_steps=n_steps, tier=tier, L=L,
+            greedy=greedy, key=None if greedy else key,
+        )
+        self._sched.add(req)
+        if not req.ready:
+            self._sched.drain(targets=[req], only_group=(tier, L))
+        return np.asarray(req.result())
 
-    # ---- micro-batch execution -------------------------------------------
+    # ---- bucket-mode micro-batch execution -------------------------------
 
     def _run(self, key: tuple[str, int], reqs: list[LMRequest]) -> None:
         tier, L = key
@@ -396,48 +1169,16 @@ class Engine:
         key: Optional[jax.Array],
         tier: str = "default",
     ) -> np.ndarray:
+        """Bucket-at-a-time execution: one prefill wave, then the group's
+        decode loop runs to completion before anything else is served
+        (the continuous scheduler replaces this on supported configs)."""
         params = self.tier_params(tier)
-        n_real = sum(r.prompts.shape[0] for r in reqs)
-        bb = self.batch_bucket(n_real)
+        pre = self._prefill.run(reqs, L, tier)
         n_steps = max(r.n_steps for r in reqs)
+        bb, masked, pad_lens = pre.bb, pre.masked, pre.pad_lens
+        cache = pre.cache
 
-        parts, pads, n_prompt_toks = [], [], 0
-        for r in reqs:
-            x = r.prompts
-            pad = L - x.shape[1]
-            if pad:
-                x = jnp.pad(x, ((0, 0), (pad, 0)))  # LEFT pad (see module doc)
-            parts.append(x)
-            pads += [pad] * x.shape[0]
-            n_prompt_toks += r.prompts.shape[0] * r.prompts.shape[1]
-        # only real length padding needs the masked graph — batch-slack
-        # rows are garbage-in/garbage-out and get sliced off regardless
-        masked = any(p > 0 for p in pads)
-        if n_real < bb:
-            parts.append(jnp.zeros((bb - n_real, L), jnp.int32))
-            pads += [L] * (bb - n_real)
-        toks = jnp.concatenate(parts, axis=0)
-        pad_lens = jnp.asarray(pads, jnp.int32)
-
-        pbucket, dbucket = PrefillBucket(bb, L, tier), DecodeBucket(bb, tier)
-        pfn = self._prefill_fn(pbucket, masked)
-        cache = lm.init_cache(self.cfg, bb, self.max_len)
-        t0 = time.perf_counter()
-        if masked:
-            logits, cache = pfn(params, toks, cache, pad_lens)
-        else:
-            logits, cache = pfn(params, toks, cache)
-        logits.block_until_ready()
-        dt = time.perf_counter() - t0
-        ps = self.stats.bucket(pbucket)
-        ps.calls += 1
-        ps.items += n_real
-        ps.padded_items += bb - n_real
-        ps.tokens += n_prompt_toks
-        ps.total_s += dt
-        ps.latencies_s.append(dt)
-
-        lg = logits[:, -1]
+        lg = pre.logits_last
         if greedy:
             tok = jnp.argmax(lg, axis=-1).astype(jnp.int32)
         else:  # the first generated token comes from prefill — sample it too
@@ -445,6 +1186,7 @@ class Engine:
             tok = jax.random.categorical(sub, lg).astype(jnp.int32)
         out = [tok]
         if n_steps > 1:
+            dbucket = DecodeBucket(bb, tier)
             dfn = self._decode_fn(dbucket, masked)
             t0 = time.perf_counter()
             for _ in range(n_steps - 1):
@@ -464,10 +1206,10 @@ class Engine:
             dt = time.perf_counter() - t0
             ds = self.stats.bucket(dbucket)
             ds.calls += n_steps - 1
-            ds.items += n_real
+            ds.items += pre.n_real
             # the first token comes from prefill — decode produced only
             # n_steps-1 of them (counting all n_steps inflated tokens/s)
-            ds.tokens += n_real * (n_steps - 1)
+            ds.tokens += pre.n_real * (n_steps - 1)
             ds.total_s += dt
             ds.latencies_s.append(dt / (n_steps - 1))
         else:
@@ -481,7 +1223,7 @@ class Engine:
             ids = arr[i0 : i0 + b, : r.n_steps]
             r._deliver(ids[0] if r.squeeze else ids)
             i0 += b
-        return arr[:n_real]
+        return arr[: pre.n_real]
 
 
 # per-config jitted VGGT forwards — vggt_serve used to rebuild (and

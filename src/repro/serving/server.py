@@ -28,16 +28,26 @@ from __future__ import annotations
 import threading
 from typing import Any, Optional
 
-from repro.serving.batching import PendingRequest
+from repro.serving.batching import PendingRequest, ServingEngine
 
 __all__ = ["AsyncServer"]
 
 
 class AsyncServer:
-    """Background deadline-flush loop + thread-safe submit/await over one
-    bucketed engine (LM or VGGT)."""
+    """Background scheduling loop + thread-safe submit/await over one
+    serving engine (anything implementing the
+    ``batching.ServingEngine`` protocol — LM or VGGT)."""
 
-    def __init__(self, engine: Any, poll_interval_s: Optional[float] = None):
+    def __init__(self, engine: ServingEngine, poll_interval_s: Optional[float] = None):
+        missing = [
+            m for m in ("enqueue", "poll", "flush", "abort")
+            if not callable(getattr(engine, m, None))
+        ]
+        if missing:
+            raise TypeError(
+                f"{type(engine).__name__} does not implement the "
+                f"ServingEngine protocol (missing {missing})"
+            )
         self.engine = engine
         if poll_interval_s is None:
             # pace the loop off the engine's own deadline: ~4 polls per
@@ -136,12 +146,18 @@ class AsyncServer:
 
     def _loop(self, stop: threading.Event) -> None:
         while not stop.is_set():
+            busy = False
             try:
                 with self._lock:
-                    self.engine.poll()
+                    busy = self.engine.poll() > 0
+                    # a continuous engine with occupied decode slots wants
+                    # back-to-back bursts, not timer-paced ones — sleeping
+                    # between bursts would serialize decode on the poll
+                    # interval and collapse tokens/s
+                    busy = busy or getattr(self.engine, "active", 0) > 0
             except Exception:
                 # flush_group already _fail-ed every owner of the broken
                 # micro-batch; the loop must survive to keep serving the
                 # other groups' deadlines
                 pass
-            stop.wait(self.poll_interval_s)
+            stop.wait(0.0 if busy else self.poll_interval_s)

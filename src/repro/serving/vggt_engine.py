@@ -72,6 +72,7 @@ class VGGTServeStats(batching.ServeStats):
     feed-forward vocabulary)."""
 
     unit = "scenes"
+    kind = "vggt"
 
 
 @dataclasses.dataclass
@@ -202,26 +203,44 @@ class VGGTEngine:
             self._queue.flush_group(self._group_key(req.scenes, req.tier))
         return req.result()
 
-    def enqueue(self, scenes: jnp.ndarray, tier: Optional[str] = None) -> PendingRequest:
+    def enqueue(
+        self,
+        scenes: jnp.ndarray,
+        tier: Optional[str] = None,
+        *,
+        priority: int = 0,
+        deadline_s: Optional[float] = None,
+    ) -> PendingRequest:
         """Queue a [b, S, P, d] scene batch; auto-flushes a group the
         moment it reaches ``max_batch`` scenes.  ``tier`` selects the
-        precision tier; requests only coalesce within their tier."""
+        precision tier; requests only coalesce within their tier.
+        Higher ``priority`` requests are packed into a flushing
+        micro-batch first; a request older than ``deadline_s`` seconds is
+        evicted (its ``result()`` raises ``DeadlineExceeded``) instead of
+        being served late."""
         tier = self._tier(tier)
         scenes = jnp.asarray(scenes)
         if scenes.ndim != 4:
             raise ValueError(f"scenes must be [b, S, P, d], got {scenes.shape}")
         b, _, p_, _ = scenes.shape
-        req = PendingRequest(scenes=scenes, n_patches=p_, tier=tier)
+        req = PendingRequest(
+            scenes=scenes, n_patches=p_, tier=tier,
+            priority=priority, deadline_s=deadline_s,
+        )
         self._queue.add(self._group_key(scenes, tier), req, b)
         return req
 
     def poll(self) -> int:
-        """Flush groups whose oldest request has waited past the deadline.
-        Returns the number of groups flushed."""
+        """Evict requests past their deadline, then flush groups whose
+        oldest request has waited past ``max_wait_s``.  Returns the
+        number of groups flushed."""
+        self._queue.evict_expired(stats=self.stats.scheduler)
         return self._queue.poll()
 
     def flush(self) -> None:
-        """Flush every pending group."""
+        """Flush every pending group (deadline-expired requests are
+        evicted first, not served late)."""
+        self._queue.evict_expired(stats=self.stats.scheduler)
         self._queue.flush()
 
     def abort(self, err: Optional[BaseException] = None) -> int:

@@ -1,0 +1,55 @@
+"""ServeSpec: the one shared grammar behind --policy and --tiers values
+(parse/format round-trip, informative errors, materialization)."""
+import pytest
+
+from repro.core.precision import PrecisionPlan
+from repro.core.versaq import QuantPolicy
+from repro.launch.specs import ServeSpec
+
+
+@pytest.mark.parametrize("s", ["fp", "w4a8", "w4a16", "w4a8:fused",
+                               "plan", "plan:fused"])
+def test_parse_format_round_trip(s):
+    spec = ServeSpec.parse(s)
+    assert ServeSpec.parse(spec.format()) == spec
+    assert str(spec) == spec.format() == s
+
+
+def test_parse_normalizes():
+    assert ServeSpec.parse(" W4A8 ").level == "w4a8"
+    assert ServeSpec.parse("bf16") == ServeSpec.parse("fp")
+
+
+@pytest.mark.parametrize("bad", ["", "w4", "w4a", "4a8", "w4a8:quant",
+                                 "bf16:fused", "fp:fused", "nope"])
+def test_parse_malformed_is_informative(bad):
+    with pytest.raises(ValueError, match="serve spec"):
+        ServeSpec.parse(bad)
+
+
+def test_materialize_levels():
+    assert ServeSpec.parse("fp").materialize() is None
+    assert ServeSpec.parse("w4a8").materialize() == QuantPolicy(4, 8, "versaq")
+    assert ServeSpec.parse("w4a4", "rtn").materialize() == QuantPolicy(4, 4, "rtn")
+    plan = ServeSpec.parse("w4a8:fused").materialize()
+    assert isinstance(plan, PrecisionPlan)
+    assert plan.fuse and plan.use_kernel and plan.default == "w4a8"
+
+
+def test_materialize_plan_needs_model():
+    with pytest.raises(ValueError, match="plan"):
+        ServeSpec.parse("plan").materialize()
+
+
+def test_tiers_round_trip():
+    t = ServeSpec.parse_tiers("quality=fp, balanced=w4a8, fast=plan:fused")
+    assert list(t) == ["quality", "balanced", "fast"]
+    assert ServeSpec.parse_tiers(ServeSpec.format_tiers(t)) == t
+    assert ServeSpec.parse_tiers(None) is None
+    assert ServeSpec.parse_tiers("") is None
+
+
+@pytest.mark.parametrize("bad", ["fast", "=w4a8", "fast=", "a=fp,a=w4a8"])
+def test_tiers_malformed(bad):
+    with pytest.raises(ValueError):
+        ServeSpec.parse_tiers(bad)

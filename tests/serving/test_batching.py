@@ -14,7 +14,10 @@ def test_stats_buckets_sort_numerically():
     stats = VGGTServeStats()
     for b in (Bucket(16, 2, 8), Bucket(2, 2, 8), Bucket(4, 2, 8), Bucket(2, 3, 8)):
         stats.bucket(b).calls += 1
-    assert list(stats.summary()) == ["b2xs2xp8", "b2xs3xp8", "b4xs2xp8", "b16xs2xp8"]
+    assert list(stats.summary()["buckets"]) == [
+        "b2xs2xp8", "b2xs3xp8", "b4xs2xp8", "b16xs2xp8"
+    ]
+    assert stats.summary()["kind"] == "vggt"
     lines = stats.format().splitlines()[1:]
     assert [l.split()[0] for l in lines] == [
         "b2xs2xp8", "b2xs3xp8", "b4xs2xp8", "b16xs2xp8"
@@ -26,10 +29,11 @@ def test_lm_stats_sort_numerically_within_kind():
     for b in (PrefillBucket(16, 8), PrefillBucket(2, 16), DecodeBucket(16),
               DecodeBucket(2), PrefillBucket(2, 8)):
         stats.bucket(b).calls += 1
-    assert list(stats.summary()) == [
+    assert list(stats.summary()["buckets"]) == [
         "decode:b2", "decode:b16",
         "prefill:b2xl8", "prefill:b2xl16", "prefill:b16xl8",
     ]
+    assert stats.summary()["kind"] == "lm"
 
 
 def test_bucket_str_and_sizes():

@@ -1,0 +1,181 @@
+"""Continuous-batching scheduler: requests enqueued mid-decode join the
+*running* batch (admission asserted before the batch drains), slot
+free/reuse parity vs the bucket engine, priority ordering, deadline
+eviction, SLA tier autoselection, and the zero-warm-recompile contract.
+"""
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core.versaq import W4A8
+from repro.models import lm
+from repro.serving.batching import DeadlineExceeded
+from repro.serving.engine import Engine, PrefillBucket
+
+
+@pytest.fixture(scope="module")
+def cfg():
+    return get_config("qwen3-14b-smoke")
+
+
+@pytest.fixture(scope="module")
+def params(cfg):
+    return lm.init_params(cfg, jax.random.PRNGKey(0))
+
+
+def _prompts(cfg, b, l, seed):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.integers(0, cfg.vocab_size, (b, l)), jnp.int32)
+
+
+def test_request_joins_running_batch(cfg, params):
+    """ACCEPTANCE: a request enqueued while another is mid-decode is
+    admitted before that batch drains, and both results are token-exact
+    vs the bucket engine (the roll-install masking argument)."""
+    eng = Engine(cfg, params, max_len=64, max_wait_s=0.0,
+                 decode_steps_per_poll=2)
+    assert eng.continuous
+    pa = _prompts(cfg, 1, 16, 0)
+    pb = _prompts(cfg, 1, 8, 1)
+    ra = eng.enqueue(pa[0], 12)
+    assert eng.poll() == 1                 # A admitted, one bounded burst
+    assert not ra.ready and eng.active == 1
+    rb = eng.enqueue(pb[0], 4)
+    assert eng.poll() == 1                 # B joined the RUNNING batch
+    assert eng.stats.scheduler.admitted_mid_decode == 1
+    assert not ra.ready                    # admission preceded A's drain
+    eng.flush()
+    ref = Engine(cfg, params, max_len=64, mode="bucket")
+    np.testing.assert_array_equal(ra.result(), ref.generate(pa, 12)[0])
+    np.testing.assert_array_equal(rb.result(), ref.generate(pb, 4)[0])
+
+
+def test_slots_free_and_reuse_without_recompile(cfg, params):
+    """Finished requests release their slots; the next wave reuses them
+    warm (no recompile) and still matches the bucket engine exactly."""
+    eng = Engine(cfg, params, max_len=64, max_wait_s=0.0, batch_buckets=(2,))
+    ref = Engine(cfg, params, max_len=64, mode="bucket")
+    p1 = _prompts(cfg, 2, 8, 2)
+    np.testing.assert_array_equal(eng.generate(p1, 6), ref.generate(p1, 6))
+    assert eng.active == 0                 # both slots released
+    compiles = eng.stats.compiles
+    p2 = _prompts(cfg, 2, 8, 3)
+    np.testing.assert_array_equal(eng.generate(p2, 6), ref.generate(p2, 6))
+    assert eng.stats.compiles == compiles  # freed slots reused warm
+
+
+def test_priority_orders_admission(cfg, params):
+    eng = Engine(cfg, params, max_len=64, max_wait_s=0.0,
+                 batch_buckets=(1,), max_batch=8)
+    lo = eng.enqueue(_prompts(cfg, 1, 8, 4)[0], 4, priority=0)
+    hi = eng.enqueue(_prompts(cfg, 1, 8, 5)[0], 4, priority=5)
+    eng.poll()                             # one slot: high priority wins it
+    assert hi.ready and not lo.ready
+    eng.flush()
+    assert lo.result().shape == (4,)
+
+
+def test_deadline_eviction_queued(cfg, params):
+    eng = Engine(cfg, params, max_len=64, max_wait_s=3600.0)
+    req = eng.enqueue(_prompts(cfg, 1, 8, 6)[0], 4, deadline_s=0.01)
+    time.sleep(0.03)
+    eng.poll()
+    assert req.ready
+    with pytest.raises(DeadlineExceeded, match="deadline"):
+        req.result()
+    assert eng.stats.scheduler.deadline_evictions == 1
+
+
+def test_deadline_eviction_mid_decode(cfg, params):
+    eng = Engine(cfg, params, max_len=128, max_wait_s=0.0,
+                 decode_steps_per_poll=1)
+    doomed = eng.enqueue(_prompts(cfg, 1, 8, 7)[0], 64, deadline_s=0.05)
+    eng.poll()                             # admitted, decoding
+    assert eng.active == 1 and not doomed.ready
+    time.sleep(0.08)
+    eng.poll()                             # expired mid-decode -> evicted
+    with pytest.raises(DeadlineExceeded, match="mid-decode"):
+        doomed.result()
+    assert eng.active == 0                 # its slot returned to the free list
+    assert eng.stats.scheduler.deadline_evictions == 1
+
+
+def test_zero_warm_recompiles_mixed_arrivals(cfg, params):
+    """ACCEPTANCE: warm continuous traffic — mixed prompt lengths and
+    generation lengths arriving against a running batch — triggers zero
+    recompiles (decode is jit-cached per slot-width bucket)."""
+    eng = Engine(cfg, params, max_len=64, max_wait_s=0.0, batch_buckets=(4,))
+    eng.generate(_prompts(cfg, 1, 8, 8), 4)    # warm L=8 (unmasked prefill)
+    eng.generate(_prompts(cfg, 1, 12, 9), 4)   # warm L=16 (masked prefill)
+    compiles = eng.stats.compiles
+    reqs = [
+        eng.enqueue(_prompts(cfg, 1, 8 if i % 2 else 12, 10 + i)[0], 3 + i % 3)
+        for i in range(6)
+    ]
+    for _ in range(64):
+        eng.poll()
+        if all(r.ready for r in reqs):
+            break
+    assert all(r.ready for r in reqs)
+    assert eng.stats.compiles == compiles      # zero warm recompiles
+    assert eng.stats.scheduler.admitted_mid_decode > 0
+    assert 0.0 < eng.stats.scheduler.slot_occupancy <= 1.0
+
+
+def test_auto_tier_selects_by_measured_latency(cfg, params):
+    eng = Engine(cfg, params, max_len=64, max_wait_s=3600.0,
+                 tiers={"quality": None, "fast": W4A8})
+    # no measured traffic yet: auto falls back to the default tier
+    assert eng._resolve_tier("auto", deadline_s=1.0) == "quality"
+    # synthesize measurements: quality is slow, fast is fast
+    for tier, lat in (("quality", 0.5), ("fast", 0.001)):
+        s = eng.stats.bucket(PrefillBucket(1, 8, tier))
+        s.calls, s.items, s.total_s = 1, 1, lat
+        s.latencies_s.append(lat)
+    assert eng._resolve_tier("auto", 1.0) == "quality"   # fits: best quality
+    assert eng._resolve_tier("auto", 0.01) == "fast"     # SLA forces the drop
+    assert eng._resolve_tier("auto", 1e-6) == "fast"     # nothing fits: fastest
+    req = eng.enqueue(_prompts(cfg, 1, 8, 20)[0], 2, tier="auto",
+                      deadline_s=0.01)
+    assert req.tier == "fast"
+    eng.abort()
+
+
+def test_recurrent_state_runner_joins_running_batch():
+    """Position-free recurrent stacks use the state-cache runner: any
+    prompt length joins a running batch, results exact vs bucket mode."""
+    rcfg = get_config("rwkv6-1.6b-smoke")
+    rparams = lm.init_params(rcfg, jax.random.PRNGKey(1))
+    eng = Engine(rcfg, rparams, max_len=64, max_wait_s=0.0,
+                 decode_steps_per_poll=2)
+    assert eng.continuous and not eng.pad_prompts
+    pa = _prompts(rcfg, 1, 11, 21)         # exact-length buckets here
+    pb = _prompts(rcfg, 1, 7, 22)
+    ra = eng.enqueue(pa[0], 8)
+    eng.poll()
+    assert not ra.ready
+    rb = eng.enqueue(pb[0], 4)             # shorter prompt joins mid-decode
+    eng.poll()
+    assert eng.stats.scheduler.admitted_mid_decode == 1
+    eng.flush()
+    ref = Engine(rcfg, rparams, max_len=64, mode="bucket")
+    np.testing.assert_array_equal(ra.result(), ref.generate(pa, 8)[0])
+    np.testing.assert_array_equal(rb.result(), ref.generate(pb, 4)[0])
+
+
+def test_summary_schema_includes_scheduler(cfg, params):
+    eng = Engine(cfg, params, max_len=64)
+    eng.generate(_prompts(cfg, 2, 8, 30), 3)
+    s = eng.stats.summary()
+    assert s["kind"] == "lm" and s["unit"] == "seqs"
+    assert set(s["scheduler"]) == {
+        "admitted", "admitted_mid_decode", "deadline_evictions",
+        "slot_occupancy",
+    }
+    assert s["scheduler"]["admitted"] == 1
+    assert s["totals"]["items"] >= 2
+    assert all("compiles" in b for b in s["buckets"].values())

@@ -62,7 +62,7 @@ def test_lm_tiers_coalesce_within_tier_only():
     r1 = eng.enqueue(prompts[0], 3, tier="quality")
     r2 = eng.enqueue(prompts[1], 3, tier="fast")
     assert not r1.ready and not r2.ready
-    assert eng._queue.pending == 2  # same length, different tiers: 2 groups
+    assert eng.pending == 2  # same length, different tiers: 2 groups
     eng.flush()
     assert r1.ready and r2.ready
     assert r1.result().shape == (3,)
