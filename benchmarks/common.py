@@ -24,8 +24,22 @@ from repro.models import vggt
 from repro.optim import adamw
 
 
+# rows collected since the last reset_rows(); the driver snapshots these
+# per module into the machine-readable BENCH_*.json trajectory point
+_ROWS: list[dict] = []
+
+
 def emit(name: str, us: float, derived: str) -> None:
+    _ROWS.append({"name": name, "us_per_call": round(us, 2), "derived": derived})
     print(f"{name},{us:.2f},{derived}")
+
+
+def reset_rows() -> None:
+    _ROWS.clear()
+
+
+def collected_rows() -> list[dict]:
+    return list(_ROWS)
 
 
 def timeit(fn, *args, iters=3) -> float:

@@ -10,11 +10,13 @@ timings (CPU container; TPU v5e is the target).
 the fast modules without paying for the trained-fixture ones.
 """
 import argparse
+import json
 import sys
 import time
 import traceback
 
 from benchmarks import (
+    common,
     fig3_profile,
     fig10_bitwidth,
     fig11_ablation,
@@ -26,6 +28,7 @@ from benchmarks import (
     serve_continuous_bench,
     table1_quant_accuracy,
 )
+from repro.kernels import probe
 
 MODULES = [
     ("table1+2 (quant accuracy)", table1_quant_accuracy),
@@ -50,6 +53,12 @@ def main(argv=None) -> None:
         help="comma-separated substrings; run only matching module titles "
              "(e.g. --only fig10,kernels)",
     )
+    ap.add_argument(
+        "--json", default=None, metavar="PATH",
+        help="also write a machine-readable summary (per-bench rows, kernel "
+             "call counts, modeled intermediate bytes) — the BENCH_*.json "
+             "trajectory format",
+    )
     args = ap.parse_args(argv)
     modules = MODULES
     if args.only:
@@ -59,19 +68,51 @@ def main(argv=None) -> None:
             titles = [t for t, _ in MODULES]
             raise SystemExit(f"--only {args.only!r} matched none of {titles}")
     print("name,us_per_call,derived")
-    failures = []
+    failures, benches = [], []
     for title, mod in modules:
         t0 = time.time()
         print(f"# --- {title} ---")
-        try:
-            mod.main()
-        except Exception:
-            failures.append(title)
-            traceback.print_exc()
-        print(f"# ({title}: {time.time()-t0:.1f}s)")
+        common.reset_rows()
+        ok = True
+        with probe.tracking() as log:
+            try:
+                mod.main()
+            except Exception:
+                ok = False
+                failures.append(title)
+                traceback.print_exc()
+        dt = time.time() - t0
+        print(f"# ({title}: {dt:.1f}s)")
+        benches.append({
+            "title": title,
+            "ok": ok,
+            "seconds": round(dt, 2),
+            "rows": common.collected_rows(),
+            "kernel_calls": log.by_name(),
+            "kernel_bytes": dict(log.nbytes),
+        })
+    if args.json:
+        _write_json(args.json, args.only, benches)
     if failures:
         print("# FAILED:", failures)
         sys.exit(1)
+
+
+def _write_json(path: str, only, benches: list[dict]) -> None:
+    import jax
+
+    blob = {
+        "version": 1,
+        "generated_by": "benchmarks/run.py",
+        "date": time.strftime("%Y-%m-%d"),
+        "backend": jax.default_backend(),
+        "only": only,
+        "benches": benches,
+    }
+    with open(path, "w") as f:
+        json.dump(blob, f, indent=2, sort_keys=True)
+        f.write("\n")
+    print(f"# wrote {path}")
 
 
 if __name__ == "__main__":

@@ -34,6 +34,10 @@ class ModelConfig:
     # False pins the jnp emulation (dryrun cost analysis counts its
     # unrolled chunk loop — see launch/specs.py)
     attn_use_kernel: bool = True
+    # compiled-KernelSchedule attention tile targets: hashable tuple of
+    # (name, int) pairs (bq_target/bk_target/bkv_target) resolved through
+    # kernels.ops.attention_tiles at trace time; None = policy defaults
+    attn_tiles: tuple | None = None
     attn_dtype: str = "f32"  # f32 | bf16 streaming-attention compute dtype
     act: str = "swiglu"  # swiglu | geglu | gelu
     # --- MoE ---

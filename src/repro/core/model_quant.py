@@ -81,9 +81,19 @@ class _Resolver:
     triples become :class:`FusedFFN` (one Pallas launch per layer), Q/K/V
     merge into one prologue-carrying ``wqkv`` site, and output projections
     run their IDCT/bias epilogues in-kernel.  Fusion implies kernel
-    routing at the fused sites."""
+    routing at the fused sites.
+
+    A compiled ``KernelSchedule`` (``core/precision/compiler.py``, duck-
+    typed on ``fuse_decision``) is also accepted: the embedded plan drives
+    per-site levels exactly as before, but fusion decisions and kernel
+    tiles are *read from the schedule* instead of re-derived inline —
+    the walkers stop deciding and start executing."""
 
     def __init__(self, policy):
+        self._schedule = None
+        if hasattr(policy, "fuse_decision"):  # compiled KernelSchedule
+            self._schedule = policy
+            policy = policy.plan
         if hasattr(policy, "policy_for"):  # PrecisionPlan
             self._plan = policy
             self.method = policy.method
@@ -110,6 +120,20 @@ class _Resolver:
             return self._policy
         return self._plan.policy_for(site)
 
+    def tiles_at(self, site: str) -> Optional[tuple]:
+        """Compiled kernel tiles for a site (hashable tuple), or None to
+        resolve tiles from the heuristic policy at trace time."""
+        if self._schedule is None:
+            return None
+        return self._schedule.tiles_for(site)
+
+    def fuse_decision(self, group: str):
+        """None -> no schedule, decide fusion inline (legacy); else a
+        ``(fuse: bool, group_entry)`` pair read from the schedule."""
+        if self._schedule is None:
+            return None
+        return self._schedule.fuse_decision(group)
+
 
 def _vmapped(fn, n_lead: int):
     """vmap ``fn`` over ``n_lead`` stacked leading axes (scan groups,
@@ -127,25 +151,26 @@ def _prep(w, pol: _Resolver, site: str, lead=0, **kw):
     dims; None kwargs are closed over.
     """
     site_policy = pol.at(site)
+    tiles = pol.tiles_at(site)
     arr_keys = [k for k in ("gamma", "beta", "bias", "out_scale") if kw.get(k) is not None]
     static_kw = {k: v for k, v in kw.items() if k not in arr_keys}
 
     def go(w_, *arrs):
         d = dict(zip(arr_keys, arrs))
-        return _prepare_site(w_, pol, site_policy, **static_kw, **d)
+        return _prepare_site(w_, pol, site_policy, tiles=tiles, **static_kw, **d)
 
     fn = _vmapped(go, lead)
     return fn(w, *[kw[k] for k in arr_keys])
 
 
-def _prepare_site(w, pol: _Resolver, site_policy, *, out_scale=None, **kw):
+def _prepare_site(w, pol: _Resolver, site_policy, *, out_scale=None, tiles=None, **kw):
     if out_scale is not None:
         w = w * out_scale[None, :]
         if kw.get("bias") is not None:
             kw["bias"] = kw["bias"] * out_scale
     if site_policy is None:  # bf16 passthrough site
         return prepare_linear_fp(w, use_wht=pol.use_wht, **kw)
-    return prepare_linear(w, site_policy, use_kernel=pol.use_kernel, **kw)
+    return prepare_linear(w, site_policy, use_kernel=pol.use_kernel, tiles=tiles, **kw)
 
 
 def _fold_fp(w, gamma=None, beta=None, bias=None, rotate_in=False):
@@ -217,7 +242,7 @@ def _zeros_bias(p: QuantLinear):
     return jnp.zeros(p.qw.values.shape[:-2] + (p.qw.values.shape[-1],), jnp.float32)
 
 
-def _concat_sites(parts, *, prologue=None, norm_u=None) -> QuantLinear:
+def _concat_sites(parts, *, prologue=None, norm_u=None, tiles=None) -> QuantLinear:
     """One QuantLinear over the output-concat of separately *prepared*
     sites (e.g. Q/K/V): they consume the same input, so the per-token
     activation quantization is computed once and the matmuls become one
@@ -241,7 +266,7 @@ def _concat_sites(parts, *, prologue=None, norm_u=None) -> QuantLinear:
         )
     return dataclasses.replace(
         f, qw=qw, bias=bias, use_kernel=True,
-        prologue=prologue, epilogue=Epilogue(), norm_u=norm_u,
+        prologue=prologue, epilogue=Epilogue(), norm_u=norm_u, tiles=tiles,
     )
 
 
@@ -254,45 +279,69 @@ def _norm_u_for(kind: str, dim: int, groups: int | None):
     return u
 
 
-def _fuse_qkv(mx: dict, mn_kind: str, d_model: int, groups, rotated: bool) -> dict:
+def _fuse_qkv(
+    mx: dict, mn_kind: str, d_model: int, groups, rotated: bool, decision=None
+) -> dict:
     """Merge prepared wq/wk/wv into one ``wqkv`` site with a norm→quantize
-    prologue, and move wo's IDCT/bias epilogue in-kernel."""
+    prologue, and move wo's IDCT/bias epilogue in-kernel.
+
+    ``decision`` is None for the legacy inline eligibility checks, or the
+    resolver's ``(fuse, group_entry)`` pair when a compiled schedule
+    already settled the question (the entry carries the ``wo`` epilogue
+    flag and the fused launch's tiles)."""
     parts = [mx["wq"], mx["wk"], mx["wv"]]
-    if not _same_mode(parts):
-        return mx  # mixed-precision Q/K/V (or bf16 islands): keep per-site
-    if sum(_panel_bytes(p, groups) for p in parts) > FUSED_PANEL_BUDGET:
-        return mx  # QKV panel would not fit VMEM-resident: keep per-site
+    tiles = None
+    if decision is not None:
+        fuse, entry = decision
+        if not fuse:
+            return mx
+        wo_epi = entry.wo_epilogue
+        tiles = entry.tiles
+    else:
+        if not _same_mode(parts):
+            return mx  # mixed-precision Q/K/V (or bf16 islands): keep per-site
+        if sum(_panel_bytes(p, groups) for p in parts) > FUSED_PANEL_BUDGET:
+            return mx  # QKV panel would not fit VMEM-resident: keep per-site
+        wo_epi = (
+            isinstance(mx["wo"], QuantLinear)
+            and _panel_bytes(mx["wo"], groups) <= FUSED_PANEL_BUDGET
+        )
     pro = Prologue(norm=mn_kind) if rotated else None
     mx["wqkv"] = _concat_sites(
         parts,
         prologue=pro,
         norm_u=_norm_u_for(mn_kind, d_model, groups) if rotated else None,
+        tiles=tiles,
     )
     for name in ("wq", "wk", "wv"):
         del mx[name]
-    if (
-        isinstance(mx["wo"], QuantLinear)
-        and _panel_bytes(mx["wo"], groups) <= FUSED_PANEL_BUDGET
-    ):
+    if wo_epi:
         mx["wo"] = dataclasses.replace(
             mx["wo"], use_kernel=True, epilogue=Epilogue()
         )
     return mx
 
 
-def _fuse_ffn(f: dict, act: str, fn_kind: str, d_model: int, groups, rotated: bool):
+def _fuse_ffn(
+    f: dict, act: str, fn_kind: str, d_model: int, groups, rotated: bool, decision=None
+):
     """Prepared dense-FFN dict -> :class:`FusedFFN` (one launch per layer)
-    when every member site is quantized compatibly; else unchanged."""
+    when every member site is quantized compatibly; else unchanged.
+    ``decision`` as in :func:`_fuse_qkv`."""
     gate, up, down = f.get("w_gate"), f.get("w_up"), f.get("w_down")
     parts = [p for p in (gate, up, down) if p is not None]
-    if not all(isinstance(p, QuantLinear) for p in parts):
-        return f
-    if gate is not None and not _same_mode([gate, up]):
-        return f  # gate/up share one quantized input: bits must agree
-    if up.dct_block != down.dct_block:
-        return f
-    if sum(_panel_bytes(p, groups) for p in parts) > FUSED_PANEL_BUDGET:
-        return f  # gate+up+down panels would not fit VMEM-resident
+    if decision is not None:
+        if not decision[0]:
+            return f
+    else:
+        if not all(isinstance(p, QuantLinear) for p in parts):
+            return f
+        if gate is not None and not _same_mode([gate, up]):
+            return f  # gate/up share one quantized input: bits must agree
+        if up.dct_block != down.dct_block:
+            return f
+        if sum(_panel_bytes(p, groups) for p in parts) > FUSED_PANEL_BUDGET:
+            return f  # gate+up+down panels would not fit VMEM-resident
     gated_act = "silu" if act == "swiglu" else "gelu"
     return FusedFFN(
         w_up=up,
@@ -394,7 +443,9 @@ def _quantize_layer(cfg, lp, kind, fk, pol: _Resolver, rotated, *, lead, pfx):
                 if kvdown_policy is None:
                     return prepare_linear_fp(w2, use_wht=pol.use_wht, bias=None, **common, **d)
                 return prepare_linear(w2, kvdown_policy, bias=None,
-                                      use_kernel=pol.use_kernel, **common, **d)
+                                      use_kernel=pol.use_kernel,
+                                      tiles=pol.tiles_at(f"{pfx}.mixer.w_kv_down"),
+                                      **common, **d)
 
             arrs = [a for a in (g1, b1) if a is not None]
             mx["w_kv_down"] = _vmapped(prep_kvdown, lead)(wkv, *arrs)
@@ -428,7 +479,8 @@ def _quantize_layer(cfg, lp, kind, fk, pol: _Resolver, rotated, *, lead, pfx):
                              head_rot_in=(cfg.n_heads, dh),
                              rotate_out_offline=rotated)
             if pol.fuse:
-                mx = _fuse_qkv(mx, mn.kind, cfg.d_model, groups, rotated)
+                mx = _fuse_qkv(mx, mn.kind, cfg.d_model, groups, rotated,
+                               decision=pol.fuse_decision(f"{pfx}.mixer.wqkv"))
         out["mixer"] = mx
         if ls1 is not None:
             out.pop("ls1", None)
@@ -458,7 +510,8 @@ def _quantize_layer(cfg, lp, kind, fk, pol: _Resolver, rotated, *, lead, pfx):
                             bias=lp["ffn"]["w_down"].get("b"), out_scale=ls2,
                             rotate_input_online=True, rotate_out_offline=rotated)
         if pol.fuse:
-            f = _fuse_ffn(f, cfg.act, fnm.kind, cfg.d_model, groups, rotated)
+            f = _fuse_ffn(f, cfg.act, fnm.kind, cfg.d_model, groups, rotated,
+                          decision=pol.fuse_decision(f"{pfx}.ffn"))
         out["ffn"] = f
         if ls2 is not None:
             out.pop("ls2", None)
@@ -563,7 +616,8 @@ def quantize_vggt(cfg: ModelConfig, params: dict, policy) -> dict:
                          out_scale=bp.get("ls1"), head_rot_in=(cfg.n_heads, dh),
                          rotate_out_offline=rotated)
         if pol.fuse:
-            at = _fuse_qkv(at, an.kind, cfg.d_model, groups, rotated)
+            at = _fuse_qkv(at, an.kind, cfg.d_model, groups, rotated,
+                           decision=pol.fuse_decision(f"{pfx}.attn.wqkv"))
         nb["attn"] = at
         ff = dict(bp["ffn"])
         for name in ("w_gate", "w_up"):
@@ -575,7 +629,8 @@ def quantize_vggt(cfg: ModelConfig, params: dict, policy) -> dict:
                              bias=bp["ffn"]["w_down"].get("b"), out_scale=bp.get("ls2"),
                              rotate_input_online=True, rotate_out_offline=rotated)
         if pol.fuse:
-            ff = _fuse_ffn(ff, cfg.act, fn.kind, cfg.d_model, groups, rotated)
+            ff = _fuse_ffn(ff, cfg.act, fn.kind, cfg.d_model, groups, rotated,
+                           decision=pol.fuse_decision(f"{pfx}.ffn"))
         nb["ffn"] = ff
         nb.pop("ls1", None)
         nb.pop("ls2", None)

@@ -16,6 +16,16 @@ network runs 4-bit.  This package is the software realization:
   a modeled weight-bytes + latency budget (``launch/roofline_util``
   hardware constants).
 
+* ``compiler`` — lowers ``(model config, PrecisionPlan)`` to an explicit,
+  JSON-serializable :class:`KernelSchedule`: one entry per weight site
+  with kernel choice, tile shapes, prologue/epilogue descriptors, and
+  fallback reasons.  Engines load the schedule instead of re-deciding
+  fusion at quantize time.
+* ``tuner``   — autotuner behind the compiler: times candidate tilings
+  (modeled HBM bytes on CPU, wall clock on hardware) and persists
+  winners in a :class:`TuningDB` keyed on (shape, dtype, fusion,
+  backend).
+
 Dispatch lives in ``core/model_quant``: ``quantize_lm`` / ``quantize_vggt``
 accept a :class:`PrecisionPlan` wherever they accept a uniform
 ``QuantPolicy``, and emit per-site ``QuantLinear`` leaves (int8 MXU path,
@@ -28,6 +38,14 @@ from repro.core.precision.plan import (
     level_policy,
     parse_level,
 )
+from repro.core.precision.compiler import (
+    AttentionSchedule,
+    FusedGroupSchedule,
+    KernelSchedule,
+    SiteSchedule,
+    compile_schedule,
+)
+from repro.core.precision.tuner import Autotuner, TuningDB
 from repro.core.precision.planner import (
     SiteInfo,
     enumerate_sites,
@@ -39,6 +57,13 @@ from repro.core.precision.planner import (
 )
 
 __all__ = [
+    "AttentionSchedule",
+    "Autotuner",
+    "FusedGroupSchedule",
+    "KernelSchedule",
+    "SiteSchedule",
+    "TuningDB",
+    "compile_schedule",
     "LEVELS",
     "LayerPolicy",
     "PrecisionPlan",

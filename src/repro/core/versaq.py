@@ -156,6 +156,11 @@ class QuantLinear:
         metadata=dict(static=True), default=None
     )
     norm_u: Optional[jnp.ndarray] = None
+    # Compiled-schedule tiles for the kernel launch, as a hashable
+    # ``(("bn", n), ("bk", k), ("bm_target", m))`` tuple (see
+    # ``core/precision/compiler.py``).  None = resolve tiles from the
+    # heuristic policy at trace time; static, so it never adds a leaf.
+    tiles: Optional[tuple] = dataclasses.field(metadata=dict(static=True), default=None)
 
 
 @jax.tree_util.register_dataclass
@@ -318,8 +323,15 @@ def apply_linear(p: Any, x: jnp.ndarray) -> jnp.ndarray:
         if _kernel_ready(p):
             from repro.kernels import ops as kernel_ops
 
+            t = dict(p.tiles) if p.tiles else {}
             y = kernel_ops.quant_linear_matmul(
-                x, p.qw, a_bits=p.a_bits, out_dtype=jnp.float32
+                x,
+                p.qw,
+                a_bits=p.a_bits,
+                out_dtype=jnp.float32,
+                bn=t.get("bn"),
+                bk=t.get("bk"),
+                bm_target=t.get("bm_target"),
             )
         else:
             xq = quantize_per_token(x, p.a_bits)
@@ -471,6 +483,7 @@ def prepare_linear(
     prologue: Optional[Prologue] = None,
     epilogue: Optional[Epilogue] = None,
     norm_u: Optional[jnp.ndarray] = None,
+    tiles: Optional[tuple] = None,
 ) -> QuantLinear:
     """Fuse transforms into a [in, out] weight and quantize (Eq. 7).
 
@@ -517,6 +530,7 @@ def prepare_linear(
         prologue=prologue,
         epilogue=epilogue,
         norm_u=norm_u,
+        tiles=tiles,
     )
 
 

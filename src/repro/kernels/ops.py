@@ -39,6 +39,11 @@ __all__ = [
     "norm_quant_prologue",
     "divisor_tile",
     "lane_tile",
+    "matmul_tiles",
+    "attention_tiles",
+    "matmul_tile_seed",
+    "attention_tile_seed",
+    "matmul_traffic_bytes",
 ]
 
 LANE = 8  # sublane granularity the TPU lowerings want tiles aligned to
@@ -57,12 +62,16 @@ def quant_linear_matmul(
     bm: int | None = None,
     bn: int | None = None,
     bk: int | None = None,
+    bm_target: int | None = None,
 ) -> jnp.ndarray:
     """Quantize activations per-token and run the integer matmul kernel.
 
     x: [..., K] float -> returns [..., N] ``out_dtype``.  The token dim is
     lane-padded (zero rows, sliced off) when no healthy divisor tile
-    exists; K/N are weight dims and use exact divisors.
+    exists; K/N are weight dims and use exact divisors.  ``bm`` is an exact
+    legacy tile (M padded up to a multiple); ``bm_target`` — what compiled
+    ``KernelSchedule`` entries carry — resolves through :func:`lane_tile`
+    at trace time, since the token count is not known at compile time.
     """
     interpret = _default_interpret() if interpret is None else interpret
     lead = x.shape[:-1]
@@ -70,22 +79,18 @@ def quant_linear_matmul(
     n = wq.shape[-1]
     xq = quantize_per_token(x.reshape(-1, k), a_bits)
     m = xq.values.shape[0]
-    if bm is None:
-        bm, mp = lane_tile(m, _qm.DEFAULT_BM)
-    else:
-        bm = min(bm, m)
-        mp = -(-m // bm) * bm
+    bm, mp, bn, bk = matmul_tiles(
+        m, k, n, packed=wq.packed, bm=bm, bm_target=bm_target, bn=bn, bk=bk
+    )
     xv, xs = xq.values, xq.scale.astype(jnp.float32)
     if mp != m:  # zero rows contribute zero outputs; sliced off below
         xv = jnp.pad(xv, ((0, mp - m), (0, 0)))
         xs = jnp.pad(xs, ((0, mp - m), (0, 0)), constant_values=1.0)
-    bn = bn if bn is not None else divisor_tile(n, _qm.DEFAULT_BN)
-    if bk is None:
-        bk = divisor_tile(k, _qm.DEFAULT_BK)
-        if wq.packed and bk % 2:
-            bk = k  # packed layout needs an even K tile; K itself is even
     ws = wq.scale.reshape(1, -1).astype(jnp.float32)
-    probe.record("quant_matmul")
+    probe.record(
+        "quant_matmul",
+        nbytes=matmul_traffic_bytes(mp, k, n, bm=bm, bn=bn, bk=bk, packed=wq.packed),
+    )
     y = _qm.quant_matmul(
         xv,
         xs,
@@ -150,6 +155,130 @@ def lane_tile(
     return _aligned_divisor(padded, target, lane), padded
 
 
+# ---------------------------------------------------------------------------
+# tiling policy — the single pad-vs-divide decision point
+# ---------------------------------------------------------------------------
+#
+# Both kernel families used to hand-roll the same choice (exact divisor on
+# weight-shaped axes, lane-padding on token-shaped axes) inline.  The two
+# resolvers below are now the only place that choice is made; the autotuner
+# (core/precision/tuner.py) reuses them as its candidate generator by
+# sweeping the *targets* and letting the resolver legalize each candidate.
+
+
+def matmul_tiles(
+    m: int,
+    k: int,
+    n: int,
+    *,
+    packed: bool = False,
+    bm: int | None = None,
+    bm_target: int | None = None,
+    bn: int | None = None,
+    bk: int | None = None,
+    bn_target: int | None = None,
+    bk_target: int | None = None,
+) -> tuple[int, int, int, int]:
+    """Resolve quant-matmul tiles -> ``(bm, m_padded, bn, bk)``.
+
+    ``bm`` is an exact tile (legacy callers; M padded to a multiple of it).
+    ``bm_target`` resolves through :func:`lane_tile` exactly like the
+    default policy — schedule entries carry targets because M (the token
+    count) is runtime-dependent.  ``bn``/``bk`` must divide exactly when
+    given; defaults pick the largest divisor under the paper's targets,
+    with the packed-int4 layout requiring an even K tile.
+    """
+    if bm is not None:
+        bm = min(bm, m)
+        mp = -(-m // bm) * bm
+    else:
+        bm, mp = lane_tile(m, bm_target or _qm.DEFAULT_BM)
+    bn = bn if bn is not None else divisor_tile(n, bn_target or _qm.DEFAULT_BN)
+    if bk is None:
+        bk = divisor_tile(k, bk_target or _qm.DEFAULT_BK)
+    if packed and bk % 2:
+        bk = k  # packed layout needs an even K tile; K itself is even
+    return bm, mp, bn, bk
+
+
+def attention_tiles(
+    lq: int,
+    lk: int,
+    *,
+    bq: int | None = None,
+    bk: int | None = None,
+    bkv: int | None = None,
+    bq_target: int | None = None,
+    bk_target: int | None = None,
+    bkv_target: int | None = None,
+) -> tuple[dict, int, int]:
+    """Resolve two-stage attention tiles -> ``({bq, bk, bkv}, lqp, lkp)``.
+
+    Explicit ``bq``/``bk``/``bkv`` must divide exactly (legacy behavior,
+    no padding); ``*_target`` values — the form schedules carry — go
+    through :func:`lane_tile` like the default T_Q/T_K/T_V policy.
+    """
+    tiles: dict[str, int] = {}
+    if bq is not None:
+        tiles["bq"], lqp = bq, lq
+    else:
+        tiles["bq"], lqp = lane_tile(lq, bq_target or _tsa.T_Q)
+    if bk is not None or bkv is not None:
+        lkp = lk
+        tiles["bk"] = bk if bk is not None else divisor_tile(lk, _tsa.T_K)
+        tiles["bkv"] = bkv if bkv is not None else divisor_tile(lk, _tsa.T_V)
+    else:
+        tiles["bk"], lkp = lane_tile(lk, bk_target or _tsa.T_K)
+        tiles["bkv"], _ = lane_tile(lk, bkv_target or _tsa.T_V)
+    return tiles, lqp, lkp
+
+
+def matmul_tile_seed(k: int, n: int, *, packed: bool = False, fused: bool = False) -> dict:
+    """The heuristic-policy tiles for a weight site, as a schedule entry.
+
+    This is what ``compile_schedule`` records when no tuner is supplied,
+    and the seed candidate the autotuner starts from.  ``bn``/``bk`` are
+    exact (weight dims are static); ``bm`` stays a target.
+    """
+    if fused:
+        return {"bm_target": FUSED_BM}
+    _, _, bn, bk = matmul_tiles(_qm.DEFAULT_BM, k, n, packed=packed)
+    return {"bm_target": _qm.DEFAULT_BM, "bn": bn, "bk": bk}
+
+
+def attention_tile_seed() -> dict:
+    """Default two-stage attention tile targets (paper's T_Q/T_K/T_V)."""
+    return {"bq_target": _tsa.T_Q, "bk_target": _tsa.T_K, "bkv_target": _tsa.T_V}
+
+
+def matmul_traffic_bytes(
+    mp: int, k: int, n: int, *, bm: int, bn: int, bk: int, packed: bool
+) -> int:
+    """Modeled HBM bytes moved by one tiled integer-matmul launch.
+
+    Grid is (M/bm, N/bn, K/bk): activations re-stream once per N tile,
+    weight panels once per M tile, f32 accumulator written once.  This is
+    the CPU-side cost signal the autotuner ranks candidates by when no
+    real hardware exists to wall-clock.
+    """
+    kb = -(-k // 2) if packed else k  # weight K storage bytes per column
+    x_bytes = mp * k * (n // bn)
+    w_bytes = kb * n * (mp // bm)
+    out_bytes = mp * n * 4
+    scale_bytes = 4 * (mp * (n // bn) + n * (mp // bm))
+    return x_bytes + w_bytes + out_bytes + scale_bytes
+
+
+def _attention_traffic_bytes(bh: int, lqp: int, lkp: int, dh: int, tiles: dict) -> int:
+    """Modeled bytes for the two-stage attention pair of launches."""
+    bq, bk, bkv = tiles["bq"], tiles["bk"], tiles["bkv"]
+    # stage ① (stats): Q re-streams per K tile, K per Q tile
+    s1 = bh * (lqp * dh * (lkp // bk) + lkp * dh * (lqp // bq) + lqp * 8)
+    # stage ② (PV): Q/V re-stream against the coarser T_V tiling
+    s2 = bh * (lqp * dh * (lkp // bkv) + lkp * dh * (lqp // bq) + lqp * dh * 4)
+    return s1 + s2
+
+
 def two_stage_mha(
     q: jnp.ndarray,
     k: jnp.ndarray,
@@ -178,17 +307,7 @@ def two_stage_mha(
     hkv, lk = k.shape[1], k.shape[2]
     assert h % hkv == 0, (h, hkv)
 
-    if "bq" in tile_kw:
-        lqp = lq
-    else:
-        tile_kw["bq"], lqp = lane_tile(lq, _tsa.T_Q)
-    if "bk" in tile_kw or "bkv" in tile_kw:
-        lkp = lk
-        tile_kw.setdefault("bk", divisor_tile(lk, _tsa.T_K))
-        tile_kw.setdefault("bkv", divisor_tile(lk, _tsa.T_V))
-    else:
-        tile_kw["bk"], lkp = lane_tile(lk, _tsa.T_K)
-        tile_kw["bkv"], _ = lane_tile(lk, _tsa.T_V)
+    tile_kw, lqp, lkp = attention_tiles(lq, lk, **tile_kw)
 
     qf = q.reshape(b * h, lq, dh)
     kf = k.reshape(b * hkv, lk, dh)
@@ -206,7 +325,10 @@ def two_stage_mha(
     # v_scale stays per *query* head ([B·H, 1, 1] scalars — not tensor
     # traffic, unlike the old K/V broadcast)
     vscale_q = jnp.repeat(vscale.reshape(b, hkv, 1, 1), h // hkv, axis=1)
-    probe.record("two_stage_mha", 2)  # stage ① + stage ② launches
+    # stage ① + stage ② launches
+    probe.record(
+        "two_stage_mha", 2, nbytes=_attention_traffic_bytes(b * h, lqp, lkp, dh, tile_kw)
+    )
     out = _tsa.two_stage_attention(
         qq.values,
         qq.scale.astype(jnp.float32),
@@ -249,6 +371,14 @@ def _pad_rows(x2: jnp.ndarray, target: int = FUSED_BM) -> tuple[jnp.ndarray, int
     return x2, bm, m
 
 
+def _bm_target(p, default: int = FUSED_BM) -> int:
+    """Row-tile target for a fused launch, from the site's schedule tiles."""
+    tiles = getattr(p, "tiles", None)
+    if tiles:
+        return dict(tiles).get("bm_target", default) or default
+    return default
+
+
 def _hadamard_for(block: int | None):
     if block is None:
         return None, None
@@ -275,13 +405,13 @@ def fused_linear(x, p, out_dtype=jnp.float32, interpret: bool | None = None):
         k = x.values.shape[-1]
         x2 = x.values.reshape(-1, k)
         xs = x.scale.reshape(-1, 1)
-        x2, bm, m = _pad_rows(x2)
+        x2, bm, m = _pad_rows(x2, target=_bm_target(p))
         if xs.shape[0] != x2.shape[0]:
             xs = jnp.pad(xs, ((0, x2.shape[0] - m), (0, 0)), constant_values=1.0)
     else:
         lead = x.shape[:-1]
         k = x.shape[-1]
-        x2, bm, m = _pad_rows(x.reshape(-1, k))
+        x2, bm, m = _pad_rows(x.reshape(-1, k), target=_bm_target(p))
     n = p.qw.shape[-1]
     h_pro, pro_block = _hadamard_for(
         transforms.block_size_for(k) if (p.rotate_input and not prequant) else None
@@ -292,7 +422,11 @@ def fused_linear(x, p, out_dtype=jnp.float32, interpret: bool | None = None):
         transforms.block_size_for(n) if (epi is not None and epi.wht) else None
     )
     dct = transforms.dct_matrix(p.dct_block, dtype=jnp.float32) if p.idct else None
-    probe.record("fused_matmul")
+    kb = -(-k // 2) if p.qw.packed else k
+    probe.record(
+        "fused_matmul",
+        nbytes=x2.shape[0] * k + kb * n * (x2.shape[0] // bm) + x2.shape[0] * n * 4,
+    )
     out = _fused.fused_matmul(
         x2,
         p.qw.values,
@@ -334,8 +468,8 @@ def fused_ffn_apply(x: jnp.ndarray, f, interpret: bool | None = None) -> jnp.nda
     interpret = _default_interpret() if interpret is None else interpret
     lead = x.shape[:-1]
     d = x.shape[-1]
-    x2, bm, m = _pad_rows(x.reshape(-1, d))
     wu, wd, wg = f.w_up, f.w_down, f.w_gate
+    x2, bm, m = _pad_rows(x.reshape(-1, d), target=_bm_target(wu))
     dff = wu.qw.shape[-1]
     n_out = wd.qw.shape[-1]
     # unrotated-stream flows carry the online WHT on the gate/up inputs
@@ -351,7 +485,10 @@ def fused_ffn_apply(x: jnp.ndarray, f, interpret: bool | None = None) -> jnp.nda
         if (wu.idct or wd.idct)
         else None
     )
-    probe.record("fused_ffn")
+    mp = x2.shape[0]
+    members = [wu, wd] + ([wg] if wg is not None else [])
+    w_elems = sum(int(w.qw.values.size) for w in members)
+    probe.record("fused_ffn", nbytes=mp * d + w_elems * (mp // bm) + mp * n_out * 4)
     y = _fused.fused_ffn(
         x2,
         wu.qw.values,

@@ -22,14 +22,25 @@ __all__ = ["KernelCallLog", "tracking", "record"]
 
 
 class KernelCallLog:
-    """Ordered record of kernel launches seen while ``tracking`` is live."""
+    """Ordered record of kernel launches seen while ``tracking`` is live.
+
+    Besides the launch names, each record may carry a *modeled* HBM byte
+    count (the wrappers compute it from the resolved tile shapes).  The
+    autotuner ranks candidate tilings by ``total_bytes`` on CPU, where no
+    wall-clock signal reflects tiling.
+    """
 
     def __init__(self) -> None:
         self.calls: list[str] = []
+        self.nbytes: dict[str, int] = {}
 
     @property
     def count(self) -> int:
         return len(self.calls)
+
+    @property
+    def total_bytes(self) -> int:
+        return sum(self.nbytes.values())
 
     def by_name(self) -> dict[str, int]:
         out: dict[str, int] = {}
@@ -39,6 +50,7 @@ class KernelCallLog:
 
     def reset(self) -> None:
         self.calls.clear()
+        self.nbytes.clear()
 
 
 _active: Optional[KernelCallLog] = None
@@ -56,8 +68,10 @@ def tracking():
         _active = prev
 
 
-def record(name: str, n: int = 1) -> None:
-    """Record ``n`` Pallas launches attributed to ``name`` (no-op when no
-    ``tracking`` context is active)."""
+def record(name: str, n: int = 1, nbytes: int = 0) -> None:
+    """Record ``n`` Pallas launches attributed to ``name`` plus their
+    modeled HBM traffic (no-op when no ``tracking`` context is active)."""
     if _active is not None:
         _active.calls.extend([name] * n)
+        if nbytes:
+            _active.nbytes[name] = _active.nbytes.get(name, 0) + int(nbytes)

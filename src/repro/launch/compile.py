@@ -1,0 +1,125 @@
+"""Ahead-of-time kernel-plan compiler CLI.
+
+Lowers ``(model config, precision spec)`` to a serialized
+:class:`~repro.core.precision.compiler.KernelSchedule` that the serving
+engines load at startup (``launch/serve.py --schedule``)::
+
+    # compile the seed schedule (policy-default tiles, no timing runs)
+    python -m repro.launch.compile --arch qwen3-14b-smoke \\
+        --spec w4a8:fused --out lm.schedule.json
+
+    # autotune tiles, persisting winners so re-compiles are free
+    python -m repro.launch.compile --arch qwen3-14b-smoke \\
+        --spec w4a8:fused --tune --budget 8 --db tune.json --out lm.schedule.json
+
+    # CI drift gate: recompile and diff against a pinned golden
+    python -m repro.launch.compile --arch qwen3-14b-smoke \\
+        --spec w4a8:fused --check tests/goldens/schedule_qwen3_smoke.json
+
+``--check`` exits non-zero when the freshly compiled schedule differs
+from the golden — any change to fusion preconditions, tiling policy, or
+site naming must re-pin the golden intentionally.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+import jax
+
+from repro.configs.base import get_config
+from repro.core.precision.compiler import KernelSchedule, compile_schedule
+from repro.core.precision.plan import PrecisionPlan
+from repro.core.precision.tuner import Autotuner, TuningDB
+from repro.launch.specs import SERVE_SPEC_GRAMMAR, ServeSpec
+
+
+def build_plan(spec: ServeSpec, cfg, *, verbose: bool = False) -> PrecisionPlan:
+    """The spec's :class:`PrecisionPlan` (compiler input).
+
+    Unlike ``ServeSpec.materialize`` this never returns a bare
+    ``QuantPolicy`` — the compiler keys sites off plan globs — and maps
+    ``fp`` onto a uniform bf16 plan (every site lowers to the fp kernel).
+    """
+    if spec.level == "schedule":
+        raise ValueError("--spec schedule=<path> is already compiled")
+    if spec.level == "plan":
+        from repro.core.precision import plan_model
+        from repro.models import lm, vggt
+
+        m = vggt if cfg.vggt else lm
+        params = m.init_params(cfg, jax.random.PRNGKey(0))
+        plan, report = plan_model(
+            cfg, params, method=spec.method, name="plan", fuse=spec.fused
+        )
+        if verbose:
+            print(f"planned mixed precision: {report['level_counts']}")
+        return plan
+    level = "bf16" if spec.level == "fp" else spec.level
+    return PrecisionPlan(
+        default=level, method=spec.method,
+        use_kernel=spec.level != "fp", fuse=spec.fused, name=spec.level,
+    )
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--arch", default="qwen3-14b-smoke")
+    ap.add_argument("--spec", default="w4a8:fused",
+                    help=f"precision spec: {SERVE_SPEC_GRAMMAR}")
+    ap.add_argument("--method", default="versaq", help="versaq|quarot|rtn")
+    ap.add_argument("--out", default=None, help="write the schedule JSON here")
+    ap.add_argument("--check", default=None, metavar="GOLDEN",
+                    help="compile and diff against this golden schedule; "
+                         "exit 1 on drift")
+    ap.add_argument("--tune", action="store_true",
+                    help="autotune tile shapes (default: seed tiles)")
+    ap.add_argument("--budget", type=int, default=8,
+                    help="autotuner candidates per site signature")
+    ap.add_argument("--db", default=None,
+                    help="tuning-DB JSON path (persists winners across runs)")
+    args = ap.parse_args(argv)
+
+    cfg = get_config(args.arch)
+    spec = ServeSpec.parse(args.spec, args.method)
+    plan = build_plan(spec, cfg, verbose=True)
+
+    tuner = None
+    if args.tune:
+        tuner = Autotuner(db=TuningDB(args.db), budget=args.budget)
+    sched = compile_schedule(cfg, plan, tuner=tuner)
+    print(f"compiled {args.arch} x {spec}: {sched.summary()} "
+          f"sites={len(sched.sites)} groups={len(sched.groups)} "
+          f"hash={sched.hash[:12]}")
+    if tuner is not None:
+        print(f"autotune: {tuner.timing_runs} timing runs, "
+              f"{tuner.db.hits} DB hits / {tuner.db.misses} misses"
+              + (f" -> {args.db}" if args.db else ""))
+
+    if args.check:
+        golden = KernelSchedule.load(args.check)
+        if golden.hash != sched.hash:
+            print(f"SCHEDULE DRIFT vs {args.check}:", file=sys.stderr)
+            _diff(golden, sched)
+            return 1
+        print(f"schedule matches golden {args.check}")
+
+    if args.out:
+        sched.save(args.out)
+        print(f"wrote {args.out}")
+    return 0
+
+
+def _diff(golden: KernelSchedule, fresh: KernelSchedule) -> None:
+    """Line-level canonical-JSON diff, printed to stderr."""
+    a = json.dumps(golden.canonical(), indent=2, sort_keys=True).splitlines()
+    b = json.dumps(fresh.canonical(), indent=2, sort_keys=True).splitlines()
+    import difflib
+
+    for line in difflib.unified_diff(a, b, "golden", "compiled", lineterm="", n=2):
+        print(line, file=sys.stderr)
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -88,7 +88,8 @@ def serve_vggt(cfg, args) -> None:
     eng = VGGTEngine(
         cfg,
         params,
-        policy=None if tiers else _policy(args),
+        policy=None if (tiers or args.schedule) else _policy(args),
+        schedule=args.schedule,
         tiers=tiers,
         attn_impl=args.attn_impl,
         max_batch=args.batch,
@@ -118,7 +119,8 @@ def serve_lm(cfg, args) -> None:
     eng = Engine(
         cfg,
         params,
-        policy=None if tiers else _policy(args),
+        policy=None if (tiers or args.schedule) else _policy(args),
+        schedule=args.schedule,
         tiers=tiers,
         attn_impl=args.attn_impl,
         max_len=args.prompt_len + args.gen,
@@ -152,6 +154,10 @@ def main():
                     help="serve precision tiers: name=spec[,name=spec...], "
                          "spec in {fp, w<bits>a<bits>[:fused], plan[:fused]}; "
                          "overrides --policy")
+    ap.add_argument("--schedule", default=None,
+                    help="serve from a compiled KernelSchedule JSON "
+                         "(launch/compile.py output); overrides --policy "
+                         "and conflicts with --tiers")
     ap.add_argument("--method", default="versaq", help="versaq|quarot|rtn")
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=16)

@@ -366,8 +366,9 @@ def reduced_cfg(cfg: ModelConfig, n_groups: int) -> ModelConfig:
 # --- serving precision specs -------------------------------------------------
 
 SERVE_SPEC_GRAMMAR = (
-    "fp | w<bits>a<bits>[:fused] | plan[:fused] "
-    "(e.g. fp, w4a8, w4a16, w4a8:fused, plan, plan:fused)"
+    "fp | w<bits>a<bits>[:fused] | plan[:fused] | schedule=<path> "
+    "(e.g. fp, w4a8, w4a16, w4a8:fused, plan, plan:fused, "
+    "schedule=out/lm.schedule.json)"
 )
 
 
@@ -387,16 +388,27 @@ class ServeSpec:
         ServeSpec.parse_tiers("quality=fp,fast=plan")  # name -> ServeSpec
     """
 
-    level: str  # "fp" | "w<bits>a<bits>" | "plan"
+    level: str  # "fp" | "w<bits>a<bits>" | "plan" | "schedule"
     fused: bool = False
     method: str = "versaq"
+    path: Optional[str] = None  # schedule file (level == "schedule" only)
 
     @classmethod
     def parse(cls, s: str, method: str = "versaq") -> "ServeSpec":
         from repro.core.precision.plan import parse_level
 
         raw = s
-        s = s.strip().lower()
+        stripped = s.strip()
+        # the path operand is case-sensitive — match the key before lowercasing
+        if stripped.lower().startswith("schedule="):
+            path = stripped[len("schedule="):]
+            if not path:
+                raise ValueError(
+                    f"serve spec {raw!r}: schedule= needs a file path; "
+                    f"expected {SERVE_SPEC_GRAMMAR}"
+                )
+            return cls(level="schedule", method=method, path=path)
+        s = stripped.lower()
         base, _, suffix = s.partition(":")
         if suffix and suffix != "fused":
             raise ValueError(
@@ -423,6 +435,8 @@ class ServeSpec:
 
     def format(self) -> str:
         """The canonical string form; ``parse(format()) == self``."""
+        if self.level == "schedule":
+            return f"schedule={self.path}"
         return self.level + (":fused" if self.fused else "")
 
     def __str__(self) -> str:
@@ -470,6 +484,13 @@ class ServeSpec:
 
         if self.level == "fp":
             return None
+        if self.level == "schedule":
+            # a compiled KernelSchedule (launch/compile.py output); engines
+            # also accept the raw path via their ``schedule=`` kwarg, which
+            # additionally applies attention tiles + jit-cache hashing
+            from repro.core.precision.compiler import KernelSchedule
+
+            return KernelSchedule.load(self.path)
         if self.level == "plan":
             if cfg is None or params is None:
                 raise ValueError(

@@ -244,7 +244,7 @@ def sdpa_dispatch(cfg, q, k, v, *, causal: bool, q_offset=0, kv_len=None, kv_mas
                           compute_dtype=getattr(cfg, "attn_dtype", "f32"), kv_mask=kv_mask)
 
 
-def _two_stage_kernel_sdpa(q, k, v, *, causal: bool):
+def _two_stage_kernel_sdpa(q, k, v, *, causal: bool, tiles: tuple | None = None):
     """Quantized fast path: the paper's INT8 two-stage Pallas kernel.
 
     q: [B,Lq,H,dh]; k/v: [B,Lk,Hkv,dh] float (already per-head rotated by
@@ -266,6 +266,7 @@ def _two_stage_kernel_sdpa(q, k, v, *, causal: bool):
         jnp.moveaxis(k, 2, 1),
         jnp.moveaxis(v, 2, 1),
         causal=causal,
+        **(dict(tiles) if tiles else {}),
     )
     return jnp.moveaxis(o, 1, 2)
 
@@ -333,7 +334,10 @@ def gqa_attention(
             # (paper Alg. 1); masked (padded-bucket) calls and untileable
             # lengths fall through to the jnp emulation, which supports
             # kv_mask and any L.
-            o = _two_stage_kernel_sdpa(q, k, v, causal=causal)
+            o = _two_stage_kernel_sdpa(
+                q, k, v, causal=causal,
+                tiles=getattr(cfg, "attn_tiles", None),
+            )
         if o is None:
             o = sdpa_dispatch(cfg, q, k, v, causal=causal, kv_mask=kv_mask)
         new_cache = None

@@ -38,6 +38,7 @@ __all__ = [
     "PendingRequest",
     "MicroBatchQueue",
     "TierSet",
+    "load_schedule",
     "next_pow2",
     "pick_bucket",
     "LATENCY_WINDOW",
@@ -131,6 +132,28 @@ class TierSet:
             p = self._raw if pol is None else self._quantize(pol)
             self._params[t] = p
         return p
+
+
+def load_schedule(schedule):
+    """Resolve an engine's ``schedule=`` argument -> ``(schedule, hash)``.
+
+    Accepts ``None`` (implicit path), a path to a compiled
+    ``KernelSchedule`` JSON file, or an in-memory ``KernelSchedule``.
+    The returned hash goes into the engine's jit-cache keys so
+    executables compiled under different schedules can never be confused.
+    """
+    if schedule is None:
+        return None, None
+    if isinstance(schedule, str):
+        from repro.core.precision.compiler import KernelSchedule
+
+        schedule = KernelSchedule.load(schedule)
+    if not hasattr(schedule, "fuse_decision"):
+        raise TypeError(
+            f"schedule= expects a KernelSchedule or a path to one, got "
+            f"{type(schedule).__name__}"
+        )
+    return schedule, schedule.hash
 
 
 def next_pow2(n: int, floor: int = 16) -> int:

@@ -817,6 +817,7 @@ class Engine:
         *,
         max_len: int = 2048,
         policy: Optional[QuantPolicy] = None,
+        schedule: Optional[Any] = None,
         tiers: Optional[dict[str, Any]] = None,
         default_tier: Optional[str] = None,
         attn_impl: Optional[str] = None,
@@ -833,6 +834,21 @@ class Engine:
                 f"attn_impl={attn_impl!r}: expected flash | two_stage | vanilla"
             )
         self.cfg = cfg.with_(attn_impl=attn_impl) if attn_impl is not None else cfg
+        # A compiled KernelSchedule (or a path to one) replaces the
+        # implicit policy: fusion/tiling decisions are read off the
+        # schedule instead of being re-derived at quantize time, and the
+        # schedule hash keys the jit caches so executables compiled under
+        # different schedules can never be confused.
+        self.schedule, self._schedule_hash = batching.load_schedule(schedule)
+        if self.schedule is not None:
+            if policy is not None or tiers is not None:
+                raise ValueError(
+                    "pass either schedule= or policy=/tiers=, not both"
+                )
+            policy = self.schedule
+            targets = self.schedule.attention_targets()
+            if targets:
+                self.cfg = self.cfg.with_(attn_tiles=targets)
         cfg = self.cfg
         # ``tiers`` maps tier name -> QuantPolicy | PrecisionPlan | None
         # (None = full precision).  One engine serves every tier: tier is
@@ -973,14 +989,15 @@ class Engine:
         — both counted, mirroring the VGGT engine.  ``body(p, x, cache,
         pad_lens)`` is the model call; the unmasked graph omits the
         ``pad_lens`` argument entirely."""
-        fn = self._fns.get((bucket, masked))
+        key = (bucket, masked, self._schedule_hash)
+        fn = self._fns.get(key)
         if fn is None:
             self.stats.bucket(bucket).compiles += 1
             if masked:
                 fn = jax.jit(body, **jit_kwargs)
             else:
                 fn = jax.jit(lambda p, x, cache: body(p, x, cache, None), **jit_kwargs)
-            self._fns[(bucket, masked)] = fn
+            self._fns[key] = fn
         return fn
 
     def _prefill_fn(self, bucket: PrefillBucket, masked: bool):
@@ -1008,7 +1025,7 @@ class Engine:
         and sampled (per-slot key streams) — both compiled at most once;
         everything else about admission runs eagerly, so warm traffic
         never recompiles."""
-        key = ("slot", bucket, sampled)
+        key = ("slot", bucket, sampled, self._schedule_hash)
         fn = self._fns.get(key)
         if fn is None:
             self.stats.bucket(bucket).compiles += 1

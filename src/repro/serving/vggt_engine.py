@@ -112,6 +112,7 @@ class VGGTEngine:
         params: Any,
         *,
         policy: Optional[QuantPolicy] = None,
+        schedule: Optional[Any] = None,
         tiers: Optional[dict[str, Any]] = None,
         default_tier: Optional[str] = None,
         attn_impl: Optional[str] = None,
@@ -125,6 +126,18 @@ class VGGTEngine:
                 f"attn_impl={attn_impl!r}: expected flash | two_stage | vanilla"
             )
         self.cfg = cfg.with_(attn_impl=attn_impl) if attn_impl is not None else cfg
+        # A compiled KernelSchedule (or a path to one) replaces the
+        # implicit policy — see serving.engine.Engine for the contract.
+        self.schedule, self._schedule_hash = batching.load_schedule(schedule)
+        if self.schedule is not None:
+            if policy is not None or tiers is not None:
+                raise ValueError(
+                    "pass either schedule= or policy=/tiers=, not both"
+                )
+            policy = self.schedule
+            targets = self.schedule.attention_targets()
+            if targets:
+                self.cfg = self.cfg.with_(attn_tiles=targets)
         # ``tiers``: tier name -> QuantPolicy | PrecisionPlan | None (fp).
         # One engine, many precisions: tier is part of the bucket identity
         # (own jit cache entries + stats rows per tier) and of the queue
@@ -142,7 +155,7 @@ class VGGTEngine:
         self.max_wait_s = max_wait_s
         self.pad_patches = pad_patches
         self.stats = VGGTServeStats()
-        self._fns: dict[tuple[Bucket, bool], Any] = {}
+        self._fns: dict[tuple, Any] = {}
         # micro-batch queues, one per (frames, bucketed patches) group
         self._queue = batching.MicroBatchQueue(self._run, self.max_batch, max_wait_s)
 
@@ -176,7 +189,8 @@ class VGGTEngine:
         ``masked`` and unmasked calls are separate graphs (the mask-free
         one keeps the quantized two_stage kernel fast path live), so a
         bucket can own up to two compiles — both counted."""
-        fn = self._fns.get((bucket, masked))
+        key = (bucket, masked, self._schedule_hash)
+        fn = self._fns.get(key)
         if fn is None:
             self.stats.bucket(bucket).compiles += 1
             if masked:
@@ -185,7 +199,7 @@ class VGGTEngine:
                 )
             else:
                 fn = jax.jit(functools.partial(vggt_mod.forward, self.cfg))
-            self._fns[(bucket, masked)] = fn
+            self._fns[key] = fn
         return fn
 
     # ---- request path ----------------------------------------------------

@@ -1,0 +1,211 @@
+"""Kernel-plan compiler: lowering, serialization, parity, tuning DB.
+
+Pins the PR's acceptance properties:
+
+* ``KernelSchedule`` JSON round-trips exactly (same canonical form, same
+  hash) and the schedule hash is stable against the pinned goldens for
+  one LM and one VGGT config — any change to fusion preconditions,
+  tiling policy, or site naming must re-pin the goldens intentionally;
+* quantized trees built through a compiled schedule are *leaf-for-leaf
+  identical* to the implicit path for ``w4a8``, ``plan:fused``, and a
+  mixed plan (parity by construction: the compiler reads decisions off
+  the same walker it replaces);
+* re-compiling an already-tuned config hits the persisted tuning DB —
+  zero timing runs the second time.
+"""
+import dataclasses
+import json
+import os
+import pathlib
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import get_config
+from repro.core.model_quant import quantize_lm, quantize_vggt
+from repro.core.precision import (
+    Autotuner,
+    KernelSchedule,
+    PrecisionPlan,
+    TuningDB,
+    compile_schedule,
+)
+from repro.core.versaq import QuantLinear
+from repro.models import lm, vggt
+
+KEY = jax.random.PRNGKey(0)
+GOLDENS = pathlib.Path(__file__).parents[1] / "goldens"
+
+FUSED = PrecisionPlan(default="w4a8", use_kernel=True, fuse=True, name="w4a8")
+UNFUSED = PrecisionPlan(default="w4a8", use_kernel=True, fuse=False, name="w4a8")
+MIXED = PrecisionPlan(
+    default="w4a8", use_kernel=True, fuse=True, name="mixed",
+    overrides=(("*.wo", "bf16"), ("*ffn.w_down", "w8a8")),
+)
+
+
+def _lm():
+    cfg = get_config("qwen3-14b-smoke")
+    return cfg, lm.init_params(cfg, KEY)
+
+
+def _vggt():
+    cfg = get_config("vggt-1b-smoke")
+    return cfg, vggt.init_params(cfg, KEY)
+
+
+# ---------------------------------------------------------------------------
+# serialization
+# ---------------------------------------------------------------------------
+
+
+def test_schedule_json_round_trip():
+    cfg, _ = _lm()
+    s = compile_schedule(cfg, FUSED)
+    s2 = KernelSchedule.from_json(s.to_json())
+    assert s2.canonical() == s.canonical()
+    assert s2.hash == s.hash
+    # the embedded plan survives (duck-typed policy surface)
+    assert s2.plan.default == "w4a8" and s2.fuse and s2.use_kernel
+
+
+def test_schedule_save_load(tmp_path):
+    cfg, _ = _vggt()
+    s = compile_schedule(cfg, MIXED)
+    path = str(tmp_path / "sched.json")
+    s.save(path)
+    assert KernelSchedule.load(path).hash == s.hash
+
+
+def test_schedule_version_gate():
+    cfg, _ = _lm()
+    blob = json.loads(compile_schedule(cfg, FUSED).to_json())
+    blob["version"] = 999
+    with pytest.raises(ValueError, match="version"):
+        KernelSchedule.from_json(json.dumps(blob))
+
+
+# ---------------------------------------------------------------------------
+# golden stability
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize(
+    "arch,golden",
+    [
+        ("qwen3-14b-smoke", "schedule_qwen3_smoke.json"),
+        ("vggt-1b-smoke", "schedule_vggt_smoke.json"),
+    ],
+)
+def test_schedule_hash_matches_golden(arch, golden):
+    sched = compile_schedule(get_config(arch), FUSED)
+    pinned = KernelSchedule.load(str(GOLDENS / golden))
+    assert sched.canonical() == pinned.canonical()
+    assert sched.hash == pinned.hash
+
+
+# ---------------------------------------------------------------------------
+# parity with the implicit path
+# ---------------------------------------------------------------------------
+
+
+def _strip_tiles(tree):
+    """The ``tiles`` static field is the one intentional aux-data delta."""
+    return jax.tree.map(
+        lambda n: dataclasses.replace(n, tiles=None) if isinstance(n, QuantLinear) else n,
+        tree, is_leaf=lambda n: isinstance(n, QuantLinear),
+    )
+
+
+@pytest.mark.parametrize("plan", [UNFUSED, FUSED, MIXED], ids=["w4a8", "fused", "mixed"])
+@pytest.mark.parametrize("arch", ["lm", "vggt"])
+def test_schedule_quantize_parity(arch, plan):
+    cfg, params = _lm() if arch == "lm" else _vggt()
+    qfn = quantize_lm if arch == "lm" else quantize_vggt
+    sched = compile_schedule(cfg, plan)
+    implicit = qfn(cfg, params, plan)
+    compiled = qfn(cfg, params, sched)
+    la, lb = jax.tree.leaves(implicit), jax.tree.leaves(compiled)
+    assert len(la) == len(lb)
+    for a, b in zip(la, lb):
+        assert a.shape == b.shape and a.dtype == b.dtype
+        assert bool(jnp.all(a == b))
+    # identical structure modulo the schedule-carried tile tuples
+    assert jax.tree.structure(_strip_tiles(implicit)) == jax.tree.structure(
+        _strip_tiles(compiled)
+    )
+
+
+def test_schedule_fallback_reasons():
+    # breaking wk's precision splits the qkv panel: no fused group, and
+    # every member records why
+    cfg, params = _lm()
+    plan = PrecisionPlan(
+        default="w4a8", use_kernel=True, fuse=True, name="split",
+        overrides=(("*.wk", "w8a8"),),
+    )
+    sched = compile_schedule(cfg, plan)
+    assert not any(g.kind == "qkv" for g in sched.groups)
+    wq = sched.site("blocks.l0.mixer.wq")
+    assert wq.fused_group is None and "precision" in (wq.fallback or "")
+    # the implicit path agrees: no wqkv leaf in the quantized tree
+    q = quantize_lm(cfg, params, plan)
+    assert "wqkv" not in q["blocks"]["l0"]["mixer"]
+    # parity still holds leaf-for-leaf
+    q2 = quantize_lm(cfg, params, sched)
+    for a, b in zip(jax.tree.leaves(q), jax.tree.leaves(q2)):
+        assert bool(jnp.all(a == b))
+
+
+# ---------------------------------------------------------------------------
+# autotuner + tuning DB
+# ---------------------------------------------------------------------------
+
+
+def test_tuning_db_cache_hits(tmp_path):
+    cfg, _ = _lm()
+    db_path = str(tmp_path / "tune.json")
+
+    t1 = Autotuner(db=TuningDB(db_path), budget=3)
+    s1 = compile_schedule(cfg, FUSED, tuner=t1)
+    assert t1.timing_runs > 0 and t1.db.misses > 0
+    assert os.path.exists(db_path)
+
+    # second compile: every signature served from the persisted DB
+    t2 = Autotuner(db=TuningDB(db_path), budget=3)
+    s2 = compile_schedule(cfg, FUSED, tuner=t2)
+    assert t2.timing_runs == 0
+    assert t2.db.misses == 0 and t2.db.hits > 0
+    assert s2.hash == s1.hash
+
+
+def test_tuned_schedule_still_parity(tmp_path):
+    # tile choices are numerics-free (int32 accumulation): a tuned
+    # schedule quantizes to the same leaves as the implicit path
+    cfg, params = _lm()
+    tuner = Autotuner(db=TuningDB(str(tmp_path / "t.json")), budget=4)
+    sched = compile_schedule(cfg, UNFUSED, tuner=tuner)
+    a = jax.tree.leaves(quantize_lm(cfg, params, UNFUSED))
+    b = jax.tree.leaves(quantize_lm(cfg, params, sched))
+    for x, y in zip(a, b):
+        assert bool(jnp.all(x == y))
+
+
+def test_tuner_injectable_measure():
+    # the measure hook fully replaces timing; pick the candidate the fake
+    # cost function prefers
+    calls = []
+
+    def measure(kind, tiles):
+        calls.append(kind)
+        return -tiles.get("bn", 0)  # prefer the widest N tile
+
+    t = Autotuner(db=TuningDB(), budget=64, measure=measure)
+    tiles = t.tune_matmul(512, 512, w_bits=4, a_bits=8, packed=True, fused=False)
+    assert calls and all(k == "quant_matmul" for k in calls)
+    assert tiles["bn"] == 512
+    # same key: served from the in-memory DB, no new measurements
+    n = len(calls)
+    t.tune_matmul(512, 512, w_bits=4, a_bits=8, packed=True, fused=False)
+    assert len(calls) == n

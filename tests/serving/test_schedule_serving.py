@@ -1,0 +1,105 @@
+"""Serving from a compiled KernelSchedule.
+
+Both engines boot from a schedule file (``schedule=`` = path or object),
+key their jit caches on the schedule hash, and never recompile on warm
+traffic; ``launch/specs.py`` grows ``schedule=<path>`` in the spec
+grammar.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core.precision import PrecisionPlan, compile_schedule
+from repro.models import lm, vggt
+from repro.serving.engine import Engine
+from repro.serving.vggt_engine import VGGTEngine
+
+KEY = jax.random.PRNGKey(0)
+PLAN = PrecisionPlan(default="w4a8", use_kernel=True, fuse=True, name="w4a8")
+
+
+def _lm_schedule(tmp_path, cfg):
+    path = str(tmp_path / "lm.schedule.json")
+    compile_schedule(cfg, PLAN).save(path)
+    return path
+
+
+def test_lm_engine_boots_from_schedule_file(tmp_path):
+    cfg = get_config("qwen3-14b-smoke").with_(attn_impl="two_stage")
+    params = lm.init_params(cfg, KEY)
+    eng = Engine(cfg, params, schedule=_lm_schedule(tmp_path, cfg), max_len=64)
+    assert eng.schedule is not None and eng._schedule_hash == eng.schedule.hash
+    # the schedule's attention tile targets land on the engine's config
+    assert eng.cfg.attn_tiles == eng.schedule.attention_targets()
+
+    toks = jnp.ones((1, 8), jnp.int32)
+    req = eng.enqueue(toks, n_steps=4)
+    eng.flush()
+    out = np.asarray(req.result())
+    assert out.shape == (1, 4)
+    compiles = sum(b.compiles for b in eng.stats.buckets.values())
+    # warm traffic: same buckets, zero new compiles
+    req2 = eng.enqueue(toks, n_steps=4)
+    eng.flush()
+    out2 = np.asarray(req2.result())
+    assert out2.shape == (1, 4)
+    assert sum(b.compiles for b in eng.stats.buckets.values()) == compiles
+    # every jitted executable is keyed on the schedule hash
+    assert all(eng._schedule_hash in key for key in eng._fns)
+
+
+def test_lm_schedule_matches_plan_tokens(tmp_path):
+    cfg = get_config("qwen3-14b-smoke").with_(attn_impl="two_stage")
+    params = lm.init_params(cfg, KEY)
+    toks = (jnp.arange(8, dtype=jnp.int32) % cfg.vocab_size)[None, :]
+    a = Engine(cfg, params, policy=PLAN, max_len=64)
+    b = Engine(cfg, params, schedule=_lm_schedule(tmp_path, cfg), max_len=64)
+    ra = a.enqueue(toks, n_steps=4)
+    a.flush()
+    rb = b.enqueue(toks, n_steps=4)
+    b.flush()
+    np.testing.assert_array_equal(np.asarray(ra.result()), np.asarray(rb.result()))
+
+
+def test_vggt_engine_boots_from_schedule(tmp_path):
+    cfg = get_config("vggt-1b-smoke").with_(attn_impl="two_stage")
+    sched = compile_schedule(cfg, PLAN)
+    params = vggt.init_params(cfg, KEY)
+    eng = VGGTEngine(cfg, params, schedule=sched)  # in-memory object form
+    scenes = jnp.ones((1, 2, 16, cfg.d_model), jnp.float32)
+    out = eng.infer(scenes)
+    assert out["pose"].shape[:2] == (1, 2)
+    compiles = sum(b.compiles for b in eng.stats.buckets.values())
+    eng.infer(scenes)
+    assert sum(b.compiles for b in eng.stats.buckets.values()) == compiles
+    assert all(eng._schedule_hash in key for key in eng._fns)
+
+
+def test_schedule_conflicts_with_policy(tmp_path):
+    cfg = get_config("qwen3-14b-smoke")
+    params = lm.init_params(cfg, KEY)
+    path = _lm_schedule(tmp_path, cfg)
+    from repro.core.versaq import W4A8
+
+    with pytest.raises(ValueError, match="schedule"):
+        Engine(cfg, params, schedule=path, policy=W4A8, max_len=64)
+    vcfg = get_config("vggt-1b-smoke")
+    with pytest.raises(ValueError, match="schedule"):
+        VGGTEngine(vcfg, vggt.init_params(vcfg, KEY),
+                   schedule=compile_schedule(vcfg, PLAN), tiers={"a": None})
+
+
+def test_serve_spec_schedule_grammar(tmp_path):
+    from repro.launch.specs import ServeSpec
+
+    cfg = get_config("qwen3-14b-smoke")
+    path = _lm_schedule(tmp_path, cfg)
+    spec = ServeSpec.parse(f"schedule={path}")
+    assert spec.level == "schedule" and spec.path == path
+    assert ServeSpec.parse(spec.format()) == spec
+    sched = spec.materialize()
+    assert hasattr(sched, "fuse_decision")
+    with pytest.raises(ValueError, match="schedule"):
+        ServeSpec.parse("schedule=")
