@@ -83,14 +83,16 @@ def main(argv=None) -> None:
                 traceback.print_exc()
         dt = time.time() - t0
         print(f"# ({title}: {dt:.1f}s)")
-        benches.append({
+        bench = {
             "title": title,
             "ok": ok,
             "seconds": round(dt, 2),
             "rows": common.collected_rows(),
             "kernel_calls": log.by_name(),
             "kernel_bytes": dict(log.nbytes),
-        })
+            "metrics": _bench_metrics(log),
+        }
+        benches.append(bench)
     if args.json:
         _write_json(args.json, args.only, benches)
     if failures:
@@ -98,14 +100,57 @@ def main(argv=None) -> None:
         sys.exit(1)
 
 
+def _bench_metrics(log) -> dict:
+    """The bench's kernel traffic rendered through the same registry
+    schema ``/metrics`` serves live — trajectory points and a scraped
+    engine report identical metric families."""
+    from repro.obs import metrics as obs_metrics
+
+    reg = obs_metrics.Registry()
+    obs_metrics.export_kernel_counters(reg, log.by_name(), dict(log.nbytes))
+    return reg.render_json(collect=False)
+
+
+def _git_revision() -> str | None:
+    import os
+    import subprocess
+
+    try:
+        out = subprocess.run(
+            ["git", "rev-parse", "HEAD"],
+            capture_output=True, text=True, timeout=10,
+            cwd=os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+        )
+    except (OSError, subprocess.SubprocessError):
+        return None
+    return out.stdout.strip() if out.returncode == 0 else None
+
+
 def _write_json(path: str, only, benches: list[dict]) -> None:
+    import platform
+
     import jax
 
+    # schema_version history:
+    #   1 — per-bench rows + kernel calls/bytes
+    #   2 — + git revision, platform block, per-bench "metrics" registry
+    #       render (comparable with the live /metrics families); needed to
+    #       compare BENCH_*.json trajectory points across machines/backends
     blob = {
-        "version": 1,
+        "schema_version": 2,
+        "version": 2,  # legacy alias of schema_version
         "generated_by": "benchmarks/run.py",
         "date": time.strftime("%Y-%m-%d"),
+        "revision": _git_revision(),
         "backend": jax.default_backend(),
+        "platform": {
+            "python": platform.python_version(),
+            "jax": jax.__version__,
+            "os": platform.platform(),
+            "machine": platform.machine(),
+            "device_kind": jax.devices()[0].device_kind if jax.devices() else None,
+            "device_count": jax.device_count(),
+        },
         "only": only,
         "benches": benches,
     }

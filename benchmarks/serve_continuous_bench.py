@@ -15,6 +15,13 @@ pays the compiles, the measured pass must trigger **zero recompiles**
 scheduler does not beat the bucket engine on either sustained decode
 tokens/s or tokens per decode call (the deterministic batching win).
 
+The bench also gates the observability stack (docs/observability.md):
+with telemetry fully enabled (live metrics + span tracing + kernel
+counters) warm decode tokens/s must stay within 2% of the disabled run,
+and a single served request must produce the complete span chain
+(enqueue -> admit -> prefill -> decode -> complete) plus nonzero
+per-kernel launch counters and per-site quant-health samples.
+
   PYTHONPATH=src python -m benchmarks.serve_continuous_bench [--requests 8]
 """
 import argparse
@@ -22,9 +29,14 @@ import argparse
 import jax
 
 from benchmarks import common
+from repro import obs
 from repro.configs import get_config
+from repro.core.precision import PrecisionPlan
 from repro.data.pipeline import mixed_len_prompts
 from repro.models import lm
+from repro.obs import metrics as obs_metrics
+from repro.obs import quant_health
+from repro.obs import trace as obs_trace
 from repro.serving.engine import DecodeBucket, Engine
 
 TINY = dict(d_model=64, n_heads=4, n_kv_heads=2, head_dim=16, d_ff=128, vocab_size=64)
@@ -72,6 +84,122 @@ def bench_engine(name: str, eng: Engine, prompts, gen: int):
     return tok_per_s, tok_per_call
 
 
+def _measured_pass(eng: Engine, prompts, gen: int) -> float:
+    """Warm decode tokens/s for one arrival pass (engine must already
+    have paid its compiles for this traffic)."""
+    tok0, s0 = eng.stats.decode_tokens, eng.stats.decode_s
+    _arrival_pass(eng, prompts, gen)
+    tokens = eng.stats.decode_tokens - tok0
+    secs = eng.stats.decode_s - s0
+    return tokens / secs if secs > 0 else 0.0
+
+
+def bench_telemetry_overhead(eng: Engine, prompts, gen: int) -> None:
+    """Gate: full telemetry (live metrics + span ring + global kernel
+    counters + quant health) must cost < 2% warm decode tokens/s.
+
+    The executables are traced while telemetry is *off*, so the toggle
+    is purely host-side (span emits, histogram observes).  Shared-machine
+    interference makes single interpret-mode passes drift by ±20%, but
+    the noise is one-sided — contention only ever *slows* a pass — so
+    each arm's **fastest** pass is the estimator of its clean-machine
+    speed.  Interleaved off/on passes give both arms the same exposure to
+    quiet windows; extra pairs run adaptively (min 4, up to 12) until
+    both arms have seen one.  That stopping rule cannot mask a real
+    regression: a true >2% host-side overhead caps the enabled arm's
+    peak below budget no matter how many clean windows it gets.
+    """
+    import gc
+
+    was_on = obs.enabled()
+    best = {False: 0.0, True: 0.0}
+    pairs = 0
+    gc.collect()
+    gc_was_on = gc.isenabled()
+    gc.disable()  # a GC pause landing in one arm skews its pass by >10%
+    try:
+        for pairs in range(1, 13):
+            # alternate pair order so slow thermal/scheduler drift cannot
+            # systematically penalize the arm that always runs second
+            order = (False, True) if pairs % 2 else (True, False)
+            for on in order:
+                if on:
+                    obs.enable_all(quant_every=64)
+                else:
+                    obs.disable_all()
+                best[on] = max(best[on], _measured_pass(eng, prompts, 2 * gen))
+            if pairs >= 4 and best[True] >= best[False] * 0.98:
+                break
+    finally:
+        if gc_was_on:
+            gc.enable()
+        obs.disable_all()
+        if was_on:
+            obs.enable_all()
+    ratio = best[True] / best[False] if best[False] else 1.0
+    common.emit(
+        "serve_continuous.telemetry_overhead",
+        0.0,
+        f"peak_tok_per_s_off={best[False]:.1f} peak_tok_per_s_on={best[True]:.1f} "
+        f"ratio={ratio:.3f} pairs={pairs}",
+    )
+    if ratio < 0.98:
+        raise RuntimeError(
+            f"telemetry overhead above the 2% budget: peak "
+            f"{best[True]:.1f} tok/s enabled vs {best[False]:.1f} disabled "
+            f"(ratio {ratio:.3f} < 0.98 after {pairs} interleaved pairs)"
+        )
+
+
+def bench_telemetry_completeness(cfg, params, prompts, gen: int) -> None:
+    """Gate: one served request on the quantized kernel path must leave a
+    complete span chain, nonzero per-kernel launch counters, and per-site
+    quant-health samples in the registry (docs/observability.md)."""
+    from repro.kernels import probe
+
+    reg = obs_metrics.Registry()
+    tracer = obs_trace.Tracer(capacity=512)
+    prev = obs_trace.install(tracer)
+    counters = probe.enable_global()
+    counters.reset()
+    obs_metrics.set_live(True)
+    quant_health.enable(every=1, registry=reg)
+    try:
+        eng = Engine(
+            cfg, params, max_len=4 * (len(prompts[0]) + gen), mode="continuous",
+            policy=PrecisionPlan(default="w8a8", use_kernel=True), max_wait_s=0.0,
+        )
+        req = eng.enqueue(prompts[0], gen)
+        while not req.ready:
+            eng.poll()
+        eng.flush()
+        jax.effects_barrier()  # quant-health ships via jax.debug.callback
+        phases = tracer.phases(req.req_id)
+        want = ["enqueue", "admit", "prefill", "decode", "complete"]
+        if phases != want:
+            raise RuntimeError(f"incomplete span chain: {phases} != {want}")
+        launches = counters.by_name()
+        if launches.get("quant_matmul", 0) <= 0:
+            raise RuntimeError(f"no quant_matmul launches recorded: {launches}")
+        samples = quant_health.sites_sampled()
+        if not samples:
+            raise RuntimeError("no quant-health sites sampled")
+        n_samples = reg.get("quant_health_samples_total").total()
+        if n_samples <= 0:
+            raise RuntimeError("quant_health_samples_total stayed zero")
+        common.emit(
+            "serve_continuous.telemetry_complete",
+            0.0,
+            f"span_chain=ok kernel_launches={launches.get('quant_matmul', 0)} "
+            f"quant_sites={len(samples)} quant_samples={int(n_samples)}",
+        )
+    finally:
+        quant_health.disable()
+        obs_metrics.set_live(False)
+        probe.disable_global()
+        obs_trace.install(prev) if prev is not None else obs_trace.uninstall()
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--requests", type=int, default=8)
@@ -93,6 +221,11 @@ def main(argv=None):
     cont_tps, cont_tpc = bench_engine("continuous", cont, prompts, args.gen)
     buck = Engine(cfg, params, max_len=max_len, mode="bucket", max_wait_s=0.0)
     buck_tps, buck_tpc = bench_engine("bucket", buck, prompts, args.gen)
+
+    # observability gates: telemetry must be ~free on the warm engine and
+    # complete (span chain + kernel counters + quant health) for one request
+    bench_telemetry_overhead(cont, prompts, args.gen)
+    bench_telemetry_completeness(cfg, params, prompts, args.gen)
 
     common.emit(
         "serve_continuous.speedup",

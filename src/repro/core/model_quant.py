@@ -157,20 +157,22 @@ def _prep(w, pol: _Resolver, site: str, lead=0, **kw):
 
     def go(w_, *arrs):
         d = dict(zip(arr_keys, arrs))
-        return _prepare_site(w_, pol, site_policy, tiles=tiles, **static_kw, **d)
+        return _prepare_site(w_, pol, site_policy, tiles=tiles, site=site, **static_kw, **d)
 
     fn = _vmapped(go, lead)
     return fn(w, *[kw[k] for k in arr_keys])
 
 
-def _prepare_site(w, pol: _Resolver, site_policy, *, out_scale=None, tiles=None, **kw):
+def _prepare_site(w, pol: _Resolver, site_policy, *, out_scale=None, tiles=None, site=None, **kw):
     if out_scale is not None:
         w = w * out_scale[None, :]
         if kw.get("bias") is not None:
             kw["bias"] = kw["bias"] * out_scale
     if site_policy is None:  # bf16 passthrough site
         return prepare_linear_fp(w, use_wht=pol.use_wht, **kw)
-    return prepare_linear(w, site_policy, use_kernel=pol.use_kernel, tiles=tiles, **kw)
+    return prepare_linear(
+        w, site_policy, use_kernel=pol.use_kernel, tiles=tiles, site=site, **kw
+    )
 
 
 def _fold_fp(w, gamma=None, beta=None, bias=None, rotate_in=False):
@@ -264,9 +266,12 @@ def _concat_sites(parts, *, prologue=None, norm_u=None, tiles=None) -> QuantLine
             [p.bias if p.bias is not None else _zeros_bias(p) for p in parts],
             axis=-1,
         )
+    # merged quant-health attribution: "….mixer.wq" -> "….mixer.wqkv"
+    site = f.site.rsplit(".", 1)[0] + ".wqkv" if f.site else None
     return dataclasses.replace(
         f, qw=qw, bias=bias, use_kernel=True,
         prologue=prologue, epilogue=Epilogue(), norm_u=norm_u, tiles=tiles,
+        site=site,
     )
 
 

@@ -161,6 +161,10 @@ class QuantLinear:
     # ``core/precision/compiler.py``).  None = resolve tiles from the
     # heuristic policy at trace time; static, so it never adds a leaf.
     tiles: Optional[tuple] = dataclasses.field(metadata=dict(static=True), default=None)
+    # Dotted PrecisionPlan site path ("blocks.l0.ffn.w_down", ...) — the
+    # attribution key for quant-health telemetry (obs/quant_health.py).
+    # Static: it's an identity, not data, and must survive jit tracing.
+    site: Optional[str] = dataclasses.field(metadata=dict(static=True), default=None)
 
 
 @jax.tree_util.register_dataclass
@@ -291,6 +295,21 @@ def _kernel_ready(p: QuantLinear) -> bool:
     return p.use_kernel and p.qw.bits <= 8 and p.a_bits <= 8
 
 
+def _monitor_quant(p: "QuantLinear", x: jnp.ndarray) -> None:
+    """Quant-health tap: observe the activation a site is about to
+    quantize (obs/quant_health.py; off by default and free when off).  On
+    the fused-kernel path this sees the site *input* — the in-kernel
+    norm/WHT run before the actual quantize — so the signal is a proxy
+    there; the emulation path observes the exact pre-quant tensor."""
+    if p.site is None:
+        return
+    # local import: obs depends on core.quantize, so core cannot import
+    # obs at module scope without a cycle
+    from repro.obs import quant_health
+
+    quant_health.monitor(p.site, x, p.a_bits)
+
+
 def apply_linear(p: Any, x: jnp.ndarray) -> jnp.ndarray:
     """Dispatching linear: plain {"w": ...} dict or QuantLinear.
 
@@ -313,6 +332,7 @@ def apply_linear(p: Any, x: jnp.ndarray) -> jnp.ndarray:
         if fused and _kernel_ready(p):
             from repro.kernels import ops as kernel_ops
 
+            _monitor_quant(p, x)
             return kernel_ops.fused_linear(x, p).astype(dtype)
         if p.prologue is not None and p.prologue.norm is not None:
             x = folded_norm_stats(
@@ -320,6 +340,7 @@ def apply_linear(p: Any, x: jnp.ndarray) -> jnp.ndarray:
             ).astype(dtype)
         if p.rotate_input:
             x = online_wht(x)
+        _monitor_quant(p, x)
         if _kernel_ready(p):
             from repro.kernels import ops as kernel_ops
 
@@ -361,6 +382,7 @@ def apply_ffn(f: FusedFFN, x: jnp.ndarray) -> jnp.ndarray:
     if all(_kernel_ready(ql) for ql in members):
         from repro.kernels import ops as kernel_ops
 
+        _monitor_quant(f.w_up, x)  # in-kernel hidden is unobservable
         return kernel_ops.fused_ffn_apply(x, f).astype(dtype)
     if f.norm is not None:
         x = folded_norm_stats(
@@ -484,6 +506,7 @@ def prepare_linear(
     epilogue: Optional[Epilogue] = None,
     norm_u: Optional[jnp.ndarray] = None,
     tiles: Optional[tuple] = None,
+    site: Optional[str] = None,
 ) -> QuantLinear:
     """Fuse transforms into a [in, out] weight and quantize (Eq. 7).
 
@@ -531,6 +554,7 @@ def prepare_linear(
         epilogue=epilogue,
         norm_u=norm_u,
         tiles=tiles,
+        site=site,
     )
 
 

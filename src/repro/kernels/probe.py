@@ -12,13 +12,30 @@ launch issued by a Python-level call.  Under an enclosing ``jax.jit`` the
 wrappers only run at trace time, so count inside eager/interpret code
 (tests, benchmarks) — which is exactly where call-count regressions are
 checked.
+
+Two sinks:
+
+* ``tracking()`` — scoped ``KernelCallLog`` for tests/benches.  Contexts
+  nest; ``record()`` fans out to EVERY active log, so an inner scope no
+  longer hides launches from the enclosing one.
+* ``enable_global()`` — an always-on aggregate ``KernelCounters`` (dicts,
+  not per-call lists, so it is safe to leave running under serving
+  traffic).  The telemetry registry scrapes it per kernel name.
 """
 from __future__ import annotations
 
 import contextlib
 from typing import Optional
 
-__all__ = ["KernelCallLog", "tracking", "record"]
+__all__ = [
+    "KernelCallLog",
+    "KernelCounters",
+    "tracking",
+    "record",
+    "enable_global",
+    "disable_global",
+    "global_counters",
+]
 
 
 class KernelCallLog:
@@ -53,25 +70,87 @@ class KernelCallLog:
         self.nbytes.clear()
 
 
-_active: Optional[KernelCallLog] = None
+class KernelCounters:
+    """Aggregate launch counts + modeled bytes per kernel name.
+
+    Unlike ``KernelCallLog`` this holds no per-call list, so it stays O(1)
+    per record and bounded in memory — the shape the always-on telemetry
+    mode needs.
+    """
+
+    def __init__(self) -> None:
+        self.counts: dict[str, int] = {}
+        self.nbytes: dict[str, int] = {}
+
+    def record(self, name: str, n: int = 1, nbytes: int = 0) -> None:
+        self.counts[name] = self.counts.get(name, 0) + int(n)
+        if nbytes:
+            self.nbytes[name] = self.nbytes.get(name, 0) + int(nbytes)
+
+    @property
+    def count(self) -> int:
+        return sum(self.counts.values())
+
+    @property
+    def total_bytes(self) -> int:
+        return sum(self.nbytes.values())
+
+    def by_name(self) -> dict[str, int]:
+        return dict(self.counts)
+
+    def reset(self) -> None:
+        self.counts.clear()
+        self.nbytes.clear()
+
+
+# Stack of scoped logs: record() fans out to every active one, so nested
+# tracking() contexts each see the launches issued inside them (the old
+# single-slot global made an inner context silently swallow the outer's
+# counts — see tests/kernels/test_probe.py).
+_active: list[KernelCallLog] = []
+_global: Optional[KernelCounters] = None
 
 
 @contextlib.contextmanager
 def tracking():
-    """Collect kernel-launch records; nests (inner log shadows outer)."""
-    global _active
-    prev, log = _active, KernelCallLog()
-    _active = log
+    """Collect kernel-launch records; nests (all active logs record)."""
+    log = KernelCallLog()
+    _active.append(log)
     try:
         yield log
     finally:
-        _active = prev
+        try:
+            _active.remove(log)
+        except ValueError:
+            pass
 
 
 def record(name: str, n: int = 1, nbytes: int = 0) -> None:
     """Record ``n`` Pallas launches attributed to ``name`` plus their
-    modeled HBM traffic (no-op when no ``tracking`` context is active)."""
-    if _active is not None:
-        _active.calls.extend([name] * n)
+    modeled HBM traffic.  Fans out to every active ``tracking`` log and to
+    the global counters when enabled; no-op otherwise."""
+    for log in _active:
+        log.calls.extend([name] * n)
         if nbytes:
-            _active.nbytes[name] = _active.nbytes.get(name, 0) + int(nbytes)
+            log.nbytes[name] = log.nbytes.get(name, 0) + int(nbytes)
+    g = _global
+    if g is not None:
+        g.record(name, n, nbytes)
+
+
+def enable_global() -> KernelCounters:
+    """Turn on the always-on aggregate sink; returns it (existing counters
+    are kept if already enabled)."""
+    global _global
+    if _global is None:
+        _global = KernelCounters()
+    return _global
+
+
+def disable_global() -> None:
+    global _global
+    _global = None
+
+
+def global_counters() -> Optional[KernelCounters]:
+    return _global

@@ -79,6 +79,22 @@ def _tier_cycle(tiers: dict | None, n: int) -> list[str | None]:
     return [names[i % len(names)] for i in range(n)]
 
 
+def _server(eng, args) -> AsyncServer:
+    """AsyncServer wired to the CLI's telemetry flags: ``--metrics-port``
+    exposes /metrics, /stats and /trace (docs/observability.md) and turns
+    live telemetry on; ``--trace-jsonl`` mirrors span events to a file."""
+    if args.trace_jsonl is not None:
+        from repro import obs
+
+        obs.enable_all(trace_path=args.trace_jsonl)
+    srv = AsyncServer(eng, metrics_port=args.metrics_port)
+    srv.start()
+    if srv.metrics_address is not None:
+        host, port = srv.metrics_address
+        print(f"telemetry: http://{host}:{port}/metrics  /stats  /trace")
+    return srv
+
+
 def serve_vggt(cfg, args) -> None:
     from repro.models import vggt
     from repro.serving.vggt_engine import VGGTEngine
@@ -96,7 +112,7 @@ def serve_vggt(cfg, args) -> None:
         max_wait_s=args.max_wait_s,
     )
     assign = _tier_cycle(tiers, args.requests)
-    with AsyncServer(eng) as srv:
+    with _server(eng, args) as srv:
         reqs = [
             srv.submit(jnp.asarray(
                 scene_batch(args.scenes, args.frames, args.patches, cfg.d_model, r)["patches"]
@@ -132,7 +148,7 @@ def serve_lm(cfg, args) -> None:
     # masked length-padded bucket variants alongside warm bucket reuse
     prompts = mixed_len_prompts(cfg.vocab_size, args.requests, args.prompt_len)
     assign = _tier_cycle(tiers, len(prompts))
-    with AsyncServer(eng) as srv:
+    with _server(eng, args) as srv:
         reqs = [
             srv.submit(p, args.gen, tier=t, deadline_s=args.deadline_s)
             for p, t in zip(prompts, assign)
@@ -177,6 +193,14 @@ def main():
     ap.add_argument("--patches", type=int, default=64)
     ap.add_argument("--attn-impl", default=None,
                     help="override cfg.attn_impl (two_stage = INT8 Pallas kernel)")
+    # observability (docs/observability.md)
+    ap.add_argument("--metrics-port", type=int, default=None,
+                    help="expose /metrics (Prometheus), /stats (JSON) and "
+                         "/trace (span ring buffer) on this port; 0 binds "
+                         "an ephemeral port.  Turns live telemetry on.")
+    ap.add_argument("--trace-jsonl", default=None,
+                    help="mirror span events to this JSONL file (implies "
+                         "live telemetry)")
     args = ap.parse_args()
 
     cfg = get_config(args.arch)

@@ -22,11 +22,15 @@ from __future__ import annotations
 
 import collections
 import dataclasses
+import itertools
 import threading
 import time
 from typing import Any, Callable, ClassVar, Hashable, Optional, Protocol, runtime_checkable
 
 import numpy as np
+
+from repro.obs import metrics as obs_metrics
+from repro.obs import trace as obs_trace
 
 __all__ = [
     "Bucket",
@@ -276,6 +280,39 @@ class BucketStats:
             out["tokens_per_s"] = round(self.tokens_per_s, 2)
         return out
 
+    def publish(self, registry: "obs_metrics.Registry", kind: str, bucket: str, tier: str) -> None:
+        """Mirror this bucket's running totals into a metrics registry.
+
+        Counters use ``set_total`` (the stats object is the source of
+        truth; the registry is a scrape-time view), gauges carry the
+        windowed percentiles."""
+        lbl = dict(kind=kind, bucket=bucket, tier=tier)
+        names = ("kind", "bucket", "tier")
+        registry.counter(
+            "serve_bucket_compiles_total", "jit compiles per bucket", names
+        ).set_total(self.compiles, **lbl)
+        registry.counter(
+            "serve_bucket_calls_total", "engine forward calls per bucket", names
+        ).set_total(self.calls, **lbl)
+        registry.counter(
+            "serve_bucket_items_total", "real items served per bucket", names
+        ).set_total(self.items, **lbl)
+        registry.counter(
+            "serve_bucket_padded_items_total", "bucket padding slack per bucket", names
+        ).set_total(self.padded_items, **lbl)
+        registry.counter(
+            "serve_bucket_tokens_total", "tokens served per bucket (LM engines)", names
+        ).set_total(self.tokens, **lbl)
+        registry.counter(
+            "serve_bucket_busy_seconds_total", "engine-measured busy seconds per bucket", names
+        ).set_total(self.total_s, **lbl)
+        registry.gauge(
+            "serve_bucket_p50_ms", "windowed p50 call latency (ms)", names
+        ).set(self.p50_ms, **lbl)
+        registry.gauge(
+            "serve_bucket_p95_ms", "windowed p95 call latency (ms)", names
+        ).set(self.p95_ms, **lbl)
+
 
 @dataclasses.dataclass
 class SchedulerStats:
@@ -305,6 +342,23 @@ class SchedulerStats:
             "deadline_evictions": self.deadline_evictions,
             "slot_occupancy": round(self.slot_occupancy, 4),
         }
+
+    def publish(self, registry: "obs_metrics.Registry", kind: str) -> None:
+        lbl = dict(kind=kind)
+        registry.counter(
+            "serve_admitted_total", "requests admitted by the scheduler", ("kind",)
+        ).set_total(self.admitted, **lbl)
+        registry.counter(
+            "serve_admitted_mid_decode_total",
+            "requests admitted into a running decode batch",
+            ("kind",),
+        ).set_total(self.admitted_mid_decode, **lbl)
+        registry.counter(
+            "serve_deadline_evictions_total", "requests evicted on deadline", ("kind",)
+        ).set_total(self.deadline_evictions, **lbl)
+        registry.gauge(
+            "serve_slot_occupancy", "occupied/capacity decode slot-steps", ("kind",)
+        ).set(self.slot_occupancy, **lbl)
 
 
 class ServeStats:
@@ -431,6 +485,26 @@ class ServeStats:
             "scheduler": self.scheduler.summary(),
         }
 
+    def publish(self, registry: Optional["obs_metrics.Registry"] = None) -> None:
+        """Publish the whole table into a metrics registry (default: the
+        process registry).  The ``summary()`` dict and the registry render
+        the same underlying totals — the registry is the scrape-time view,
+        these objects stay the source of truth."""
+        reg = registry if registry is not None else obs_metrics.default()
+        kind = self.kind
+        for b, s in self._sorted():
+            s.publish(reg, kind, str(b), getattr(b, "tier", "default"))
+        self.scheduler.publish(reg, kind)
+        lbl = dict(kind=kind)
+        reg.counter("serve_items_total", "items served", ("kind",)).set_total(self.items, **lbl)
+        reg.counter("serve_tokens_total", "tokens served", ("kind",)).set_total(self.tokens, **lbl)
+        reg.counter("serve_compiles_total", "jit compiles", ("kind",)).set_total(
+            self.compiles, **lbl
+        )
+        reg.counter("serve_calls_total", "engine forward calls", ("kind",)).set_total(
+            self.calls, **lbl
+        )
+
     def format(self) -> str:
         unit = self.unit
         with_tokens = any(s.tokens for s in self.buckets.values())
@@ -453,6 +527,9 @@ class ServeStats:
         return "\n".join(lines)
 
 
+_REQ_IDS = itertools.count(1)  # process-unique request ids for span chains
+
+
 @dataclasses.dataclass
 class PendingRequest:
     """Base class for a queued request; ``result()`` is available after
@@ -466,8 +543,16 @@ class PendingRequest:
     ``deadline_s`` is a soft SLA in seconds from enqueue — a request
     still unserved at its deadline is evicted with
     :class:`DeadlineExceeded` rather than served late.
+
+    ``req_id`` is a process-unique id labeling this request's span chain
+    in ``obs.trace`` — delivery and failure emit the terminal
+    complete/evicted/failed events here, so every engine family gets a
+    closed chain for free.
     """
 
+    req_id: str = dataclasses.field(
+        default_factory=lambda: f"r{next(_REQ_IDS)}", kw_only=True
+    )
     priority: int = dataclasses.field(default=0, kw_only=True)
     deadline_s: Optional[float] = dataclasses.field(default=None, kw_only=True)
     t_enqueue: float = dataclasses.field(
@@ -501,11 +586,25 @@ class PendingRequest:
 
     def _deliver(self, result: Any) -> None:
         self._result = result
+        lat = time.perf_counter() - self.t_enqueue
+        obs_trace.emit("complete", request=self.req_id, dur_s=lat)
+        if obs_metrics.live():
+            obs_metrics.default().histogram(
+                "serve_request_latency_seconds",
+                "end-to-end request latency (enqueue to delivery)",
+            ).observe(lat)
         if self._event is not None:
             self._event.set()
 
     def _fail(self, err: BaseException) -> None:
         self._error = err
+        phase = "evicted" if isinstance(err, DeadlineExceeded) else "failed"
+        obs_trace.emit(
+            phase,
+            request=self.req_id,
+            dur_s=time.perf_counter() - self.t_enqueue,
+            error=type(err).__name__,
+        )
         if self._event is not None:
             self._event.set()
 

@@ -69,6 +69,7 @@ from repro.configs.base import ModelConfig
 from repro.core.model_quant import quantize_lm
 from repro.core.versaq import QuantPolicy
 from repro.models import lm, vggt as vggt_mod
+from repro.obs import trace as obs_trace
 from repro.serving import batching
 from repro.serving.batching import DeadlineExceeded, next_pow2, pick_bucket
 
@@ -227,11 +228,12 @@ class PrefillRunner:
         pfn = eng._prefill_fn(pbucket, masked)
         cache = lm.init_cache(eng.cfg, bb, eng.max_len)
         t0 = time.perf_counter()
-        if masked:
-            logits, cache = pfn(params, toks, cache, pad_lens)
-        else:
-            logits, cache = pfn(params, toks, cache)
-        logits.block_until_ready()
+        with obs_trace.span("prefill", emit_event=False, bucket=str(pbucket)):
+            if masked:
+                logits, cache = pfn(params, toks, cache, pad_lens)
+            else:
+                logits, cache = pfn(params, toks, cache)
+            logits.block_until_ready()
         dt = time.perf_counter() - t0
         ps = eng.stats.bucket(pbucket)
         ps.calls += 1
@@ -240,6 +242,11 @@ class PrefillRunner:
         ps.tokens += n_prompt_toks
         ps.total_s += dt
         ps.latencies_s.append(dt)
+        for r in reqs:
+            obs_trace.emit(
+                "prefill", request=r.req_id, dur_s=dt,
+                bucket=str(pbucket), tier=tier, rows=r.prompts.shape[0],
+            )
         return PrefillResult(
             cache=cache, logits_last=logits[:, -1], pad_lens=pad_lens,
             pads=real_pads, n_real=n_real, bb=bb, L=L, masked=masked,
@@ -384,6 +391,11 @@ class DecodeRunner:
         if not take:
             return []
 
+        for r in take:
+            obs_trace.emit(
+                "admit", request=r.req_id, tier=self.tier, prompt_len=L,
+                mid_decode=was_running,
+            )
         pre = eng._prefill.run(take, L, self.tier)
         tok0, keys0 = self._first_tokens(pre, take)
         row_of = {}
@@ -494,11 +506,16 @@ class DecodeRunner:
         burst_tokens = sum(min(n, a.remaining) * len(a.rows) for a in self.active)
 
         t0 = time.perf_counter()
-        for _ in range(n):
-            tok, self.cache, keys = step(params, tok, self.cache, pad, keys, grd)
-            self.step_log.append(tok)
-        tok.block_until_ready()
+        with obs_trace.span("decode_burst", emit_event=False, bucket=str(bucket)):
+            for _ in range(n):
+                tok, self.cache, keys = step(params, tok, self.cache, pad, keys, grd)
+                self.step_log.append(tok)
+            tok.block_until_ready()
         dt = time.perf_counter() - t0
+        obs_trace.emit(
+            "decode_burst", dur_s=dt, bucket=str(bucket), steps=n,
+            active=len(self.active), width=self.width,
+        )
 
         ds = eng.stats.bucket(bucket)
         ds.calls += n
@@ -534,6 +551,10 @@ class DecodeRunner:
         ds = self.eng.stats.bucket(DecodeBucket(self.width, self.tier))
         ds.items += len(a.rows)
         self._release(a)
+        obs_trace.emit(
+            "decode", request=r.req_id, tier=self.tier,
+            steps=r.n_steps - 1, rows=len(a.rows),
+        )
         r._deliver(ids[0] if r.squeeze else ids)
 
     def evict(self, a: _Active, err: BaseException) -> None:
@@ -1090,6 +1111,11 @@ class Engine:
             L=L, greedy=key is None, key=key,
             priority=priority, deadline_s=deadline_s,
         )
+        obs_trace.emit(
+            "enqueue", request=req.req_id, kind="lm", tier=tier,
+            prompt_len=L, rows=prompts.shape[0], n_steps=n_steps,
+            priority=priority,
+        )
         if self.continuous:
             self._sched.add(req)
         else:
@@ -1190,6 +1216,11 @@ class Engine:
         decode loop runs to completion before anything else is served
         (the continuous scheduler replaces this on supported configs)."""
         params = self.tier_params(tier)
+        for r in reqs:
+            obs_trace.emit(
+                "admit", request=r.req_id, tier=tier, prompt_len=L,
+                mid_decode=False,
+            )
         pre = self._prefill.run(reqs, L, tier)
         n_steps = max(r.n_steps for r in reqs)
         bb, masked, pad_lens = pre.bb, pre.masked, pre.pad_lens
@@ -1206,21 +1237,27 @@ class Engine:
             dbucket = DecodeBucket(bb, tier)
             dfn = self._decode_fn(dbucket, masked)
             t0 = time.perf_counter()
-            for _ in range(n_steps - 1):
-                if masked:
-                    logits, cache = dfn(params, tok, cache, pad_lens)
-                else:
-                    logits, cache = dfn(params, tok, cache)
-                lg = logits[:, 0]
-                if greedy:
-                    tok = jnp.argmax(lg, axis=-1).astype(jnp.int32)
-                else:
-                    key, sub = jax.random.split(key)
-                    tok = jax.random.categorical(sub, lg).astype(jnp.int32)
-                out.append(tok)
-            res = jnp.stack(out, axis=1)
-            res.block_until_ready()
+            with obs_trace.span("decode_burst", emit_event=False, bucket=str(dbucket)):
+                for _ in range(n_steps - 1):
+                    if masked:
+                        logits, cache = dfn(params, tok, cache, pad_lens)
+                    else:
+                        logits, cache = dfn(params, tok, cache)
+                    lg = logits[:, 0]
+                    if greedy:
+                        tok = jnp.argmax(lg, axis=-1).astype(jnp.int32)
+                    else:
+                        key, sub = jax.random.split(key)
+                        tok = jax.random.categorical(sub, lg).astype(jnp.int32)
+                    out.append(tok)
+                res = jnp.stack(out, axis=1)
+                res.block_until_ready()
             dt = time.perf_counter() - t0
+            for r in reqs:
+                obs_trace.emit(
+                    "decode", request=r.req_id, tier=tier,
+                    steps=r.n_steps - 1, rows=r.prompts.shape[0],
+                )
             ds = self.stats.bucket(dbucket)
             ds.calls += n_steps - 1
             ds.items += pre.n_real

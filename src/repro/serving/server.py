@@ -22,15 +22,74 @@ serialization (one device stream), the server is the unit of liveness.
     with AsyncServer(eng) as srv:
         reqs = [srv.submit(p, n_steps=32) for p in prompts]
         outs = [srv.result(r, timeout=60) for r in reqs]
+
+With ``metrics_port=`` the server additionally exposes the telemetry
+endpoints (``docs/observability.md``):
+
+* ``GET /metrics`` — Prometheus text exposition (engine stats published
+  at scrape time, kernel launch counters, quant health);
+* ``GET /stats``   — the engine's unified ``summary()`` JSON plus
+  queue-depth gauges;
+* ``GET /trace``   — the recent span-event ring buffer as JSON
+  (``?request=r42`` filters one chain, ``?n=100`` bounds the tail);
+* ``GET /healthz`` — liveness.
+
+``metrics_port=0`` binds an ephemeral port (see ``metrics_address``).
+Starting with a metrics port turns live telemetry on process-wide
+(``obs.enable_all()``) so span chains and quant health are recorded for
+the traffic being scraped.
 """
 from __future__ import annotations
 
+import http.server
+import json
 import threading
+import urllib.parse
 from typing import Any, Optional
 
+from repro import obs
+from repro.obs import metrics as obs_metrics
+from repro.obs import trace as obs_trace
 from repro.serving.batching import PendingRequest, ServingEngine
 
 __all__ = ["AsyncServer"]
+
+
+class _ObsHandler(http.server.BaseHTTPRequestHandler):
+    server_version = "repro-obs/1"
+
+    def log_message(self, *args) -> None:  # silence per-request stderr spam
+        pass
+
+    def do_GET(self) -> None:
+        srv: "AsyncServer" = self.server.async_server  # type: ignore[attr-defined]
+        url = urllib.parse.urlsplit(self.path)
+        try:
+            if url.path == "/metrics":
+                body = srv._render_metrics().encode()
+                ctype = "text/plain; version=0.0.4; charset=utf-8"
+            elif url.path == "/stats":
+                body = json.dumps(srv._render_stats(), indent=2).encode()
+                ctype = "application/json"
+            elif url.path == "/trace":
+                q = urllib.parse.parse_qs(url.query)
+                n = int(q["n"][0]) if "n" in q else 256
+                request = q.get("request", [None])[0]
+                body = json.dumps(srv._render_trace(n, request), indent=2).encode()
+                ctype = "application/json"
+            elif url.path == "/healthz":
+                body, ctype = b"ok\n", "text/plain"
+            else:
+                self.send_error(404, "unknown path (try /metrics /stats /trace)")
+                return
+        except Exception as e:  # surface render bugs to the scraper, not a hang
+            self.send_error(500, f"{type(e).__name__}: {e}")
+            return
+        self.send_response(200)
+        self.send_header("Content-Type", ctype)
+        self.send_header("Content-Length", str(len(body)))
+        self.end_headers()
+        self.wfile.write(body)
 
 
 class AsyncServer:
@@ -38,7 +97,15 @@ class AsyncServer:
     serving engine (anything implementing the
     ``batching.ServingEngine`` protocol — LM or VGGT)."""
 
-    def __init__(self, engine: ServingEngine, poll_interval_s: Optional[float] = None):
+    def __init__(
+        self,
+        engine: ServingEngine,
+        poll_interval_s: Optional[float] = None,
+        *,
+        metrics_port: Optional[int] = None,
+        metrics_host: str = "127.0.0.1",
+        registry: Optional[obs_metrics.Registry] = None,
+    ):
         missing = [
             m for m in ("enqueue", "poll", "flush", "abort")
             if not callable(getattr(engine, m, None))
@@ -49,6 +116,11 @@ class AsyncServer:
                 f"ServingEngine protocol (missing {missing})"
             )
         self.engine = engine
+        self.metrics_port = metrics_port
+        self.metrics_host = metrics_host
+        self.registry = registry if registry is not None else obs_metrics.default()
+        self._http: Optional[http.server.ThreadingHTTPServer] = None
+        self._http_thread: Optional[threading.Thread] = None
         if poll_interval_s is None:
             # pace the loop off the engine's own deadline: ~4 polls per
             # max_wait_s window bounds flush lateness at 25% of the
@@ -77,7 +149,29 @@ class AsyncServer:
                 target=self._loop, args=(stop,), name="serve-loop", daemon=True
             )
             self._thread.start()
+        if self.metrics_port is not None and self._http is None:
+            # a metrics surface implies live telemetry: span chains and
+            # quant health must be recorded for the traffic it reports on
+            obs.enable_all(registry=None if self.registry is obs_metrics.default()
+                           else self.registry)
+            self._http = http.server.ThreadingHTTPServer(
+                (self.metrics_host, self.metrics_port), _ObsHandler
+            )
+            self._http.daemon_threads = True
+            self._http.async_server = self  # type: ignore[attr-defined]
+            self._http_thread = threading.Thread(
+                target=self._http.serve_forever, name="obs-http", daemon=True
+            )
+            self._http_thread.start()
         return self
+
+    @property
+    def metrics_address(self) -> Optional[tuple[str, int]]:
+        """(host, port) the telemetry endpoints are bound to (resolves
+        ``metrics_port=0`` to the ephemeral port), or None."""
+        if self._http is None:
+            return None
+        return self._http.server_address[:2]
 
     def stop(self, drain: bool = True) -> None:
         """Stop the loop.  With ``drain`` (default) flush every pending
@@ -101,6 +195,11 @@ class AsyncServer:
             # a failing drain flush (micro-batch error re-raised after
             # _fail-ing its owners) must still shut the loop down
             self._stop.set()
+            if self._http is not None:
+                self._http.shutdown()
+                self._http.server_close()
+                self._http = None
+                self._http_thread = None
             if self._thread is not None:
                 self._thread.join(timeout=5.0)
                 if not self._thread.is_alive():
@@ -141,6 +240,41 @@ class AsyncServer:
                         f"{'running' if self.running else 'stopped'})"
                     )
         return req.result()
+
+    # ---- telemetry endpoints ---------------------------------------------
+
+    def _publish(self) -> None:
+        """Refresh the registry from the engine under the engine lock —
+        scrape-time publishing keeps the serving hot path free of registry
+        traffic and a scrape coherent with the stats tables."""
+        with self._lock:
+            self.engine.stats.publish(self.registry)
+            pending = getattr(self.engine, "pending", 0)
+            active = getattr(self.engine, "active", 0)
+        kind = getattr(self.engine.stats, "kind", "generic")
+        self.registry.gauge(
+            "serve_pending_requests", "requests waiting for admission", ("kind",)
+        ).set(pending, kind=kind)
+        self.registry.gauge(
+            "serve_active_rows", "decode-slot rows mid-generation", ("kind",)
+        ).set(active, kind=kind)
+
+    def _render_metrics(self) -> str:
+        self._publish()
+        return self.registry.render_prometheus()
+
+    def _render_stats(self) -> dict:
+        with self._lock:
+            summary = self.engine.stats.summary()
+            summary["pending"] = getattr(self.engine, "pending", 0)
+            summary["active"] = getattr(self.engine, "active", 0)
+        return summary
+
+    def _render_trace(self, n: int, request: Optional[str]) -> list[dict]:
+        tr = obs_trace.current()
+        if tr is None:
+            return []
+        return [ev.to_dict() for ev in tr.recent(n=n, request=request)]
 
     # ---- loop ------------------------------------------------------------
 

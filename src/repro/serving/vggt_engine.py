@@ -44,6 +44,7 @@ from repro.configs.base import ModelConfig
 from repro.core.model_quant import quantize_vggt
 from repro.core.versaq import QuantPolicy
 from repro.models import vggt as vggt_mod
+from repro.obs import trace as obs_trace
 from repro.serving import batching
 from repro.serving.batching import BucketStats, next_pow2, pick_bucket
 
@@ -241,6 +242,10 @@ class VGGTEngine:
             scenes=scenes, n_patches=p_, tier=tier,
             priority=priority, deadline_s=deadline_s,
         )
+        obs_trace.emit(
+            "enqueue", request=req.req_id, kind="vggt", tier=tier,
+            scenes=b, frames=scenes.shape[1], patches=p_, priority=priority,
+        )
         self._queue.add(self._group_key(scenes, tier), req, b)
         return req
 
@@ -265,6 +270,11 @@ class VGGTEngine:
 
     def _run(self, key: tuple[str, int, int], reqs: list[PendingRequest]) -> None:
         tier, frames, p_bucket = key
+        for r in reqs:
+            obs_trace.emit(
+                "admit", request=r.req_id, tier=tier, frames=frames,
+                patches=p_bucket, mid_decode=False,
+            )
         params = self.tier_params(tier)
         n_real = sum(r.scenes.shape[0] for r in reqs)
         bucket = self.bucket_for(n_real, frames, p_bucket, tier)
@@ -294,11 +304,12 @@ class VGGTEngine:
         fn = self._bucket_fn(bucket, masked)
 
         t0 = time.perf_counter()
-        if masked:
-            out = fn(params, x, jnp.concatenate(mask_parts, axis=0))
-        else:
-            out = fn(params, x)
-        jax.block_until_ready(out)
+        with obs_trace.span("forward", emit_event=False, bucket=str(bucket)):
+            if masked:
+                out = fn(params, x, jnp.concatenate(mask_parts, axis=0))
+            else:
+                out = fn(params, x)
+            jax.block_until_ready(out)
         dt = time.perf_counter() - t0
 
         bs = self.stats.bucket(bucket)
@@ -307,6 +318,11 @@ class VGGTEngine:
         bs.padded_items += bucket.batch - n_real
         bs.total_s += dt
         bs.latencies_s.append(dt)
+        for r in reqs:
+            obs_trace.emit(
+                "forward", request=r.req_id, dur_s=dt, bucket=str(bucket),
+                tier=tier, scenes=r.scenes.shape[0],
+            )
 
         i0 = 0
         ns = self.cfg.n_special_tokens

@@ -1,0 +1,87 @@
+"""Kernel-launch probe: nested tracking fan-out (regression — an inner
+``tracking()`` used to shadow the outer log and swallow its counts), byte
+aggregation, and the always-on global counters the telemetry registry
+scrapes."""
+import pytest
+
+from repro.kernels import probe
+
+
+def test_nested_tracking_records_to_all_active_logs():
+    """Regression: record() must fan out to EVERY active log.  The old
+    single-slot global made an inner tracking() context hide launches
+    from the enclosing one, so a bench wrapping a test helper (each with
+    their own tracking()) under-counted."""
+    with probe.tracking() as outer:
+        probe.record("a", 2, nbytes=10)
+        with probe.tracking() as inner:
+            probe.record("b", 1, nbytes=5)
+        probe.record("a", 1)
+    assert outer.by_name() == {"a": 3, "b": 1}
+    assert outer.total_bytes == 15
+    assert inner.by_name() == {"b": 1}
+    assert inner.total_bytes == 5
+
+
+def test_record_after_inner_scope_exits_reaches_outer_only():
+    with probe.tracking() as outer:
+        with probe.tracking() as inner:
+            pass
+        probe.record("late", 4)
+    assert outer.by_name() == {"late": 4}
+    assert inner.count == 0
+
+
+def test_record_outside_any_scope_is_noop():
+    probe.record("orphan", 3, nbytes=99)  # must not raise or leak anywhere
+    with probe.tracking() as log:
+        pass
+    assert log.count == 0
+
+
+def test_log_counts_and_reset():
+    with probe.tracking() as log:
+        probe.record("k", 2, nbytes=8)
+        probe.record("k", 1, nbytes=8)
+        probe.record("j")
+    assert log.count == 4
+    assert log.total_bytes == 16
+    assert log.nbytes == {"k": 16}
+    log.reset()
+    assert log.count == 0 and log.total_bytes == 0
+
+
+@pytest.fixture
+def global_counters():
+    was = probe.global_counters()
+    probe.disable_global()
+    yield probe.enable_global()
+    probe.disable_global()
+    if was is not None:
+        probe.enable_global()
+
+
+def test_global_counters_aggregate_alongside_scoped_logs(global_counters):
+    with probe.tracking() as log:
+        probe.record("q", 2, nbytes=7)
+    probe.record("q", 1)  # outside any scope: global sink still counts
+    assert log.by_name() == {"q": 2}
+    assert global_counters.by_name() == {"q": 3}
+    assert global_counters.total_bytes == 7
+
+
+def test_enable_global_is_idempotent(global_counters):
+    probe.record("x")
+    again = probe.enable_global()
+    assert again is global_counters  # existing counters kept, not reset
+    assert again.by_name() == {"x": 1}
+    global_counters.reset()
+    assert probe.global_counters().count == 0
+
+
+def test_disable_global_stops_counting(global_counters):
+    probe.record("y")
+    probe.disable_global()
+    probe.record("y")
+    assert probe.global_counters() is None
+    assert global_counters.by_name() == {"y": 1}

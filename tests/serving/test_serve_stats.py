@@ -1,0 +1,134 @@
+"""ServeStats edge cases: empty engines, tiny percentile windows, and
+deadline-evicted-only traffic must all produce a well-formed summary()
+(and registry publish) instead of IndexErrors or division blowups."""
+import functools
+
+import jax
+import pytest
+
+from repro.configs import get_config
+from repro.models import lm
+from repro.obs import metrics as obs_metrics
+from repro.serving.batching import BucketStats, DeadlineExceeded, ServeStats
+from repro.serving.engine import Engine
+
+KEY = jax.random.PRNGKey(0)
+TINY = dict(d_model=64, n_heads=4, n_kv_heads=2, head_dim=16, d_ff=128, vocab_size=64)
+
+
+@functools.lru_cache(maxsize=1)
+def _fixture():
+    cfg = get_config("qwen3-14b-smoke").with_(**TINY)
+    return cfg, lm.init_params(cfg, KEY)
+
+
+# ---------------------------------------------------------------------------
+# empty / tiny-sample stats objects
+# ---------------------------------------------------------------------------
+
+
+def test_empty_engine_summary():
+    """A freshly-built engine that served nothing must summarize cleanly."""
+    cfg, params = _fixture()
+    eng = Engine(cfg, params, max_len=32)
+    s = eng.stats.summary()
+    assert s["kind"] == "lm"
+    assert s["totals"] == {"compiles": 0, "calls": 0, "items": 0, "tokens": 0}
+    assert s["buckets"] == {}
+    assert s["scheduler"]["admitted"] == 0
+    assert s["scheduler"]["slot_occupancy"] == 0.0
+
+
+def test_empty_bucket_stats_percentiles_are_zero():
+    s = BucketStats()
+    assert s.p50_ms == 0.0
+    assert s.p95_ms == 0.0
+    assert s.items_per_s == 0.0
+    assert s.tokens_per_s == 0.0
+    assert s.summary()["p50_ms"] == 0.0
+
+
+@pytest.mark.parametrize("lats", [[0.004], [0.004, 0.012]])
+def test_percentiles_with_one_or_two_samples(lats):
+    """np.percentile on 1–2 samples must interpolate, not IndexError."""
+    s = BucketStats()
+    for v in lats:
+        s.latencies_s.append(v)
+    lo, hi = min(lats) * 1e3, max(lats) * 1e3
+    assert lo <= s.p50_ms <= hi
+    assert lo <= s.p95_ms <= hi
+    assert s.p50_ms <= s.p95_ms
+
+
+def test_empty_stats_publish_writes_only_scheduler_and_totals():
+    reg = obs_metrics.Registry()
+    ServeStats().publish(reg)
+    assert reg.get("serve_bucket_calls_total") is None  # no bucket rows
+    assert reg.get("serve_admitted_total").value(kind="generic") == 0
+    assert reg.get("serve_items_total").value(kind="generic") == 0
+
+
+# ---------------------------------------------------------------------------
+# deadline-evicted-only traffic
+# ---------------------------------------------------------------------------
+
+
+def test_deadline_evicted_only_traffic_summary():
+    """Every request misses its (already-expired) deadline: nothing is
+    served, evictions are counted, and summary()/publish() stay sane."""
+    cfg, params = _fixture()
+    eng = Engine(cfg, params, max_len=32, mode="continuous", max_wait_s=0.0)
+    prompt = jax.random.randint(KEY, (8,), 0, cfg.vocab_size)
+    reqs = [eng.enqueue(prompt, 4, deadline_s=0.0) for _ in range(3)]
+    eng.flush()
+    for r in reqs:
+        assert r.ready
+        with pytest.raises(DeadlineExceeded):
+            r.result()
+    s = eng.stats.summary()
+    assert s["totals"]["items"] == 0
+    assert s["totals"]["tokens"] == 0
+    assert s["scheduler"]["deadline_evictions"] == 3
+    assert s["scheduler"]["admitted"] == 0
+
+    reg = obs_metrics.Registry()
+    eng.stats.publish(reg)
+    assert reg.get("serve_deadline_evictions_total").value(kind="lm") == 3
+    assert reg.get("serve_items_total").value(kind="lm") == 0
+
+
+# ---------------------------------------------------------------------------
+# publish() mirrors summary()
+# ---------------------------------------------------------------------------
+
+
+def test_publish_matches_summary_after_traffic():
+    """One served request: every bucket row in summary() must appear in
+    the registry with identical totals (the registry is a scrape-time
+    view of the same counters, per docs/observability.md)."""
+    cfg, params = _fixture()
+    eng = Engine(cfg, params, max_len=32, mode="continuous", max_wait_s=0.0)
+    prompt = jax.random.randint(KEY, (8,), 0, cfg.vocab_size)
+    req = eng.enqueue(prompt, 4)
+    while not req.ready:
+        eng.poll()
+    eng.flush()
+    s = eng.stats.summary()
+    # continuous mode books the request into both its prefill and decode
+    # buckets, so per-request item totals are 2x the request count
+    assert s["totals"]["items"] == 2
+
+    reg = obs_metrics.Registry()
+    eng.stats.publish(reg)
+    calls = reg.get("serve_bucket_calls_total")
+    items = reg.get("serve_bucket_items_total")
+    for bucket, row in s["buckets"].items():
+        lbl = dict(kind="lm", bucket=bucket, tier="default")
+        assert calls.value(**lbl) == row["calls"]
+        assert items.value(**lbl) == row["items"]
+    assert reg.get("serve_items_total").value(kind="lm") == s["totals"]["items"]
+    assert reg.get("serve_tokens_total").value(kind="lm") == s["totals"]["tokens"]
+    assert (
+        reg.get("serve_admitted_total").value(kind="lm")
+        == s["scheduler"]["admitted"]
+    )
