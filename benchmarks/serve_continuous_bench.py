@@ -37,6 +37,7 @@ from repro.models import lm
 from repro.obs import metrics as obs_metrics
 from repro.obs import quant_health
 from repro.obs import trace as obs_trace
+from repro.serving.batching import QueueFull
 from repro.serving.engine import DecodeBucket, Engine
 
 TINY = dict(d_model=64, n_heads=4, n_kv_heads=2, head_dim=16, d_ff=128, vocab_size=64)
@@ -200,16 +201,108 @@ def bench_telemetry_completeness(cfg, params, prompts, gen: int) -> None:
         obs_trace.install(prev) if prev is not None else obs_trace.uninstall()
 
 
+def bench_overload(cfg, params, prompt_len: int, gen: int) -> None:
+    """Chaos gate (docs/robustness.md): a bounded pending queue under 4x
+    offered load must hold its bound (never more than ``max_pending``
+    queued), shed/reject the overflow with counted stats, and still
+    complete every admitted request within a generous latency gate."""
+    import time as _time
+
+    bound = 8
+    offered = 4 * bound
+    max_len = 4 * (prompt_len + gen)
+    # 4-wide slot batch with the group auto-flush disarmed (max_batch
+    # above the offered count): service capacity stays well under the
+    # offered rate, so the queue (not the slots) takes the pressure
+    eng = Engine(cfg, params, max_len=max_len, mode="continuous",
+                 max_wait_s=0.0, decode_steps_per_poll=4,
+                 batch_buckets=(4,), max_batch=2 * offered,
+                 max_pending=bound, admission="shed")
+    prompts = mixed_len_prompts(cfg.vocab_size, offered, prompt_len, seed=40_000)
+
+    live, shed_or_rejected = [], 0
+    max_seen = 0
+    t0 = _time.perf_counter()
+    for i, p in enumerate(prompts):
+        try:
+            # cycling priorities: under "shed" a uniform-priority queue
+            # would always refuse the newest arrival; mixed priorities
+            # exercise both victim selection and incoming rejection
+            live.append(eng.enqueue(p, gen, priority=i % 4))
+        except QueueFull:
+            shed_or_rejected += 1
+        max_seen = max(max_seen, eng.pending)
+        if i % 4 == 3:  # arrivals outpace scheduling turns 4:1
+            eng.poll()
+            max_seen = max(max_seen, eng.pending)
+    done_at = {}
+    while len(done_at) < len(live):
+        eng.poll()
+        now = _time.perf_counter()
+        for r in live:
+            if r.ready and id(r) not in done_at:
+                done_at[id(r)] = now
+
+    delivered, lat = [], []
+    for r in live:
+        try:
+            ids = r.result()
+        except QueueFull:
+            shed_or_rejected += 1
+            continue
+        delivered.append(ids)
+        lat.append(done_at[id(r)] - r.t_enqueue)
+    s = eng.stats.scheduler
+    lat.sort()
+    p95_s = lat[int(0.95 * (len(lat) - 1))] if lat else 0.0
+    common.emit(
+        "serve_continuous.overload",
+        0.0,
+        f"offered={offered} bound={bound} max_pending_seen={max_seen} "
+        f"delivered={len(delivered)} shed={s.shed} rejected={s.rejected} "
+        f"p95_s={p95_s:.2f} wall_s={_time.perf_counter() - t0:.1f}",
+    )
+    if max_seen > bound:
+        raise RuntimeError(
+            f"pending queue exceeded its bound under overload: "
+            f"{max_seen} > max_pending={bound}"
+        )
+    if s.shed + s.rejected == 0 or shed_or_rejected != s.shed + s.rejected:
+        raise RuntimeError(
+            f"4x offered load shed nothing (shed={s.shed} "
+            f"rejected={s.rejected} observed={shed_or_rejected})"
+        )
+    if len(delivered) + shed_or_rejected != offered:
+        raise RuntimeError(
+            f"requests lost: {len(delivered)} delivered + "
+            f"{shed_or_rejected} shed/rejected != {offered} offered"
+        )
+    if any(ids.shape != (gen,) for ids in delivered):
+        raise RuntimeError("an admitted request delivered a wrong-shape result")
+    # generous absolute gate: admitted traffic on the TINY smoke config
+    # completes in ~seconds; only hangs/regressions can breach this
+    if p95_s > 60.0:
+        raise RuntimeError(
+            f"admitted p95 latency {p95_s:.1f}s breached the 60s overload gate"
+        )
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--requests", type=int, default=8)
     ap.add_argument("--prompt-len", type=int, default=16)
     ap.add_argument("--gen", type=int, default=32)
+    ap.add_argument("--overload", action="store_true",
+                    help="run only the bounded-queue overload scenario "
+                         "(chaos-smoke CI gate)")
     # run.py drives main() with its own argv; default to no extra args
     args = ap.parse_args(argv if argv is not None else [])
 
     cfg = get_config("qwen3-14b-smoke").with_(**TINY)
     params = lm.init_params(cfg, jax.random.PRNGKey(0))
+    if args.overload:
+        bench_overload(cfg, params, args.prompt_len, args.gen)
+        return
     max_len = 4 * (args.prompt_len + args.gen)  # headroom for the shared clock
     # mixed lengths: the short prompts pad into the full prompts' bucket,
     # so the masked prefill variant rides along in both schedulers

@@ -79,6 +79,52 @@ def _tier_cycle(tiers: dict | None, n: int) -> list[str | None]:
     return [names[i % len(names)] for i in range(n)]
 
 
+def _robustness_kwargs(args) -> dict:
+    """Shared fault-tolerance flags (docs/robustness.md) for both engine
+    constructors: admission bounds, degradation ladder, chaos plan."""
+    kw: dict = {}
+    if args.max_pending is not None:
+        kw["max_pending"] = args.max_pending
+    if args.max_queued_tokens is not None:
+        kw["max_queued_tokens"] = args.max_queued_tokens
+    if args.max_pending is not None or args.max_queued_tokens is not None:
+        kw["admission"] = args.admission
+    if args.degrade:
+        kw["degrade"] = True
+    if args.faults is not None:
+        kw["faults"] = args.faults
+    return kw
+
+
+def _collect(srv: AsyncServer, reqs: list) -> list:
+    """Gather results, reporting per-request serving errors (quarantine,
+    shed, deadline — expected events under --faults / admission bounds)
+    instead of dying on the first one.  Returns the successful outputs."""
+    from repro.serving.batching import ServeError
+
+    outs = []
+    for i, r in enumerate(reqs):
+        if r is None:  # rejected at submit (QueueFull under --admission reject)
+            continue
+        try:
+            outs.append(srv.result(r, timeout=600))
+        except ServeError as e:
+            print(f"request {i}: {type(e).__name__}: {e}")
+    return outs
+
+
+def _submit(srv: AsyncServer, i: int, *a, **kw):
+    """Submit one request; a QueueFull at enqueue (admission reject) is an
+    expected outcome under --max-pending, not a launcher crash."""
+    from repro.serving.batching import QueueFull
+
+    try:
+        return srv.submit(*a, **kw)
+    except QueueFull as e:
+        print(f"request {i}: QueueFull: {e}")
+        return None
+
+
 def _server(eng, args) -> AsyncServer:
     """AsyncServer wired to the CLI's telemetry flags: ``--metrics-port``
     exposes /metrics, /stats and /trace (docs/observability.md) and turns
@@ -110,18 +156,23 @@ def serve_vggt(cfg, args) -> None:
         attn_impl=args.attn_impl,
         max_batch=args.batch,
         max_wait_s=args.max_wait_s,
+        **_robustness_kwargs(args),
     )
     assign = _tier_cycle(tiers, args.requests)
     with _server(eng, args) as srv:
         reqs = [
-            srv.submit(jnp.asarray(
+            _submit(srv, r, jnp.asarray(
                 scene_batch(args.scenes, args.frames, args.patches, cfg.d_model, r)["patches"]
             ), tier=assign[r])
             for r in range(args.requests)
         ]
-        outs = [srv.result(r, timeout=600) for r in reqs]
+        outs = _collect(srv, reqs)
+    if not outs:
+        print(f"served 0/{len(reqs)} requests")
+        print(eng.stats.format())
+        return
     out = outs[-1]
-    print(f"served {len(reqs)} requests -> poses{tuple(out['pose'].shape)} "
+    print(f"served {len(outs)}/{len(reqs)} requests -> poses{tuple(out['pose'].shape)} "
           f"points{tuple(out['points'].shape)}")
     print(eng.stats.format())
 
@@ -143,6 +194,7 @@ def serve_lm(cfg, args) -> None:
         max_batch=args.batch,
         max_wait_s=args.max_wait_s,
         mode=args.mode,
+        **_robustness_kwargs(args),
     )
     # mixed-length traffic (full + non-pow2 short prompts) exercises the
     # masked length-padded bucket variants alongside warm bucket reuse
@@ -150,11 +202,12 @@ def serve_lm(cfg, args) -> None:
     assign = _tier_cycle(tiers, len(prompts))
     with _server(eng, args) as srv:
         reqs = [
-            srv.submit(p, args.gen, tier=t, deadline_s=args.deadline_s)
-            for p, t in zip(prompts, assign)
+            _submit(srv, i, p, args.gen, tier=t, deadline_s=args.deadline_s)
+            for i, (p, t) in enumerate(zip(prompts, assign))
         ]
-        outs = [srv.result(r, timeout=600) for r in reqs]
-    print(f"served {len(outs)} requests -> {sum(o.shape[-1] for o in outs)} tokens")
+        outs = _collect(srv, reqs)
+    print(f"served {len(outs)}/{len(reqs)} requests -> "
+          f"{sum(o.shape[-1] for o in outs)} tokens")
     print(f"prefill {eng.stats.prefill_s*1e3:.1f}ms  "
           f"decode {eng.stats.decode_s*1e3:.1f}ms  "
           f"({eng.stats.decode_tokens_per_s:.0f} decode tok/s)")
@@ -193,6 +246,24 @@ def main():
     ap.add_argument("--patches", type=int, default=64)
     ap.add_argument("--attn-impl", default=None,
                     help="override cfg.attn_impl (two_stage = INT8 Pallas kernel)")
+    # robustness (docs/robustness.md)
+    ap.add_argument("--max-pending", type=int, default=None,
+                    help="admission control: bound the pending queue at "
+                         "this many requests (QueueFull past it)")
+    ap.add_argument("--max-queued-tokens", type=int, default=None,
+                    help="admission control: bound the queued work in "
+                         "tokens (prompt+gen for LM, patch tokens for VGGT)")
+    ap.add_argument("--admission", default="reject", choices=("reject", "shed"),
+                    help="over-full queue policy: reject the new request "
+                         "or shed the least-valuable queued one")
+    ap.add_argument("--degrade", action="store_true",
+                    help="degradation ladder: under sustained SLA pressure "
+                         "auto-downshift unpinned admissions to cheaper "
+                         "tiers, recover with hysteresis")
+    ap.add_argument("--faults", default=None,
+                    help="chaos fault plan, e.g. "
+                         "'nan@decode.logits:req=1,step=3;seed=7' "
+                         "(see serving/faults.py for the grammar)")
     # observability (docs/observability.md)
     ap.add_argument("--metrics-port", type=int, default=None,
                     help="expose /metrics (Prometheus), /stats (JSON) and "

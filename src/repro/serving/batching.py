@@ -38,7 +38,14 @@ __all__ = [
     "ServeStats",
     "SchedulerStats",
     "ServingEngine",
+    "ServeError",
     "DeadlineExceeded",
+    "QueueFull",
+    "NumericFault",
+    "ServerStopped",
+    "AdmissionController",
+    "DegradeConfig",
+    "DegradationController",
     "PendingRequest",
     "MicroBatchQueue",
     "TierSet",
@@ -49,11 +56,42 @@ __all__ = [
 ]
 
 
-class DeadlineExceeded(RuntimeError):
+class ServeError(RuntimeError):
+    """Base class for serving-layer request failures with defined
+    semantics (SLA miss, admission rejection, numeric quarantine,
+    server shutdown).  ``PendingRequest.result()`` re-raises these
+    *directly* so callers can catch the specific class; anything else a
+    micro-batch raises is an engine bug and stays wrapped."""
+
+
+class DeadlineExceeded(ServeError):
     """A request missed its ``deadline_s`` and was evicted — either from
     the pending queue (never admitted) or mid-decode (its slots were
     released to the batch).  Delivered through ``PendingRequest.result()``
     so the waiter sees the SLA miss, not a hang."""
+
+
+class QueueFull(ServeError):
+    """Admission control rejected (or shed) the request: the engine's
+    bounded pending queue (``max_pending`` / ``max_queued_tokens``) was
+    full and the request lost the shed ordering (lowest priority, then
+    latest deadline, then newest arrival sheds first).  Raised from
+    ``enqueue`` for the incoming request; delivered through ``result()``
+    for a shed victim."""
+
+
+class NumericFault(ServeError):
+    """The request's forward produced non-finite activations (NaN/Inf —
+    e.g. saturation blow-up at an aggressive quantization tier) and was
+    quarantined: only this request fails, co-batched requests keep their
+    bit-exact results.  Engines may retry once at a higher-precision
+    tier before failing (``numeric_retry_tier``)."""
+
+
+class ServerStopped(ServeError):
+    """The serving loop stopped (``AsyncServer.stop(drain=False)``, or
+    abort escalation after repeated poll failures) before this request
+    was served."""
 
 
 @runtime_checkable
@@ -321,13 +359,21 @@ class SchedulerStats:
     ``admitted_mid_decode`` counts requests that joined a *running*
     decode batch (the continuous-batching win); slot-step counters track
     decode-slot occupancy (``occupied_slot_steps / capacity_slot_steps``
-    is the utilization of the compiled decode width)."""
+    is the utilization of the compiled decode width).  The robustness
+    counters (docs/robustness.md): ``rejected``/``shed`` from admission
+    control, ``numeric_faults``/``numeric_retries`` from non-finite-row
+    quarantine, ``degraded_admissions`` from the degradation ladder."""
 
     admitted: int = 0
     admitted_mid_decode: int = 0
     deadline_evictions: int = 0
     occupied_slot_steps: int = 0
     capacity_slot_steps: int = 0
+    rejected: int = 0  # admissions refused with QueueFull
+    shed: int = 0  # queued requests shed to make room
+    numeric_faults: int = 0  # requests quarantined on non-finite rows
+    numeric_retries: int = 0  # quarantined requests re-queued at a higher tier
+    degraded_admissions: int = 0  # admissions downshifted by the ladder
 
     @property
     def slot_occupancy(self) -> float:
@@ -341,6 +387,11 @@ class SchedulerStats:
             "admitted_mid_decode": self.admitted_mid_decode,
             "deadline_evictions": self.deadline_evictions,
             "slot_occupancy": round(self.slot_occupancy, 4),
+            "rejected": self.rejected,
+            "shed": self.shed,
+            "numeric_faults": self.numeric_faults,
+            "numeric_retries": self.numeric_retries,
+            "degraded_admissions": self.degraded_admissions,
         }
 
     def publish(self, registry: "obs_metrics.Registry", kind: str) -> None:
@@ -356,6 +407,27 @@ class SchedulerStats:
         registry.counter(
             "serve_deadline_evictions_total", "requests evicted on deadline", ("kind",)
         ).set_total(self.deadline_evictions, **lbl)
+        registry.counter(
+            "serve_rejected_total", "admissions refused with QueueFull", ("kind",)
+        ).set_total(self.rejected, **lbl)
+        registry.counter(
+            "serve_shed_total", "queued requests shed under overload", ("kind",)
+        ).set_total(self.shed, **lbl)
+        registry.counter(
+            "serve_numeric_faults_total",
+            "requests quarantined on non-finite activations",
+            ("kind",),
+        ).set_total(self.numeric_faults, **lbl)
+        registry.counter(
+            "serve_numeric_retries_total",
+            "quarantined requests retried at a higher tier",
+            ("kind",),
+        ).set_total(self.numeric_retries, **lbl)
+        registry.counter(
+            "serve_degraded_admissions_total",
+            "admissions downshifted by the degradation ladder",
+            ("kind",),
+        ).set_total(self.degraded_admissions, **lbl)
         registry.gauge(
             "serve_slot_occupancy", "occupied/capacity decode slot-steps", ("kind",)
         ).set(self.slot_occupancy, **lbl)
@@ -467,7 +539,9 @@ class ServeStats:
              "totals": {compiles, calls, items, tokens},
              "buckets": {str(bucket): <BucketStats.summary()>},
              "scheduler": {admitted, admitted_mid_decode,
-                           deadline_evictions, slot_occupancy}}
+                           deadline_evictions, slot_occupancy,
+                           rejected, shed, numeric_faults,
+                           numeric_retries, degraded_admissions}}
 
         Dashboards and ``planner.site_latency_from_stats`` consume one
         format regardless of which engine produced the stats.
@@ -576,7 +650,9 @@ class PendingRequest:
         )
 
     def result(self) -> Any:
-        if isinstance(self._error, DeadlineExceeded):
+        if isinstance(self._error, ServeError):
+            # defined serving semantics (deadline miss, shed, numeric
+            # quarantine, server stop) surface as the specific class
             raise self._error
         if self._error is not None:
             raise RuntimeError("request's micro-batch failed") from self._error
@@ -683,6 +759,18 @@ class MicroBatchQueue:
             stats.deadline_evictions += n
         return n
 
+    def remove(self, req: PendingRequest) -> bool:
+        """Drop one queued request without failing or running it (the
+        caller owns delivery — admission shedding fails it with
+        :class:`QueueFull`).  Returns False when the request is not
+        queued (already flushed or never added)."""
+        for q in self._queues.values():
+            for i, (r, _) in enumerate(q):
+                if r is req:
+                    del q[i]
+                    return True
+        return False
+
     def fail_pending(self, err: BaseException) -> int:
         """Fail every queued request without running it (server shutdown
         without drain) so waiters wake with an error instead of blocking
@@ -715,5 +803,175 @@ class MicroBatchQueue:
                 # deliver the failure to every coalesced owner instead of
                 # leaving popped requests forever un-ready
                 for r in take:
-                    r._fail(e)
+                    if not r.ready:
+                        r._fail(e)
                 raise
+
+
+# ---------------------------------------------------------------------------
+# robustness: admission control + degradation ladder (docs/robustness.md)
+# ---------------------------------------------------------------------------
+
+
+def _shed_key(r: PendingRequest) -> tuple:
+    """Shed preference (min sheds first): lowest priority, then latest
+    effective deadline (no deadline = no SLA = least urgent), then
+    newest arrival."""
+    dl = r.t_enqueue + r.deadline_s if r.deadline_s is not None else float("inf")
+    return (r.priority, -dl, -r.t_enqueue)
+
+
+class AdmissionController:
+    """Bounded pending queue shared by both engines.
+
+    ``max_pending`` caps queued *requests*, ``max_queued_tokens`` caps
+    the engine-defined work size summed over the queue (LM: prompt +
+    generation tokens; VGGT: patch tokens).  ``policy="reject"`` raises
+    :class:`QueueFull` at ``enqueue``; ``policy="shed"`` instead evicts
+    the least-valuable queued requests (:func:`_shed_key` order) to make
+    room — the incoming request is still rejected when it sheds below
+    everything already queued.  Unbounded (both caps None) is free."""
+
+    def __init__(
+        self,
+        max_pending: Optional[int] = None,
+        max_queued_tokens: Optional[int] = None,
+        policy: str = "reject",
+    ):
+        if policy not in ("reject", "shed"):
+            raise ValueError(f"admission policy {policy!r}: expected reject | shed")
+        if max_pending is not None and max_pending < 1:
+            raise ValueError(f"max_pending must be >= 1, got {max_pending}")
+        self.max_pending = max_pending
+        self.max_queued_tokens = max_queued_tokens
+        self.policy = policy
+
+    @property
+    def bounded(self) -> bool:
+        return self.max_pending is not None or self.max_queued_tokens is not None
+
+    def check(
+        self,
+        req: PendingRequest,
+        pending: list,
+        size_of: Callable[[PendingRequest], int],
+        stats: SchedulerStats,
+    ) -> list:
+        """Admission decision for ``req`` against the queued ``pending``
+        requests (``req`` not yet among them).  Returns the victims the
+        engine must shed (fail with :class:`QueueFull` + drop from its
+        queue); raises :class:`QueueFull` when the incoming request is
+        the one to refuse."""
+        if not self.bounded:
+            return []
+        live = list(pending)
+        victims: list = []
+
+        def over() -> bool:
+            if self.max_pending is not None and len(live) + 1 > self.max_pending:
+                return True
+            if self.max_queued_tokens is not None:
+                toks = size_of(req) + sum(size_of(q) for q in live)
+                if toks > self.max_queued_tokens:
+                    return True
+            return False
+
+        while over():
+            victim = min(live + [req], key=_shed_key) if live else req
+            if self.policy == "reject" or victim is req:
+                stats.rejected += 1
+                raise QueueFull(
+                    f"admission rejected: {len(live)} queued requests "
+                    f"(max_pending={self.max_pending}, "
+                    f"max_queued_tokens={self.max_queued_tokens}, "
+                    f"policy={self.policy})"
+                )
+            live.remove(victim)
+            victims.append(victim)
+            stats.shed += 1
+        return victims
+
+
+@dataclasses.dataclass
+class DegradeConfig:
+    """Thresholds for the graceful degradation ladder.
+
+    Pressure = queue depth above ``queue_high`` or measured per-request
+    latency above ``latency_high_s``; sustained pressure (``dwell_s``)
+    downshifts one level.  Recovery needs the *low* watermarks to hold
+    for ``recover_s`` (hysteresis: the recover dwell is longer than the
+    downshift dwell by default, so the ladder does not oscillate)."""
+
+    queue_high: int = 8
+    queue_low: Optional[int] = None  # default: queue_high // 2
+    latency_high_s: Optional[float] = None  # latency pressure off unless set
+    latency_low_s: Optional[float] = None  # default: 0.5 * latency_high_s
+    dwell_s: float = 0.05
+    recover_s: float = 0.25
+    max_level: Optional[int] = None  # default: number of tiers - 1
+
+
+class DegradationController:
+    """Graceful degradation ladder over an engine's declared tiers.
+
+    Declaration order is quality preference (docs/serving.md), so level
+    N maps an admission's resolved tier N steps toward the *last*
+    (cheapest) declared tier.  ``observe`` is fed queue depth + measured
+    ``mean_item_latency_s`` on every enqueue/poll; shifts need the
+    condition to hold for the configured dwell, giving hysteresis in
+    both directions.  Explicitly pinned tiers are never downshifted —
+    the ladder only steers default/"auto" admissions."""
+
+    def __init__(self, cfg: Optional[DegradeConfig], n_tiers: int):
+        self.cfg = cfg if cfg is not None else DegradeConfig()
+        cap = self.cfg.max_level
+        self.max_level = max(n_tiers - 1, 0) if cap is None else min(cap, max(n_tiers - 1, 0))
+        self.level = 0
+        self.shifts_down = 0
+        self.shifts_up = 0
+        self._pressure_since: Optional[float] = None
+        self._relief_since: Optional[float] = None
+
+    def observe(
+        self, pending: int, latency_s: Optional[float], now: Optional[float] = None
+    ) -> int:
+        """Feed one load sample; returns the (possibly shifted) level."""
+        c = self.cfg
+        now = time.perf_counter() if now is None else now
+        q_low = c.queue_low if c.queue_low is not None else c.queue_high // 2
+        l_low = (
+            c.latency_low_s
+            if c.latency_low_s is not None
+            else (0.5 * c.latency_high_s if c.latency_high_s is not None else None)
+        )
+        pressure = pending > c.queue_high or (
+            c.latency_high_s is not None
+            and latency_s is not None
+            and latency_s > c.latency_high_s
+        )
+        relief = pending <= q_low and (
+            l_low is None or latency_s is None or latency_s <= l_low
+        )
+        if pressure:
+            self._relief_since = None
+            if self._pressure_since is None:
+                self._pressure_since = now
+            if now - self._pressure_since >= c.dwell_s and self.level < self.max_level:
+                self.level += 1
+                self.shifts_down += 1
+                self._pressure_since = None  # re-arm: next shift needs a fresh dwell
+        elif relief:
+            self._pressure_since = None
+            if self.level == 0:
+                self._relief_since = None
+            else:
+                if self._relief_since is None:
+                    self._relief_since = now
+                if now - self._relief_since >= c.recover_s:
+                    self.level -= 1
+                    self.shifts_up += 1
+                    self._relief_since = None
+        else:  # between the watermarks: hold the level, reset both dwells
+            self._pressure_since = None
+            self._relief_since = None
+        return self.level

@@ -70,8 +70,14 @@ from repro.core.model_quant import quantize_lm
 from repro.core.versaq import QuantPolicy
 from repro.models import lm, vggt as vggt_mod
 from repro.obs import trace as obs_trace
-from repro.serving import batching
-from repro.serving.batching import DeadlineExceeded, next_pow2, pick_bucket
+from repro.serving import batching, faults as faults_mod
+from repro.serving.batching import (
+    DeadlineExceeded,
+    NumericFault,
+    QueueFull,
+    next_pow2,
+    pick_bucket,
+)
 
 __all__ = [
     "PrefillBucket",
@@ -170,6 +176,7 @@ class LMRequest(batching.PendingRequest):
     L: int = 0  # bucketed prompt length (admission group key)
     greedy: bool = True
     key: Optional[jax.Array] = None  # per-request sampling key
+    retries: int = 0  # numeric-quarantine retries consumed
 
 
 # ---------------------------------------------------------------------------
@@ -189,6 +196,7 @@ class PrefillResult:
     bb: int
     L: int
     masked: bool
+    ok_rows: np.ndarray = None  # [n_real] bool: last-slot logits all finite
 
 
 class PrefillRunner:
@@ -201,6 +209,8 @@ class PrefillRunner:
 
     def run(self, reqs: list[LMRequest], L: int, tier: str) -> PrefillResult:
         eng = self.eng
+        if eng._injector is not None:
+            eng._injector.sleep("prefill")
         params = eng.tier_params(tier)
         n_real = sum(r.prompts.shape[0] for r in reqs)
         bb = eng.batch_bucket(n_real)
@@ -247,9 +257,24 @@ class PrefillRunner:
                 "prefill", request=r.req_id, dur_s=dt,
                 bucket=str(pbucket), tier=tier, rows=r.prompts.shape[0],
             )
+        lg_last = logits[:, -1]
+        if eng._injector is not None:  # host-side prefill.logits fault sites
+            i0 = 0
+            for r in reqs:
+                b = r.prompts.shape[0]
+                v = eng._injector.activation("prefill.logits", r.req_id)
+                if v is not None:
+                    lg_last = lg_last.at[i0 : i0 + b].add(v)
+                i0 += b
+        # per-row finiteness feeds the numeric-fault quarantine: a NaN/Inf
+        # row (activation saturation at an aggressive tier) fails only its
+        # own request at admission.  Computed on the already-synced logits,
+        # sliced to real rows — batch-slack rows are garbage by design.
+        ok_rows = np.asarray(jnp.isfinite(lg_last).all(axis=-1))[:n_real]
         return PrefillResult(
-            cache=cache, logits_last=logits[:, -1], pad_lens=pad_lens,
+            cache=cache, logits_last=lg_last, pad_lens=pad_lens,
             pads=real_pads, n_real=n_real, bb=bb, L=L, masked=masked,
+            ok_rows=ok_rows,
         )
 
 
@@ -404,7 +429,20 @@ class DecodeRunner:
             row_of[id(r)] = base
             base += r.prompts.shape[0]
 
-        slot_reqs = [r for r in take if r.n_steps > 1]
+        # numeric quarantine at admission: a request whose prefill logits
+        # came back non-finite never reaches a decode slot — it fails (or
+        # re-queues at the retry tier) here, co-prefilled requests continue
+        bad_ids: set[int] = set()
+        if not pre.ok_rows.all():
+            for r in take:
+                i0 = row_of[id(r)]
+                if not pre.ok_rows[i0 : i0 + r.prompts.shape[0]].all():
+                    bad_ids.add(id(r))
+                    eng._numeric_fault(r, phase="prefill")
+
+        slot_reqs = [
+            r for r in take if r.n_steps > 1 and id(r) not in bad_ids
+        ]
         if slot_reqs:
             need = sum(r.prompts.shape[0] for r in slot_reqs)
             if not self.width:
@@ -445,7 +483,7 @@ class DecodeRunner:
 
         # single-token requests complete at prefill, never occupy a slot
         for r in take:
-            if r.n_steps == 1:
+            if r.n_steps == 1 and id(r) not in bad_ids:
                 b = r.prompts.shape[0]
                 ids = tok0[row_of[id(r)] : row_of[id(r)] + b][:, None]
                 r._deliver(ids[0] if r.squeeze else ids)
@@ -495,20 +533,36 @@ class DecodeRunner:
         n = min(max_steps, max(a.remaining for a in self.active))
         if n <= 0:
             return 0
+        inj = eng._injector
+        if inj is not None:
+            inj.sleep("decode")
         params = eng.tier_params(self.tier)
         sampled = bool((~self.greedy).any())
         bucket = DecodeBucket(self.width, self.tier)
-        step = eng._slot_decode_fn(bucket, sampled)
+        step = eng._slot_decode_fn(bucket, sampled, faulty=inj is not None)
         tok = jnp.asarray(self.tok)
         keys = jnp.asarray(self.keys)
         pad = jnp.asarray(self.pads)
         grd = jnp.asarray(self.greedy)
         burst_tokens = sum(min(n, a.remaining) * len(a.rows) for a in self.active)
 
+        # per-row, per-step finiteness stays on device across the burst
+        # and is read once after the sync — the quarantine signal costs no
+        # extra host round-trip and nothing at all on fault-free graphs
+        ok_log = []
         t0 = time.perf_counter()
         with obs_trace.span("decode_burst", emit_event=False, bucket=str(bucket)):
-            for _ in range(n):
-                tok, self.cache, keys = step(params, tok, self.cache, pad, keys, grd)
+            for i in range(n):
+                if inj is not None:
+                    vec = self._inject_vector(inj, i)
+                    tok, self.cache, keys, oks = step(
+                        params, tok, self.cache, pad, keys, grd, vec
+                    )
+                else:
+                    tok, self.cache, keys, oks = step(
+                        params, tok, self.cache, pad, keys, grd
+                    )
+                ok_log.append(oks)
                 self.step_log.append(tok)
             tok.block_until_ready()
         dt = time.perf_counter() - t0
@@ -532,6 +586,19 @@ class DecodeRunner:
         self.keys = np.array(keys)
         self.global_step += n
         self.clock += n
+        # quarantine before completion: a request whose rows went
+        # non-finite must fail (or re-queue at the retry tier), never
+        # deliver garbage tokens.  Rows are independent in decode, so the
+        # survivors' tokens are bit-exact regardless.
+        # each request is judged only on the burst steps it actually
+        # consumed (min(n, remaining)): a row that finished mid-burst
+        # keeps stepping as filler and its later logits don't count
+        okm = np.asarray(jnp.stack(ok_log, axis=0))  # [n, width]
+        for a in list(self.active):
+            used = min(n, a.remaining)
+            if not okm[:used, np.asarray(a.rows)].all():
+                self._release(a)
+                eng._numeric_fault(a.req, phase="decode")
         for a in list(self.active):
             a.remaining -= n
             if a.remaining <= 0:
@@ -540,6 +607,19 @@ class DecodeRunner:
         if not self.active:
             self._reset_idle()
         return n
+
+    def _inject_vector(self, inj, burst_i: int) -> jnp.ndarray:
+        """[width] additive fault vector for one burst step: 0.0 for
+        untargeted rows (``x + 0.0`` keeps survivor tokens bit-exact),
+        NaN/Inf on the rows of a request whose ``decode.logits`` spec
+        fires at its request-relative decode step."""
+        vec = np.zeros((self.width,), np.float32)
+        for a in self.active:
+            rel = (a.req.n_steps - 1 - a.remaining) + burst_i
+            v = inj.activation("decode.logits", a.req.req_id, step=rel)
+            if v is not None:
+                vec[np.asarray(a.rows)] = v
+        return jnp.asarray(vec)
 
     def _complete(self, a: _Active) -> None:
         r = a.req
@@ -742,6 +822,17 @@ class Scheduler:
             runner = self.runner(r.tier)
             if not force and not self._due(wave, runner, now):
                 continue
+            if self.eng._injector is not None:
+                # injected slot-alloc failures: the doomed request fails
+                # at admission, the rest of the wave is served normally
+                for q in [q for q in wave if self.eng._injector.alloc_fails(q.req_id)]:
+                    q._fail(faults_mod.InjectedFault(
+                        "injected decode-slot allocation failure at admission"
+                    ))
+                    self._pending.remove(q)
+                    wave.remove(q)
+                if not wave:
+                    continue
             taken = runner.admit(wave, r.L)
             admitted += len(taken)
             for q in taken:
@@ -849,6 +940,12 @@ class Engine:
         donate_cache: bool = True,
         mode: str = "auto",
         decode_steps_per_poll: int = 8,
+        max_pending: Optional[int] = None,
+        max_queued_tokens: Optional[int] = None,
+        admission: str = "reject",
+        degrade: Optional[batching.DegradeConfig | bool] = None,
+        numeric_retry_tier: Optional[str] = None,
+        faults: Optional[faults_mod.FaultPlan | str] = None,
     ):
         if attn_impl is not None and attn_impl not in ("flash", "two_stage", "vanilla"):
             raise ValueError(
@@ -911,6 +1008,28 @@ class Engine:
         self._prefill = PrefillRunner(self)
         self._sched = Scheduler(self)
         self._queue = batching.MicroBatchQueue(self._run, self.max_batch, max_wait_s)
+        # robustness layer (docs/robustness.md): bounded admission,
+        # degradation ladder, numeric-fault retry, chaos injection
+        self._admission = batching.AdmissionController(
+            max_pending=max_pending, max_queued_tokens=max_queued_tokens,
+            policy=admission,
+        )
+        self._degrade = (
+            batching.DegradationController(
+                None if degrade is True else degrade, len(self.tiers)
+            )
+            if degrade
+            else None
+        )
+        if numeric_retry_tier is not None and numeric_retry_tier not in self.tiers:
+            raise ValueError(
+                f"numeric_retry_tier {numeric_retry_tier!r} not in tiers "
+                f"{sorted(self.tiers)}"
+            )
+        self.numeric_retry_tier = numeric_retry_tier
+        self._injector = (
+            faults_mod.FaultInjector(faults) if faults is not None else None
+        )
 
     def _continuous_ok(self) -> bool:
         if self.cfg.embed_inputs:
@@ -939,9 +1058,33 @@ class Engine:
         return self._tierset.resolve(tier)
 
     def _resolve_tier(self, tier: Optional[str], deadline_s: Optional[float]) -> str:
+        pinned = tier is not None and tier != "auto"
         if tier == "auto" and "auto" not in self.tiers:
-            return self._autoselect_tier(deadline_s)
-        return self._tier(tier)
+            t = self._autoselect_tier(deadline_s)
+        else:
+            t = self._tier(tier)
+        # degradation ladder: under sustained pressure, *unpinned*
+        # admissions downshift toward later-declared (cheaper) tiers;
+        # explicitly requested tiers are honored as declared
+        if not pinned and self._degrade is not None and self._degrade.level > 0:
+            names = list(self.tiers)
+            base = names.index(t)
+            down = min(base + self._degrade.level, len(names) - 1)
+            if down != base:
+                self.stats.scheduler.degraded_admissions += 1
+                t = names[down]
+        return t
+
+    def _measured_latency(self) -> Optional[float]:
+        try:
+            return self.stats.mean_item_latency_s()
+        except ValueError:
+            return None  # no served traffic yet — no latency pressure
+
+    @property
+    def degradation_level(self) -> int:
+        """Current degradation-ladder level (0 = no downshift)."""
+        return self._degrade.level if self._degrade is not None else 0
 
     def _autoselect_tier(self, deadline_s: Optional[float]) -> str:
         """SLA-aware tier choice: the first *declared* tier (declaration
@@ -1039,35 +1182,54 @@ class Engine:
             **dargs,
         )
 
-    def _slot_decode_fn(self, bucket: DecodeBucket, sampled: bool):
+    def _slot_decode_fn(self, bucket: DecodeBucket, sampled: bool, faulty: bool = False):
         """One continuous decode step: model step + next-token selection
         fused into a single graph so a burst of N steps is N dispatches
         with no host sync.  Two variants per (width, tier) — greedy-only
         and sampled (per-slot key streams) — both compiled at most once;
         everything else about admission runs eagerly, so warm traffic
-        never recompiles."""
-        key = ("slot", bucket, sampled, self._schedule_hash)
+        never recompiles.
+
+        Every variant also returns per-row finiteness of the step's
+        logits (the numeric-quarantine signal).  ``faulty`` compiles the
+        chaos variant taking an additive [width] inject vector (0.0 =
+        exact no-op per row) — only engines armed with a fault plan ever
+        request it, so fault-free serving compiles the same graphs as
+        before."""
+        key = ("slot", bucket, sampled, faulty, self._schedule_hash)
         fn = self._fns.get(key)
         if fn is None:
             self.stats.bucket(bucket).compiles += 1
             rolling = self.pad_prompts
 
-            def body(p, tok, cache, pad, keys, greedy):
+            def body(p, tok, cache, pad, keys, greedy, inject=None):
                 logits, cache = lm.decode_step(
                     self.cfg, p, tok, cache,
                     pad_lens=pad if rolling else None,
                 )
                 lg = logits[:, 0]
+                if inject is not None:
+                    lg = lg + inject[:, None]
+                ok = jnp.isfinite(lg).all(axis=-1)
                 nxt = jnp.argmax(lg, axis=-1).astype(jnp.int32)
                 if sampled:
                     pair = jax.vmap(lambda k: jax.random.split(k, 2))(keys)
                     st = jax.vmap(jax.random.categorical)(pair[:, 1], lg)
                     nxt = jnp.where(greedy, nxt, st.astype(jnp.int32))
                     keys = pair[:, 0]
-                return nxt, cache, keys
+                return nxt, cache, keys, ok
 
             dargs = dict(donate_argnums=(2,)) if self.donate_cache else {}
-            fn = self._fns[key] = jax.jit(body, **dargs)
+            if faulty:
+                fn = jax.jit(body, **dargs)
+            else:
+                fn = jax.jit(
+                    lambda p, tok, cache, pad, keys, greedy: body(
+                        p, tok, cache, pad, keys, greedy
+                    ),
+                    **dargs,
+                )
+            self._fns[key] = fn
         return fn
 
     # ---- request path ----------------------------------------------------
@@ -1090,7 +1252,14 @@ class Engine:
         ``key`` enables per-request sampling (greedy when None).
         ``tier`` selects the precision tier ("auto" + ``deadline_s``
         autoselects by measured latency); requests only coalesce within
-        their tier."""
+        their tier.
+
+        With admission bounds configured (``max_pending`` /
+        ``max_queued_tokens``) an over-full queue raises
+        :class:`~repro.serving.batching.QueueFull` (policy "reject") or
+        sheds the least-valuable queued requests (policy "shed")."""
+        if self._degrade is not None:
+            self._degrade.observe(self.pending, self._measured_latency())
         tier = self._resolve_tier(tier, deadline_s)
         prompts = jnp.asarray(prompts)
         squeeze = prompts.ndim == 1
@@ -1111,6 +1280,23 @@ class Engine:
             L=L, greedy=key is None, key=key,
             priority=priority, deadline_s=deadline_s,
         )
+        if self._admission.bounded:
+            try:
+                victims = self._admission.check(
+                    req, self._pending_list(), self._req_tokens,
+                    self.stats.scheduler,
+                )
+            except QueueFull:
+                obs_trace.emit("rejected", request=req.req_id, kind="lm", tier=tier)
+                raise
+            for v in victims:
+                self._drop_pending(v)
+                v._fail(QueueFull(
+                    "request shed from the pending queue to admit "
+                    "higher-priority traffic under overload"
+                ))
+        if self._injector is not None:
+            self._injector.on_enqueue(req)
         obs_trace.emit(
             "enqueue", request=req.req_id, kind="lm", tier=tier,
             prompt_len=L, rows=prompts.shape[0], n_steps=n_steps,
@@ -1138,11 +1324,65 @@ class Engine:
         """Decode-slot rows currently mid-generation (continuous mode)."""
         return self._sched.active_rows if self.continuous else 0
 
+    def _pending_list(self) -> list[LMRequest]:
+        if self.continuous:
+            return list(self._sched._pending)
+        return [r for q in self._queue._queues.values() for r, _ in q]
+
+    @staticmethod
+    def _req_tokens(r: LMRequest) -> int:
+        """Queued work size for ``max_queued_tokens``: prompt-bucket plus
+        generation tokens across the request's rows."""
+        return r.prompts.shape[0] * (r.L + r.n_steps)
+
+    def _drop_pending(self, r: LMRequest) -> None:
+        if self.continuous:
+            self._sched._pending.remove(r)
+        else:
+            self._queue.remove(r)
+
+    def _numeric_fault(self, req: LMRequest, phase: str) -> None:
+        """Quarantine one request whose activations went non-finite: one
+        bounded retry at ``numeric_retry_tier`` (continuous mode, higher
+        precision should clear a saturation blow-up), else fail with
+        :class:`NumericFault`.  The caller has already released any
+        decode slots the request held."""
+        sched = self.stats.scheduler
+        sched.numeric_faults += 1
+        obs_trace.emit(
+            "numeric_fault", request=req.req_id, tier=req.tier, stage=phase,
+        )
+        retry = self.numeric_retry_tier
+        if (
+            self.continuous
+            and retry is not None
+            and retry != req.tier
+            and req.retries < 1
+        ):
+            req.retries += 1
+            req.tier = retry
+            sched.numeric_retries += 1
+            obs_trace.emit("numeric_retry", request=req.req_id, tier=retry)
+            # append directly: the scheduler's admission pass (or drain)
+            # picks the request up on its next turn at the retry tier
+            self._sched._pending.append(req)
+            return
+        req._fail(NumericFault(
+            f"request produced non-finite activations during {phase} at "
+            f"tier {req.tier!r} and was quarantined (co-batched requests "
+            f"are unaffected)"
+        ))
+
     def poll(self) -> int:
         """One scheduling turn.  Continuous: evict expired requests,
         admit due waves into the running batch, run a bounded decode
         burst; returns requests admitted.  Bucket: flush groups past the
         coalescing deadline; returns groups flushed."""
+        if self._injector is not None:
+            self._injector.crash("poll")
+            self._injector.sleep("poll")
+        if self._degrade is not None:
+            self._degrade.observe(self.pending, self._measured_latency())
         if self.continuous:
             return self._sched.poll()
         self._queue.evict_expired(stats=self.stats.scheduler)
@@ -1187,7 +1427,10 @@ class Engine:
         self._check_fits(prompts.shape[1], L, n_steps)
         if not self.continuous:
             req = LMRequest(prompts=prompts, n_steps=n_steps, tier=tier)
-            return self._execute(L, [req], greedy=greedy, key=key, tier=tier)
+            self._execute(L, [req], greedy=greedy, key=key, tier=tier)
+            # through result(): a numeric-quarantined request must raise
+            # NumericFault here, not hand back garbage tokens
+            return np.asarray(req.result())
         req = LMRequest(
             prompts=prompts, n_steps=n_steps, tier=tier, L=L,
             greedy=greedy, key=None if greedy else key,
@@ -1225,6 +1468,11 @@ class Engine:
         n_steps = max(r.n_steps for r in reqs)
         bb, masked, pad_lens = pre.bb, pre.masked, pre.pad_lens
         cache = pre.cache
+        row0 = {}
+        base = 0
+        for r in reqs:
+            row0[id(r)] = base
+            base += r.prompts.shape[0]
 
         lg = pre.logits_last
         if greedy:
@@ -1233,17 +1481,27 @@ class Engine:
             key, sub = jax.random.split(key)
             tok = jax.random.categorical(sub, lg).astype(jnp.int32)
         out = [tok]
+        ok_steps = []  # per decode step: [bb] finiteness, read after sync
         if n_steps > 1:
             dbucket = DecodeBucket(bb, tier)
             dfn = self._decode_fn(dbucket, masked)
             t0 = time.perf_counter()
             with obs_trace.span("decode_burst", emit_event=False, bucket=str(dbucket)):
-                for _ in range(n_steps - 1):
+                for step_i in range(n_steps - 1):
                     if masked:
                         logits, cache = dfn(params, tok, cache, pad_lens)
                     else:
                         logits, cache = dfn(params, tok, cache)
                     lg = logits[:, 0]
+                    if self._injector is not None:
+                        for r in reqs:
+                            v = self._injector.activation(
+                                "decode.logits", r.req_id, step=step_i
+                            )
+                            if v is not None:
+                                i0 = row0[id(r)]
+                                lg = lg.at[i0 : i0 + r.prompts.shape[0]].add(v)
+                    ok_steps.append(jnp.isfinite(lg).all(axis=-1))
                     if greedy:
                         tok = jnp.argmax(lg, axis=-1).astype(jnp.int32)
                     else:
@@ -1271,11 +1529,26 @@ class Engine:
             res.block_until_ready()
 
         arr = np.asarray(res)
+        # [n_steps-1, bb] — each request is judged only on its own decode
+        # steps (group members share L but may differ in n_steps)
+        okm = (
+            np.asarray(jnp.stack(ok_steps, axis=0))
+            if ok_steps else np.ones((0, bb), bool)
+        )
         i0 = 0
         for r in reqs:
             b = r.prompts.shape[0]
-            ids = arr[i0 : i0 + b, : r.n_steps]
-            r._deliver(ids[0] if r.squeeze else ids)
+            ok_pre = bool(pre.ok_rows[i0 : i0 + b].all())
+            ok_dec = bool(okm[: r.n_steps - 1, i0 : i0 + b].all())
+            if not (ok_pre and ok_dec):
+                # numeric quarantine (bucket mode has no retry path):
+                # only this request fails, co-batched rows deliver
+                self._numeric_fault(
+                    r, phase="decode" if ok_pre else "prefill"
+                )
+            else:
+                ids = arr[i0 : i0 + b, : r.n_steps]
+                r._deliver(ids[0] if r.squeeze else ids)
             i0 += b
         return arr[: pre.n_real]
 

@@ -32,7 +32,9 @@ endpoints (``docs/observability.md``):
   queue-depth gauges;
 * ``GET /trace``   — the recent span-event ring buffer as JSON
   (``?request=r42`` filters one chain, ``?n=100`` bounds the tail);
-* ``GET /healthz`` — liveness.
+* ``GET /healthz`` — liveness: ``ok`` / ``degraded`` (loop striking
+  out, or the engine's degradation ladder is active) / ``unhealthy``
+  (503; the loop failed permanently — see ``max_loop_failures``).
 
 ``metrics_port=0`` binds an ephemeral port (see ``metrics_address``).
 Starting with a metrics port turns live telemetry on process-wide
@@ -50,7 +52,7 @@ from typing import Any, Optional
 from repro import obs
 from repro.obs import metrics as obs_metrics
 from repro.obs import trace as obs_trace
-from repro.serving.batching import PendingRequest, ServingEngine
+from repro.serving.batching import PendingRequest, ServerStopped, ServingEngine
 
 __all__ = ["AsyncServer"]
 
@@ -64,6 +66,7 @@ class _ObsHandler(http.server.BaseHTTPRequestHandler):
     def do_GET(self) -> None:
         srv: "AsyncServer" = self.server.async_server  # type: ignore[attr-defined]
         url = urllib.parse.urlsplit(self.path)
+        code = 200
         try:
             if url.path == "/metrics":
                 body = srv._render_metrics().encode()
@@ -78,14 +81,15 @@ class _ObsHandler(http.server.BaseHTTPRequestHandler):
                 body = json.dumps(srv._render_trace(n, request), indent=2).encode()
                 ctype = "application/json"
             elif url.path == "/healthz":
-                body, ctype = b"ok\n", "text/plain"
+                code, status = srv.health()
+                body, ctype = (status + "\n").encode(), "text/plain"
             else:
                 self.send_error(404, "unknown path (try /metrics /stats /trace)")
                 return
         except Exception as e:  # surface render bugs to the scraper, not a hang
             self.send_error(500, f"{type(e).__name__}: {e}")
             return
-        self.send_response(200)
+        self.send_response(code)
         self.send_header("Content-Type", ctype)
         self.send_header("Content-Length", str(len(body)))
         self.end_headers()
@@ -105,6 +109,7 @@ class AsyncServer:
         metrics_port: Optional[int] = None,
         metrics_host: str = "127.0.0.1",
         registry: Optional[obs_metrics.Registry] = None,
+        max_loop_failures: int = 8,
     ):
         missing = [
             m for m in ("enqueue", "poll", "flush", "abort")
@@ -128,6 +133,13 @@ class AsyncServer:
             wait = getattr(engine, "max_wait_s", 0.004)
             poll_interval_s = min(max(wait / 4, 0.001), 0.05)
         self.poll_interval_s = poll_interval_s
+        # fail-fast accounting for the poll loop (docs/robustness.md):
+        # K consecutive poll failures escalate to abort() + unhealthy
+        self.max_loop_failures = max_loop_failures
+        self.loop_failures = 0  # total across the server's lifetime
+        self.consecutive_failures = 0
+        self.last_error: Optional[BaseException] = None
+        self._failed = False
         self._lock = threading.Lock()
         self._stop = threading.Event()
         self._thread: threading.Thread | None = None
@@ -187,10 +199,10 @@ class AsyncServer:
                         # flush() stops at the first error, so fail every
                         # still-queued request (their waiters wake with an
                         # error, not a full timeout), then propagate
-                        self.engine.abort(RuntimeError("server drain failed"))
+                        self.engine.abort(ServerStopped("server drain failed"))
                         raise
                 else:
-                    self.engine.abort(RuntimeError("server stopped before drain"))
+                    self.engine.abort(ServerStopped("server stopped before drain"))
         finally:
             # a failing drain flush (micro-batch error re-raised after
             # _fail-ing its owners) must still shut the loop down
@@ -220,7 +232,14 @@ class AsyncServer:
     def submit(self, *args, **kwargs) -> PendingRequest:
         """Thread-safe ``engine.enqueue(...)``; returns the pending
         request with a waiter attached (an auto-flush may already have
-        delivered it)."""
+        delivered it).  Raises :class:`ServerStopped` once the poll loop
+        has failed permanently (``max_loop_failures`` strikes)."""
+        if self._failed:
+            raise ServerStopped(
+                f"server loop failed permanently after "
+                f"{self.max_loop_failures} consecutive poll failures "
+                f"(last error: {self.last_error!r})"
+            )
         with self._lock:
             req = self.engine.enqueue(*args, **kwargs)
             if not req.ready:
@@ -276,7 +295,39 @@ class AsyncServer:
             return []
         return [ev.to_dict() for ev in tr.recent(n=n, request=request)]
 
+    # ---- health ----------------------------------------------------------
+
+    def health(self) -> tuple[int, str]:
+        """(http_code, status) for ``/healthz``: ``(200, "ok")``,
+        ``(200, "degraded")`` while the poll loop is striking out or the
+        engine's degradation ladder is active, ``(503, "unhealthy")``
+        once the loop has failed permanently."""
+        if self._failed:
+            return 503, "unhealthy"
+        if (
+            self.consecutive_failures > 0
+            or getattr(self.engine, "degradation_level", 0) > 0
+        ):
+            return 200, "degraded"
+        return 200, "ok"
+
     # ---- loop ------------------------------------------------------------
+
+    def _record_loop_failure(self, e: Exception) -> bool:
+        """Count one poll failure; returns True when the loop must stop
+        (K consecutive strikes — fail fast, don't loop silently)."""
+        self.loop_failures += 1
+        self.consecutive_failures += 1
+        self.last_error = e
+        self.registry.counter(
+            "serve_loop_failures_total",
+            "poll-loop failures survived by the async server", ("error",),
+        ).inc(error=type(e).__name__)
+        obs_trace.emit(
+            "loop_failure", error=type(e).__name__,
+            consecutive=self.consecutive_failures,
+        )
+        return self.consecutive_failures >= self.max_loop_failures
 
     def _loop(self, stop: threading.Event) -> None:
         while not stop.is_set():
@@ -289,9 +340,23 @@ class AsyncServer:
                     # between bursts would serialize decode on the poll
                     # interval and collapse tokens/s
                     busy = busy or getattr(self.engine, "active", 0) > 0
-            except Exception:
-                # flush_group already _fail-ed every owner of the broken
-                # micro-batch; the loop must survive to keep serving the
-                # other groups' deadlines
-                pass
+                self.consecutive_failures = 0
+            except Exception as e:
+                # flush_group already _fail-ed every owner of a broken
+                # micro-batch; the loop survives to keep serving the other
+                # groups' deadlines — but every failure is recorded, and K
+                # consecutive strikes escalate instead of spinning forever
+                if self._record_loop_failure(e):
+                    self._failed = True
+                    err = ServerStopped(
+                        f"server poll loop aborted after "
+                        f"{self.consecutive_failures} consecutive failures "
+                        f"(last error: {e!r})"
+                    )
+                    try:
+                        with self._lock:
+                            self.engine.abort(err)
+                    except Exception:
+                        pass  # abort is best-effort on the way down
+                    break
             stop.wait(0.0 if busy else self.poll_interval_s)

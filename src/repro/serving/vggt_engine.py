@@ -39,14 +39,17 @@ from typing import Any, Optional
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.configs.base import ModelConfig
 from repro.core.model_quant import quantize_vggt
 from repro.core.versaq import QuantPolicy
 from repro.models import vggt as vggt_mod
 from repro.obs import trace as obs_trace
-from repro.serving import batching
-from repro.serving.batching import BucketStats, next_pow2, pick_bucket
+from repro.serving import batching, faults as faults_mod
+from repro.serving.batching import (
+    BucketStats, NumericFault, QueueFull, next_pow2, pick_bucket,
+)
 
 __all__ = ["Bucket", "BucketStats", "VGGTServeStats", "PendingRequest", "VGGTEngine"]
 
@@ -121,6 +124,11 @@ class VGGTEngine:
         max_batch: Optional[int] = None,
         max_wait_s: float = 0.005,
         pad_patches: bool = False,
+        max_pending: Optional[int] = None,
+        max_queued_tokens: Optional[int] = None,
+        admission: str = "reject",
+        degrade: Optional[batching.DegradeConfig | bool] = None,
+        faults: Optional[faults_mod.FaultPlan | str] = None,
     ):
         if attn_impl is not None and attn_impl not in ("flash", "two_stage", "vanilla"):
             raise ValueError(
@@ -159,6 +167,21 @@ class VGGTEngine:
         self._fns: dict[tuple, Any] = {}
         # micro-batch queues, one per (frames, bucketed patches) group
         self._queue = batching.MicroBatchQueue(self._run, self.max_batch, max_wait_s)
+        # robustness layer (docs/robustness.md): bounded admission,
+        # degradation ladder, and the chaos injector — all off by default
+        self._admission = batching.AdmissionController(
+            max_pending=max_pending, max_queued_tokens=max_queued_tokens,
+            policy=admission,
+        )
+        self._degrade = (
+            batching.DegradationController(
+                None if degrade is True else degrade, len(self.tiers)
+            )
+            if degrade else None
+        )
+        self._injector = (
+            faults_mod.FaultInjector(faults) if faults is not None else None
+        )
 
     # ---- tiers -----------------------------------------------------------
 
@@ -232,8 +255,23 @@ class VGGTEngine:
         Higher ``priority`` requests are packed into a flushing
         micro-batch first; a request older than ``deadline_s`` seconds is
         evicted (its ``result()`` raises ``DeadlineExceeded``) instead of
-        being served late."""
+        being served late.
+
+        With admission bounds configured (``max_pending`` /
+        ``max_queued_tokens``) an over-full queue raises
+        :class:`~repro.serving.batching.QueueFull` (policy "reject") or
+        sheds the least-valuable queued requests (policy "shed")."""
+        if self._degrade is not None:
+            self._degrade.observe(self._queue.pending, self._measured_latency())
+        pinned = tier is not None
         tier = self._tier(tier)
+        if self._degrade is not None and self._degrade.level and not pinned:
+            names = list(self.tiers)
+            base = names.index(tier)
+            down = min(base + self._degrade.level, len(names) - 1)
+            if down != base:
+                tier = names[down]
+                self.stats.scheduler.degraded_admissions += 1
         scenes = jnp.asarray(scenes)
         if scenes.ndim != 4:
             raise ValueError(f"scenes must be [b, S, P, d], got {scenes.shape}")
@@ -242,6 +280,23 @@ class VGGTEngine:
             scenes=scenes, n_patches=p_, tier=tier,
             priority=priority, deadline_s=deadline_s,
         )
+        if self._admission.bounded:
+            try:
+                victims = self._admission.check(
+                    req, self._pending_list(), self._req_tokens,
+                    self.stats.scheduler,
+                )
+            except QueueFull:
+                obs_trace.emit("rejected", request=req.req_id, kind="vggt", tier=tier)
+                raise
+            for v in victims:
+                self._queue.remove(v)
+                v._fail(QueueFull(
+                    "request shed from the pending queue to admit "
+                    "higher-priority traffic under overload"
+                ))
+        if self._injector is not None:
+            self._injector.on_enqueue(req)
         obs_trace.emit(
             "enqueue", request=req.req_id, kind="vggt", tier=tier,
             scenes=b, frames=scenes.shape[1], patches=p_, priority=priority,
@@ -249,10 +304,53 @@ class VGGTEngine:
         self._queue.add(self._group_key(scenes, tier), req, b)
         return req
 
+    @property
+    def pending(self) -> int:
+        """Scene requests waiting in the micro-batch queues."""
+        return self._queue.pending
+
+    @property
+    def degradation_level(self) -> int:
+        """Current ladder level (0 = serving at declared tiers)."""
+        return self._degrade.level if self._degrade is not None else 0
+
+    def _pending_list(self) -> list[PendingRequest]:
+        return [r for q in self._queue._queues.values() for r, _ in q]
+
+    @staticmethod
+    def _req_tokens(r: PendingRequest) -> int:
+        """Queued work size for ``max_queued_tokens``: patch tokens
+        across the request's scenes and frames."""
+        return r.scenes.shape[0] * r.scenes.shape[1] * r.n_patches
+
+    def _measured_latency(self) -> Optional[float]:
+        try:
+            return self.stats.mean_item_latency_s()
+        except ValueError:  # no traffic yet — no latency pressure
+            return None
+
+    def _numeric_fault(self, req: PendingRequest) -> None:
+        """Quarantine one scene request whose forward outputs went
+        non-finite: only this request fails, co-batched scenes deliver."""
+        self.stats.scheduler.numeric_faults += 1
+        obs_trace.emit(
+            "numeric_fault", request=req.req_id, tier=req.tier, stage="forward",
+        )
+        req._fail(NumericFault(
+            f"scene request produced non-finite reconstruction outputs at "
+            f"tier {req.tier!r} and was quarantined (co-batched scenes "
+            f"are unaffected)"
+        ))
+
     def poll(self) -> int:
         """Evict requests past their deadline, then flush groups whose
         oldest request has waited past ``max_wait_s``.  Returns the
         number of groups flushed."""
+        if self._injector is not None:
+            self._injector.crash("poll")
+            self._injector.sleep("poll")
+        if self._degrade is not None:
+            self._degrade.observe(self._queue.pending, self._measured_latency())
         self._queue.evict_expired(stats=self.stats.scheduler)
         return self._queue.poll()
 
@@ -285,9 +383,16 @@ class VGGTEngine:
         # mask-free graph is cheaper and keeps the quantized two_stage
         # kernel fast path live (it requires kv_mask=None)
         masked = any(r.n_patches < bucket.patches for r in reqs)
+        inj = self._injector
+        if inj is not None:
+            inj.sleep("prefill")  # the forward is VGGT's prefill stage
         parts, mask_parts = [], []
         for r in reqs:
             x = r.scenes
+            if inj is not None:
+                v = inj.activation("scene", r.req_id)
+                if v is not None:  # poison one input element of this scene
+                    x = x.at[0, 0, 0, 0].add(v)
             if x.shape[2] < bucket.patches:  # pad patch dim (masked)
                 pad = bucket.patches - x.shape[2]
                 x = jnp.pad(x, ((0, 0), (0, 0), (0, pad), (0, 0)))
@@ -324,11 +429,30 @@ class VGGTEngine:
                 tier=tier, scenes=r.scenes.shape[0],
             )
 
-        i0 = 0
-        ns = self.cfg.n_special_tokens
+        # per-request finiteness over the real (unpadded) reconstruction
+        # outputs, reduced on device and read in one host transfer — a
+        # non-finite scene batch fails only its own request
+        oks, i0 = [], 0
         for r in reqs:
             b = r.scenes.shape[0]
-            r._deliver(_slice_result(out, i0, b, r.n_patches, ns))
+            ok = jnp.array(True)
+            for k in ("pose", "points", "depth", "conf"):
+                a = out[k][i0 : i0 + b]
+                if k != "pose":
+                    a = a[:, :, : r.n_patches]
+                ok = jnp.logical_and(ok, jnp.isfinite(a).all())
+            oks.append(ok)
+            i0 += b
+        okh = np.asarray(jnp.stack(oks))
+
+        i0 = 0
+        ns = self.cfg.n_special_tokens
+        for idx, r in enumerate(reqs):
+            b = r.scenes.shape[0]
+            if okh[idx]:
+                r._deliver(_slice_result(out, i0, b, r.n_patches, ns))
+            else:
+                self._numeric_fault(r)
             i0 += b
 
 

@@ -1,0 +1,465 @@
+"""Chaos suite for the fault-tolerance layer (docs/robustness.md):
+injected NaN/Inf quarantined per request with co-batched survivors
+bit-exact, bounded admission under overload, degradation ladder
+hysteresis, and the async server's strike counter — all driven through
+the deterministic ``serving.faults`` plans.
+"""
+import functools
+import threading
+import time
+import urllib.error
+import urllib.request
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core.versaq import W4A8
+from repro.data.pipeline import scene_batch
+from repro.models import lm, vggt
+from repro.obs import metrics as obs_metrics
+from repro.serving import faults
+from repro.serving.batching import (
+    DegradationController,
+    DegradeConfig,
+    NumericFault,
+    QueueFull,
+    ServerStopped,
+)
+from repro.serving.engine import Engine
+from repro.serving.faults import FaultInjector, FaultPlan, FaultSpec, InjectedFault
+from repro.serving.server import AsyncServer
+from repro.serving.vggt_engine import VGGTEngine
+
+KEY = jax.random.PRNGKey(0)
+TINY = dict(d_model=64, n_heads=4, n_kv_heads=2, head_dim=16, d_ff=128, vocab_size=64)
+
+
+@functools.lru_cache(maxsize=1)
+def _lm_fixture():
+    cfg = get_config("qwen3-14b-smoke").with_(**TINY)
+    return cfg, lm.init_params(cfg, KEY)
+
+
+@functools.lru_cache(maxsize=1)
+def _vggt_fixture():
+    cfg = get_config("vggt-1b-smoke").with_(
+        n_layers=1, d_model=64, n_heads=2, n_kv_heads=2, head_dim=32, d_ff=128,
+        layerscale_init=0.2,
+    )
+    return cfg, vggt.init_params(cfg, KEY)
+
+
+def _prompt(cfg, l, seed):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.integers(0, cfg.vocab_size, (l,)), jnp.int32)
+
+
+# ---------------------------------------------------------------------------
+# fault plan grammar
+# ---------------------------------------------------------------------------
+
+
+def test_plan_parse_format_roundtrip():
+    text = "nan@decode.logits:req=1,step=3;latency@poll:times=2,seconds=0.01;seed=7"
+    plan = FaultPlan.parse(text)
+    assert plan.seed == 7 and len(plan.specs) == 2
+    assert plan.specs[0] == FaultSpec("nan", "decode.logits", req=1, step=3)
+    assert FaultPlan.parse(plan.format()) == plan
+    # defaults fill in: bare kinds get their canonical site
+    assert FaultSpec.parse("crash").site == "poll"
+    assert FaultSpec.parse("inf").site == "decode.logits"
+
+
+def test_plan_parse_rejects_bad_specs():
+    with pytest.raises(ValueError, match="unknown fault kind"):
+        FaultSpec.parse("teleport")
+    with pytest.raises(ValueError, match="bad key/value"):
+        FaultSpec.parse("nan:when=now")
+    with pytest.raises(ValueError, match="expected one of"):
+        FaultSpec.parse("nan@poll")
+    with pytest.raises(ValueError, match="only 'poll'"):
+        FaultSpec.parse("crash@decode")
+    with pytest.raises(ValueError, match="expected 0 < p"):
+        FaultSpec.parse("crash:p=0")
+    with pytest.raises(ValueError, match="declares no faults"):
+        FaultPlan.parse("seed=3")
+
+
+def test_injector_latency_and_seeded_determinism():
+    inj = FaultInjector("latency@poll:seconds=0.001,times=2")
+    assert inj.sleep("poll") == 0.001
+    assert inj.sleep("decode") == 0.0  # wrong site never fires
+    assert inj.sleep("poll") == 0.001
+    assert inj.sleep("poll") == 0.0  # times exhausted
+    assert inj.fired == {"latency": 2}
+    # probabilistic specs replay identically for the same seed
+    plan = "crash@poll:p=0.5,times=0;seed=11"
+    seq = []
+    for injector in (FaultInjector(plan), FaultInjector(plan)):
+        fires = []
+        for _ in range(32):
+            try:
+                injector.crash("poll")
+                fires.append(False)
+            except InjectedFault:
+                fires.append(True)
+        seq.append(fires)
+    assert seq[0] == seq[1] and any(seq[0]) and not all(seq[0])
+
+
+# ---------------------------------------------------------------------------
+# numeric-fault quarantine (LM)
+# ---------------------------------------------------------------------------
+
+
+def test_nan_mid_decode_quarantines_only_target():
+    """ACCEPTANCE: a NaN injected into one request's decode logits
+    mid-burst fails that request with NumericFault while every
+    co-resident slot request completes bit-exact vs a fault-free run."""
+    cfg, params = _lm_fixture()
+    prompts = [_prompt(cfg, 8, s) for s in (0, 1, 2)]
+
+    clean = Engine(cfg, params, max_len=32, max_wait_s=0.0, batch_buckets=(4,))
+    want = [clean.enqueue(p, 6) for p in prompts]
+    clean.flush()
+
+    eng = Engine(cfg, params, max_len=32, max_wait_s=0.0, batch_buckets=(4,),
+                 faults="nan@decode.logits:req=1,step=2")
+    got = [eng.enqueue(p, 6) for p in prompts]
+    eng.poll()  # all three admitted into one slot wave
+    eng.flush()
+
+    with pytest.raises(NumericFault, match="quarantined"):
+        got[1].result()
+    for i in (0, 2):  # survivors: token-bit-exact vs the fault-free engine
+        np.testing.assert_array_equal(got[i].result(), want[i].result())
+    assert eng.stats.scheduler.numeric_faults == 1
+    assert eng.stats.scheduler.numeric_retries == 0
+    assert eng.active == 0  # the quarantined request's slot was released
+
+
+def test_inf_at_prefill_quarantines_before_slot_install():
+    cfg, params = _lm_fixture()
+    eng = Engine(cfg, params, max_len=32, max_wait_s=0.0, batch_buckets=(4,),
+                 faults="inf@prefill.logits:req=0")
+    bad = eng.enqueue(_prompt(cfg, 8, 3), 4)
+    good = eng.enqueue(_prompt(cfg, 8, 4), 4)
+    eng.flush()
+    with pytest.raises(NumericFault, match="prefill"):
+        bad.result()
+    assert good.result().shape == (4,)
+    assert eng.stats.scheduler.numeric_faults == 1
+    assert eng.active == 0
+
+
+def test_numeric_fault_retries_once_at_higher_tier():
+    cfg, params = _lm_fixture()
+    tiers = {"quality": None, "fast": W4A8}
+    eng = Engine(cfg, params, max_len=32, max_wait_s=0.0, tiers=tiers,
+                 default_tier="fast", numeric_retry_tier="quality",
+                 faults="nan@decode.logits:req=0,step=0,times=1")
+    req = eng.enqueue(_prompt(cfg, 8, 5), 4)
+    eng.flush()
+    ids = req.result()  # the one bounded retry recovered the request
+    assert req.tier == "quality" and req.retries == 1
+    assert eng.stats.scheduler.numeric_faults == 1
+    assert eng.stats.scheduler.numeric_retries == 1
+    ref = Engine(cfg, params, max_len=32, mode="bucket", tiers=tiers,
+                 default_tier="fast")
+    np.testing.assert_array_equal(
+        ids, ref.generate(_prompt(cfg, 8, 5)[None, :], 4, tier="quality")[0]
+    )
+
+
+def test_nan_quarantine_bucket_mode():
+    cfg, params = _lm_fixture()
+    clean = Engine(cfg, params, max_len=32, mode="bucket", max_wait_s=0.0)
+    prompts = [_prompt(cfg, 8, s) for s in (6, 7)]
+    want = [clean.enqueue(p, 4) for p in prompts]
+    clean.flush()
+    eng = Engine(cfg, params, max_len=32, mode="bucket", max_wait_s=0.0,
+                 faults="nan@decode.logits:req=0,step=1")
+    got = [eng.enqueue(p, 4) for p in prompts]
+    eng.flush()
+    with pytest.raises(NumericFault, match="decode"):
+        got[0].result()
+    np.testing.assert_array_equal(got[1].result(), want[1].result())
+    assert eng.stats.scheduler.numeric_faults == 1
+
+
+def test_slot_alloc_fault_fails_only_target():
+    cfg, params = _lm_fixture()
+    eng = Engine(cfg, params, max_len=32, max_wait_s=0.0,
+                 faults="slot_alloc:req=0")
+    doomed = eng.enqueue(_prompt(cfg, 8, 8), 4)
+    good = eng.enqueue(_prompt(cfg, 8, 9), 4)
+    eng.flush()
+    with pytest.raises(InjectedFault, match="slot allocation"):
+        doomed.result()
+    assert good.result().shape == (4,)
+
+
+def test_faults_off_has_no_fault_graphs():
+    """With no plan armed the hot path compiles the exact same graphs a
+    fault-free engine always did — no ``faulty`` jit-cache variants."""
+    cfg, params = _lm_fixture()
+    eng = Engine(cfg, params, max_len=32, max_wait_s=0.0)
+    assert eng._injector is None
+    req = eng.enqueue(_prompt(cfg, 8, 10), 4)
+    eng.flush()
+    assert req.result().shape == (4,)
+    slot_keys = [k for k in eng._fns if k[0] == "slot"]
+    assert slot_keys and all(k[3] is False for k in slot_keys)
+
+
+# ---------------------------------------------------------------------------
+# numeric-fault quarantine (VGGT scenes)
+# ---------------------------------------------------------------------------
+
+
+def test_vggt_scene_nan_quarantines_only_target():
+    cfg, params = _vggt_fixture()
+    scenes = [
+        jnp.asarray(scene_batch(1, 2, 24, cfg.d_model, s)["patches"])
+        for s in (0, 1, 2)
+    ]
+    clean = VGGTEngine(cfg, params, max_batch=8, max_wait_s=0.0)
+    want = [clean.enqueue(s) for s in scenes]
+    clean.flush()
+
+    eng = VGGTEngine(cfg, params, max_batch=8, max_wait_s=0.0,
+                     faults="nan@scene:req=1")
+    got = [eng.enqueue(s) for s in scenes]
+    eng.flush()
+    with pytest.raises(NumericFault, match="scene"):
+        got[1].result()
+    for i in (0, 2):  # batch rows are independent: survivors bit-exact
+        for k in ("pose", "points", "depth", "conf"):
+            np.testing.assert_array_equal(
+                got[i].result()[k], want[i].result()[k]
+            )
+    assert eng.stats.scheduler.numeric_faults == 1
+
+
+# ---------------------------------------------------------------------------
+# admission control / backpressure
+# ---------------------------------------------------------------------------
+
+
+def test_admission_reject_bounds_pending_queue():
+    cfg, params = _lm_fixture()
+    eng = Engine(cfg, params, max_len=32, max_wait_s=3600.0, max_pending=2)
+    a = eng.enqueue(_prompt(cfg, 8, 11), 4)
+    b = eng.enqueue(_prompt(cfg, 8, 12), 4)
+    with pytest.raises(QueueFull, match="admission rejected"):
+        eng.enqueue(_prompt(cfg, 8, 13), 4)
+    assert eng.stats.scheduler.rejected == 1
+    assert eng.pending == 2
+    eng.abort()
+    for r in (a, b):
+        with pytest.raises(RuntimeError):
+            r.result()
+
+
+def test_admission_shed_evicts_lowest_priority():
+    cfg, params = _lm_fixture()
+    eng = Engine(cfg, params, max_len=32, max_wait_s=3600.0, max_pending=2,
+                 admission="shed")
+    hi = eng.enqueue(_prompt(cfg, 8, 14), 4, priority=5)
+    lo = eng.enqueue(_prompt(cfg, 8, 15), 4, priority=1)
+    mid = eng.enqueue(_prompt(cfg, 8, 16), 4, priority=3)  # sheds lo
+    with pytest.raises(QueueFull, match="shed"):
+        lo.result()
+    assert eng.stats.scheduler.shed == 1 and eng.pending == 2
+    # an incoming request below everything queued is itself rejected
+    with pytest.raises(QueueFull):
+        eng.enqueue(_prompt(cfg, 8, 17), 4, priority=0)
+    assert eng.stats.scheduler.rejected == 1
+    assert not hi.ready and not mid.ready
+    eng.abort()
+
+
+def test_admission_bounds_queued_tokens():
+    cfg, params = _lm_fixture()
+    probe = Engine(cfg, params, max_len=32, max_wait_s=3600.0)
+    r = probe.enqueue(_prompt(cfg, 8, 18), 4)
+    per_req = Engine._req_tokens(r)
+    probe.abort()
+    eng = Engine(cfg, params, max_len=32, max_wait_s=3600.0,
+                 max_queued_tokens=2 * per_req)
+    eng.enqueue(_prompt(cfg, 8, 18), 4)
+    eng.enqueue(_prompt(cfg, 8, 19), 4)
+    with pytest.raises(QueueFull):
+        eng.enqueue(_prompt(cfg, 8, 20), 4)
+    eng.abort()
+
+
+def test_vggt_admission_reject():
+    cfg, params = _vggt_fixture()
+    eng = VGGTEngine(cfg, params, max_batch=8, max_wait_s=3600.0, max_pending=1)
+    eng.enqueue(jnp.asarray(scene_batch(1, 2, 24, cfg.d_model, 3)["patches"]))
+    with pytest.raises(QueueFull):
+        eng.enqueue(jnp.asarray(scene_batch(1, 2, 24, cfg.d_model, 4)["patches"]))
+    assert eng.stats.scheduler.rejected == 1
+    eng.abort()
+
+
+# ---------------------------------------------------------------------------
+# degradation ladder
+# ---------------------------------------------------------------------------
+
+
+def test_ladder_dwell_and_hysteresis():
+    c = DegradationController(
+        DegradeConfig(queue_high=4, dwell_s=1.0, recover_s=2.0), n_tiers=3
+    )
+    assert c.observe(10, None, now=0.0) == 0  # pressure starts the dwell
+    assert c.observe(10, None, now=0.5) == 0  # dwell not yet met
+    assert c.observe(10, None, now=1.0) == 1  # shift; dwell re-arms
+    assert c.observe(10, None, now=1.5) == 1
+    assert c.observe(10, None, now=2.5) == 2  # second shift
+    assert c.observe(10, None, now=9.0) == 2
+    assert c.observe(10, None, now=99.0) == 2  # capped at n_tiers - 1
+    assert c.observe(3, None, now=100.0) == 2  # between watermarks: hold
+    assert c.observe(0, None, now=101.0) == 2  # relief starts the dwell
+    assert c.observe(0, None, now=102.5) == 2  # recover_s=2 not yet met
+    assert c.observe(0, None, now=103.0) == 1  # recover one level
+    assert c.shifts_down == 2 and c.shifts_up == 1
+    # latency pressure alone (queue empty) also drives the ladder
+    c2 = DegradationController(
+        DegradeConfig(queue_high=99, latency_high_s=0.1, dwell_s=0.0,
+                      recover_s=0.0),
+        n_tiers=2,
+    )
+    assert c2.observe(0, 0.5, now=0.0) == 1
+    assert c2.observe(0, None, now=1.0) == 0  # no measurement = relief
+
+
+def test_ladder_downshifts_unpinned_admissions_and_recovers():
+    cfg, params = _lm_fixture()
+    eng = Engine(
+        cfg, params, max_len=32, max_wait_s=3600.0,
+        tiers={"quality": None, "fast": W4A8},
+        degrade=DegradeConfig(queue_high=0, dwell_s=0.0, recover_s=0.0),
+    )
+    first = eng.enqueue(_prompt(cfg, 8, 21), 4)  # queue empty: no pressure
+    assert first.tier == "quality" and eng.degradation_level == 0
+    second = eng.enqueue(_prompt(cfg, 8, 22), 4)  # pending=1 > 0: downshift
+    assert eng.degradation_level == 1
+    assert second.tier == "fast"
+    pinned = eng.enqueue(_prompt(cfg, 8, 23), 4, tier="quality")
+    assert pinned.tier == "quality"  # explicit tiers are never downshifted
+    assert eng.stats.scheduler.degraded_admissions == 1
+    eng.abort()
+    eng.poll()  # queue drained: relief recovers the ladder
+    assert eng.degradation_level == 0
+    recovered = eng.enqueue(_prompt(cfg, 8, 24), 4)
+    assert recovered.tier == "quality"
+    eng.abort()
+
+
+# ---------------------------------------------------------------------------
+# server hardening: strike counter, escalation, health
+# ---------------------------------------------------------------------------
+
+
+class _StubEngine:
+    degradation_level = 0
+
+    def enqueue(self, *a, **k):
+        raise NotImplementedError
+
+    def poll(self):
+        return 0
+
+    def flush(self):
+        pass
+
+    def abort(self, err=None):
+        return 0
+
+
+def test_health_states():
+    srv = AsyncServer(_StubEngine(), poll_interval_s=0.001)
+    assert srv.health() == (200, "ok")
+    srv.engine.degradation_level = 1
+    assert srv.health() == (200, "degraded")
+    srv.engine.degradation_level = 0
+    srv.consecutive_failures = 2
+    assert srv.health() == (200, "degraded")
+    srv._failed = True
+    assert srv.health() == (503, "unhealthy")
+
+
+def test_loop_survives_bounded_crashes_and_records_them():
+    cfg, params = _lm_fixture()
+    eng = Engine(cfg, params, max_len=32, max_wait_s=0.0,
+                 faults="crash@poll:times=2")
+    reg = obs_metrics.Registry()
+    srv = AsyncServer(eng, poll_interval_s=0.001, registry=reg)
+    with srv:
+        req = srv.submit(_prompt(cfg, 8, 25), 4)
+        assert srv.result(req, timeout=300).shape == (4,)
+    assert srv.loop_failures == 2
+    assert srv.consecutive_failures == 0  # reset by the recovered poll
+    assert isinstance(srv.last_error, InjectedFault)
+    assert reg.get("serve_loop_failures_total").value(error="InjectedFault") == 2
+
+
+def test_loop_escalates_after_k_strikes():
+    """K consecutive poll failures abort the engine (waiters wake with
+    ServerStopped), mark the server failed, and flip /healthz to 503."""
+    cfg, params = _lm_fixture()
+    eng = Engine(cfg, params, max_len=32, max_wait_s=0.0,
+                 faults="crash@poll:times=0")  # every poll crashes
+    srv = AsyncServer(eng, poll_interval_s=0.001, max_loop_failures=3,
+                      metrics_port=0, registry=obs_metrics.Registry())
+    # submit before start: the loop strikes out within milliseconds
+    req = srv.submit(_prompt(cfg, 8, 26), 4)
+    try:
+        srv.start()
+        deadline = time.monotonic() + 30
+        while srv.running and time.monotonic() < deadline:
+            time.sleep(0.005)
+        assert srv._failed and srv.consecutive_failures >= 3
+        assert srv.health() == (503, "unhealthy")
+        with pytest.raises(ServerStopped, match="consecutive"):
+            srv.result(req, timeout=10)
+        with pytest.raises(ServerStopped, match="permanently"):
+            srv.submit(_prompt(cfg, 8, 27), 4)
+        host, port = srv.metrics_address
+        with pytest.raises(urllib.error.HTTPError) as exc:
+            urllib.request.urlopen(f"http://{host}:{port}/healthz", timeout=30)
+        assert exc.value.code == 503
+        assert exc.value.read().decode() == "unhealthy\n"
+    finally:
+        from repro import obs
+
+        srv.stop(drain=False)
+        obs.disable_all()
+
+
+def test_stop_without_drain_raises_server_stopped_promptly():
+    cfg, params = _lm_fixture()
+    eng = Engine(cfg, params, max_len=32, max_wait_s=3600.0)
+    srv = AsyncServer(eng, poll_interval_s=0.0005).start()
+    req = srv.submit(_prompt(cfg, 8, 28), 4)
+    caught = {}
+
+    def waiter():
+        t0 = time.monotonic()
+        try:
+            srv.result(req, timeout=60)
+        except Exception as e:
+            caught["err"], caught["dt"] = e, time.monotonic() - t0
+
+    t = threading.Thread(target=waiter)
+    t.start()
+    time.sleep(0.05)
+    srv.stop(drain=False)
+    t.join(timeout=10)
+    assert isinstance(caught["err"], ServerStopped)
+    assert caught["dt"] < 30  # prompt wake, not the waiter's full timeout

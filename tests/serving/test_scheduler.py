@@ -167,6 +167,38 @@ def test_recurrent_state_runner_joins_running_batch():
     np.testing.assert_array_equal(rb.result(), ref.generate(pb, 4)[0])
 
 
+def test_abort_mid_decode_releases_slots_for_reuse(cfg, params):
+    """abort()/Scheduler.abort_all mid-decode: active requests fail, their
+    KV slots return to the free list, and the next admission reuses them
+    without recompiling."""
+    # max_batch above the queued rows so Scheduler.add's group auto-flush
+    # never drains synchronously — the requests must stay mid-decode
+    eng = Engine(
+        cfg, params, max_len=64, max_wait_s=0.0, batch_buckets=(2,), max_batch=8
+    )
+    ref = Engine(cfg, params, max_len=64, mode="bucket")
+    pa = _prompts(cfg, 1, 8, 40)
+    pb = _prompts(cfg, 1, 8, 41)
+    ra = eng.enqueue(pa[0], 12)
+    rb = eng.enqueue(pb[0], 12)
+    eng.poll()                             # both admitted, mid-decode
+    assert eng.active == 2 and not ra.ready
+    queued = eng.enqueue(_prompts(cfg, 1, 8, 42)[0], 4)
+    n = eng.abort()
+    assert n == 3                          # 2 active + 1 queued all failed
+    assert eng.active == 0                 # slots back on the free list
+    for r in (ra, rb, queued):
+        # the default abort error is a plain RuntimeError, so result()
+        # wraps it; the abort cause stays attached for diagnostics
+        with pytest.raises(RuntimeError, match="micro-batch failed") as ei:
+            r.result()
+        assert "aborted" in str(ei.value.__cause__)
+    compiles = eng.stats.compiles
+    p2 = _prompts(cfg, 2, 8, 43)
+    np.testing.assert_array_equal(eng.generate(p2, 6), ref.generate(p2, 6))
+    assert eng.stats.compiles == compiles  # freed slots reused warm
+
+
 def test_summary_schema_includes_scheduler(cfg, params):
     eng = Engine(cfg, params, max_len=64)
     eng.generate(_prompts(cfg, 2, 8, 30), 3)
@@ -174,7 +206,8 @@ def test_summary_schema_includes_scheduler(cfg, params):
     assert s["kind"] == "lm" and s["unit"] == "seqs"
     assert set(s["scheduler"]) == {
         "admitted", "admitted_mid_decode", "deadline_evictions",
-        "slot_occupancy",
+        "slot_occupancy", "rejected", "shed", "numeric_faults",
+        "numeric_retries", "degraded_admissions",
     }
     assert s["scheduler"]["admitted"] == 1
     assert s["totals"]["items"] >= 2

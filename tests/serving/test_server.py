@@ -127,7 +127,11 @@ def test_stop_drain_failure_still_stops_loop():
         srv.stop(drain=True)
     assert not srv.running
     assert bad.ready and stranded.ready
-    with pytest.raises(RuntimeError, match="micro-batch failed"):
+    # ServerStopped is the defined semantics for drain-abort casualties
+    # (a ServeError, so result() raises it directly, unwrapped)
+    from repro.serving.batching import ServerStopped
+
+    with pytest.raises(ServerStopped, match="drain failed"):
         stranded.result()
 
 
@@ -165,4 +169,6 @@ def test_stop_without_drain_fails_pending_waiters():
     srv.stop(drain=False)
     t.join(timeout=10)
     assert not t.is_alive()
-    assert isinstance(caught["err"], RuntimeError)
+    from repro.serving.batching import ServerStopped
+
+    assert isinstance(caught["err"], ServerStopped)
